@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks: modmatmul server op (paper's hot loop).
+
+CPU wall-times compare the exact-u32 XLA path against interpret-mode Pallas
+(correctness path).  TPU projections come from the roofline model: the server
+op moves m·n DB bytes and does 8·b int8-ops/byte; at v5e (394 TOPS int8,
+819 GB/s HBM) the crossover is b ≈ 60 queries.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lwe, pir
+from repro.kernels import ops, ref
+
+V5E_INT8_OPS = 394e12
+V5E_HBM = 819e9
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(sizes=((4096, 512), (16384, 1024), (65536, 2048)),
+        batches=(1, 16, 64)) -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, n in sizes:
+        db = jnp.asarray(rng.integers(0, 256, (m, n), dtype=np.uint8))
+        for b in batches:
+            q = jnp.asarray(rng.integers(0, 2**32, (n, b), dtype=np.uint32))
+            xla_fn = jax.jit(lambda d, q: ref.modmatmul_ref(d, q))
+            t_cpu = _time(xla_fn, db, q)
+            ops_int8 = 8.0 * m * n * b           # 4 limbs × 2 (mul+add)
+            tpu_compute = ops_int8 / V5E_INT8_OPS
+            tpu_memory = (m * n) / V5E_HBM
+            rows.append(dict(
+                name=f"modmatmul_m{m}_n{n}_b{b}",
+                us_per_call=t_cpu * 1e6,
+                cpu_gbps=m * n / t_cpu / 1e9,
+                tpu_bound="hbm" if tpu_memory > tpu_compute else "mxu",
+                tpu_us_roofline=max(tpu_compute, tpu_memory) * 1e6,
+                queries_per_s_tpu=b / max(tpu_compute, tpu_memory)))
+    return rows
+
+
+def run_protocol(m=16384, n=1024) -> list[dict]:
+    """End-to-end protocol timings at one size (setup/query/answer/recover).
+    The hint GEMM is a one-time O(m·n·k) cost; m capped so the CPU-exact
+    u32 path stays in benchmark budget (TPU kernel does it at int8 rate)."""
+    rng = np.random.default_rng(1)
+    db = jnp.asarray(rng.integers(0, 256, (m, n), dtype=np.uint8))
+    cfg = pir.make_config(m, n, impl="xla")
+    server = pir.PIRServer(cfg, db)
+    t_hint = _time(lambda: jax.block_until_ready(server.setup()), iters=1)
+    hint = server.setup()
+    client = pir.PIRClient(cfg, hint)
+    qu, state = client.query(jax.random.PRNGKey(0), 3)
+    t_query = _time(lambda: jax.block_until_ready(
+        client.query(jax.random.PRNGKey(0), 3)[0]), iters=3)
+    t_answer = _time(lambda: jax.block_until_ready(server.answer(qu)))
+    ans = server.answer(qu)
+    t_recover = _time(lambda: np.asarray(client.recover(ans, state)),
+                      iters=3)
+    return [
+        dict(name="pir_hint_setup", us_per_call=t_hint * 1e6,
+             derived=f"hint={cfg.hint_bytes / 2**20:.1f}MiB"),
+        dict(name="pir_client_query", us_per_call=t_query * 1e6,
+             derived=f"uplink={cfg.uplink_bytes}B"),
+        dict(name="pir_server_answer", us_per_call=t_answer * 1e6,
+             derived=f"db={m * n / 2**20:.0f}MiB"),
+        dict(name="pir_client_recover", us_per_call=t_recover * 1e6,
+             derived=f"downlink={cfg.downlink_bytes / 2**20:.2f}MiB"),
+    ]

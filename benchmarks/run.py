@@ -1,0 +1,77 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits ``name,us_per_call,derived`` CSV rows plus PASS/FAIL validation of the
+paper's qualitative claims (EXPERIMENTS.md §Paper-validation mirrors this
+output).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (CI-sized)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "bench"))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    results = {}
+
+    from benchmarks import kernel_bench, quality, scalability
+
+    print("name,us_per_call,derived")
+
+    # ---- kernel + protocol micro-benchmarks (paper §3.3 hot loop) ----------
+    kr = kernel_bench.run(sizes=((4096, 512), (16384, 1024))
+                          if args.fast else
+                          ((4096, 512), (16384, 1024), (65536, 2048)))
+    for r in kr:
+        print(f"{r['name']},{r['us_per_call']:.1f},"
+              f"tpu_bound={r['tpu_bound']};qps_tpu={r['queries_per_s_tpu']:.0f}")
+    pr = kernel_bench.run_protocol(m=16384 if args.fast else 65536)
+    for r in pr:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    results["kernel"] = kr + pr
+
+    # ---- Fig 2: scalability -------------------------------------------------
+    sizes = (500, 1000, 2000) if args.fast else (500, 1000, 2000, 4000)
+    rows = scalability.run(sizes=sizes)
+    for r in rows:
+        print(f"fig2_{r['system']}_n{r['n_docs']},"
+              f"{r['query_s'] * 1e6:.0f},"
+              f"setup_s={r['setup_s']:.2f};up={r['uplink']};down={r['downlink']}")
+    checks2 = scalability.validate(rows)
+    results["scalability"] = {"rows": rows, "checks": checks2}
+
+    # ---- Fig 3: quality + RAG-Ready latency ---------------------------------
+    qrows = quality.run(n_docs=1500 if args.fast else 5000,
+                        n_queries=6 if args.fast else 12)
+    for r in qrows:
+        print(f"fig3_{r['system']},{r['t_retrieval_s'] * 1e6:.0f},"
+              f"ndcg10={r['ndcg10']:.3f};p10={r['p10']:.3f};"
+              f"rag_ready_s={r['t_rag_ready_s']:.3f}")
+    checks3 = quality.validate(qrows)
+    results["quality"] = {"rows": qrows, "checks": checks3}
+
+    print("\n# paper-claim validation")
+    for c in checks2 + checks3:
+        print("#", c)
+
+    with open(os.path.join(args.out, "bench_results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    n_fail = sum(1 for c in checks2 + checks3 if c.startswith("FAIL"))
+    print(f"\n# {len(checks2) + len(checks3) - n_fail} claims PASS, "
+          f"{n_fail} FAIL")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""Paper Fig. 2: scalability of PIR-RAG / Tiptoe-style / Graph-PIR.
+
+Sweeps corpus size and measures (a) one-time setup seconds, (b) end-to-end
+query seconds, (c) uplink bytes, (d) downlink bytes — CPU-measured at reduced
+scale; the claims validated are the *shapes and orderings* of the curves
+(see EXPERIMENTS.md §Paper-validation).  TPU-scale server throughput comes
+from the dry-run roofline instead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import pipeline
+from repro.core.baselines import graph_pir, tiptoe
+from repro.data import corpus as corpus_lib
+
+
+def run(sizes=(500, 1000, 2000, 4000), emb_dim=128, n_queries=3,
+        seed=0) -> list[dict]:
+    """emb_dim=128 matches the paper's SIFT1M scalability dataset; documents
+    are ~0.8–1.6 KB (paper-like passages) so the downlink trade-off shows at
+    its true magnitude."""
+    rows = []
+    for n_docs in sizes:
+        corp = corpus_lib.make_corpus(seed, n_docs, emb_dim=emb_dim,
+                                      n_topics=max(8, n_docs // 100),
+                                      text_len=(800, 1600))
+        n_clusters = max(4, int(np.sqrt(n_docs) / 2))
+
+        # --- PIR-RAG ---------------------------------------------------------
+        sysm = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                           n_clusters=n_clusters, impl="xla",
+                                           seed=seed)
+        qt, up, down = [], 0, 0
+        for qi in range(n_queries):
+            t0 = time.perf_counter()
+            _, stats = sysm.query(corp.embeddings[qi * 7], top_k=10,
+                                  key=jax.random.PRNGKey(qi))
+            qt.append(time.perf_counter() - t0)
+            up, down = stats.uplink_bytes, stats.downlink_bytes
+        rows.append(dict(system="pir_rag", n_docs=n_docs,
+                         setup_s=sysm.setup_seconds,
+                         index_s=sysm.index_seconds,
+                         hint_s=sysm.hint_seconds,
+                         query_s=float(np.mean(qt)), uplink=up,
+                         downlink=down))
+
+        # --- Tiptoe-style ----------------------------------------------------
+        tsys = tiptoe.TiptoeSystem.build(corp.embeddings,
+                                         n_clusters=n_clusters, seed=seed)
+        qt = []
+        for qi in range(n_queries):
+            t0 = time.perf_counter()
+            _, st = tsys.search(corp.embeddings[qi * 7], top_k=10,
+                                key=jax.random.PRNGKey(qi))
+            qt.append(time.perf_counter() - t0)
+        rows.append(dict(system="tiptoe", n_docs=n_docs,
+                         setup_s=tsys.setup_seconds, index_s=tsys.setup_seconds,
+                         query_s=float(np.mean(qt)), uplink=st.uplink_bytes,
+                         downlink=st.downlink_bytes))
+
+        # --- Graph-PIR -------------------------------------------------------
+        gsys = graph_pir.GraphPIRSystem.build(corp.embeddings, degree=12,
+                                              impl="xla", seed=seed)
+        qt = []
+        for qi in range(n_queries):
+            t0 = time.perf_counter()
+            _, st = gsys.search(corp.embeddings[qi * 7], top_k=10, beam=8,
+                                max_hops=5, seed=qi)
+            qt.append(time.perf_counter() - t0)
+        rows.append(dict(system="graph_pir", n_docs=n_docs,
+                         setup_s=gsys.setup_seconds,
+                         index_s=gsys.index_seconds,
+                         hint_s=gsys.hint_seconds,
+                         query_s=float(np.mean(qt)), uplink=st.uplink_bytes,
+                         downlink=st.downlink_bytes))
+    return rows
+
+
+def validate(rows: list[dict]) -> list[str]:
+    """The paper's Fig-2 qualitative claims, checked programmatically."""
+    by = lambda s: [r for r in rows if r["system"] == s]  # noqa: E731
+    biggest = max(r["n_docs"] for r in rows)
+    at = lambda s: next(r for r in by(s) if r["n_docs"] == biggest)  # noqa
+    checks = []
+
+    def check(name, ok):
+        checks.append(f"{'PASS' if ok else 'FAIL'}  {name}")
+
+    # Fig 2a is a GROWTH claim: graph construction is superlinear in corpus
+    # size while clustering is ~linear.  Absolute constants at ≤5k docs are
+    # BLAS artifacts (vectorized brute-force kNN is cheap; the crypto hint
+    # GEMM dominates PIR-RAG's CPU setup but runs at the int8 roofline on
+    # the TPU target — 0.7 ms at production scale, §Roofline).
+    smallest = min(r["n_docs"] for r in rows)
+    at0 = lambda s: next(r for r in by(s) if r["n_docs"] == smallest)  # noqa
+    growth = lambda s: (at(s)["index_s"]  # noqa: E731
+                        / max(at0(s)["index_s"], 1e-3))
+    check("graph index build grows superlinearly vs cluster build (Fig 2a)",
+          growth("graph_pir") > 4.0
+          and growth("graph_pir") > 2 * growth("pir_rag"))
+    check("pir_rag uplink smallest (Fig 2c)",
+          at("pir_rag")["uplink"] <= at("graph_pir")["uplink"])
+    check("pir_rag downlink largest by far (Fig 2d)",
+          at("pir_rag")["downlink"] > 10 * at("tiptoe")["downlink"]
+          and at("pir_rag")["downlink"] > 10 * at("graph_pir")["downlink"])
+    pr = by("pir_rag")
+    check("pir_rag downlink grows with corpus (Fig 2d trend)",
+          pr[-1]["downlink"] > pr[0]["downlink"])
+    gq = by("graph_pir")
+    check("graph query time ~flat vs corpus (Fig 2b)",
+          gq[-1]["query_s"] < 4 * max(gq[0]["query_s"], 1e-3))
+    return checks

@@ -1,0 +1,55 @@
+"""Batched PIR serving: many concurrent private clients, one server GEMM.
+
+    PYTHONPATH=src python examples/serve_pir.py --clients 32
+
+Simulates a serving tick: B clients each privately fetch a (different,
+secret) cluster; the server stacks the encrypted queries into one modular
+GEMM — the batching that makes the TPU kernel MXU-bound (see roofline).
+Every client's recovered content is verified byte-exact.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import pipeline  # noqa: E402
+from repro.data import corpus as corpus_lib  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--docs", type=int, default=2000)
+    args = ap.parse_args()
+
+    corp = corpus_lib.make_corpus(3, n_docs=args.docs, emb_dim=64,
+                                  n_topics=24)
+    system = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                         n_clusters=24, impl="xla")
+    rng = np.random.default_rng(0)
+    queries = corp.embeddings[rng.integers(0, args.docs, args.clients)]
+
+    t0 = time.perf_counter()
+    results = system.query_batch(queries, top_k=3, seed=7)
+    dt = time.perf_counter() - t0
+
+    ok = 0
+    for res in results:
+        for doc_id, _, text in res:
+            assert text == corp.texts[doc_id]
+            ok += 1
+    per_client_down = system.cfg.downlink_bytes / 2**20
+    print(f"{args.clients} private clients served in {dt:.2f}s "
+          f"({dt / args.clients * 1e3:.1f} ms/client amortized)")
+    print(f"verified {ok} returned documents byte-exact")
+    print(f"per-client: uplink {system.cfg.uplink_bytes} B, "
+          f"downlink {per_client_down:.2f} MiB")
+    print("server saw only uint32 noise — no query, cluster, or result.")
+
+
+if __name__ == "__main__":
+    main()

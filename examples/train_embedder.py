@@ -1,0 +1,91 @@
+"""End-to-end training driver: a ~100M-param qwen3-style embedder/LM trained
+for a few hundred steps with the full production stack — fault-tolerant
+trainer, async checkpoints, deterministic seekable data, AdamW + cosine.
+
+    PYTHONPATH=src python examples/train_embedder.py --steps 300
+
+The model is the same transformer module the full-size dry-runs lower; only
+the dimensions differ.  Loss on the affine-recurrence task should fall well
+below the uniform baseline ln(V)≈6.9 within a few hundred steps.
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.data import lm_data  # noqa: E402
+from repro.launch.train import FaultTolerantTrainer  # noqa: E402
+from repro.models import nn, transformer as tf  # noqa: E402
+from repro.optim import optimizers as opt_lib  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/pirrag_embedder_ckpt")
+    args = ap.parse_args()
+
+    # ~100M-class: 12L × d768, GQA 12/4, SwiGLU, qk-norm (qwen3-style)
+    cfg = tf.LMConfig(name="embedder-100m", n_layers=12, d_model=768,
+                      n_heads=12, n_kv_heads=4, head_dim=64, d_ff=2048,
+                      vocab=512, qk_norm=True, rope_theta=1e6,
+                      attn_chunk_q=128, attn_chunk_kv=128, ce_chunk=128,
+                      remat=False)
+    params = tf.init(jax.random.PRNGKey(0), cfg)
+    print(f"params: {nn.count_params(params) / 1e6:.1f}M")
+
+    opt = opt_lib.adamw(opt_lib.cosine_schedule(3e-4, 20, args.steps),
+                        weight_decay=0.01)
+
+    def step_fn(state, batch):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: tf.lm_loss(p, batch, cfg), has_aux=True)(
+            state["params"])
+        new_p, new_o = opt.update(grads, state["opt"], state["params"])
+        return {"params": new_p, "opt": new_o}, {"loss": loss, **m}
+
+    def init_state(key):
+        p = tf.init(key, cfg)
+        return {"params": p, "opt": opt.init(p)}
+
+    def batch_at(step):
+        b = lm_data.batch_at(0, step, batch=args.batch, seq=args.seq,
+                             vocab=cfg.vocab, n_offsets=4)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    trainer = FaultTolerantTrainer(step_fn, init_state,
+                                   ckpt_dir=args.ckpt_dir, ckpt_every=50)
+    t0 = time.perf_counter()
+    losses = []
+    orig = trainer.step_fn
+
+    state, start = trainer._restore_or_init(jax.random.PRNGKey(0))
+    for step in range(start, args.steps):
+        state, metrics = orig(state, batch_at(step))
+        if step % 25 == 0 or step == args.steps - 1:
+            l = float(metrics["loss"])
+            losses.append(l)
+            print(f"step {step:4d}  loss {l:.4f}  "
+                  f"({(time.perf_counter() - t0):.0f}s)")
+        if (step + 1) % trainer.ckpt_every == 0:
+            trainer.saver.save(trainer.ckpt_dir, state, step=step, keep=3)
+    trainer.saver.wait()
+    import math
+    print(f"\nuniform baseline ln(V) = {math.log(cfg.vocab):.2f}; "
+          f"final loss = {losses[-1]:.2f}")
+    if args.steps >= 100:
+        assert losses[-1] < losses[0] - 0.5, "training did not make progress"
+        print("OK: loss decreased; checkpoints in", args.ckpt_dir)
+    else:
+        print("(short run — skip convergence assertion); checkpoints in",
+              args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

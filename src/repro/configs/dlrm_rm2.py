@@ -1,0 +1,30 @@
+"""dlrm-rm2 [recsys] — n_dense=13 n_sparse=26 embed_dim=64
+bot_mlp=13-512-256-64 top_mlp=512-512-256-1 interaction=dot.
+[arXiv:1906.00091; paper]
+
+Per-field vocab is not pinned by the assignment; we use 10⁶ rows/field
+(26M × 64 fp32 ≈ 6.7 GB of tables, row-sharded over "model").
+bot_mlp lists include the input width; top_mlp widths follow the interaction
+output (DLRM repo convention).
+"""
+import dataclasses
+
+from repro.configs import base
+from repro.models.recsys import RecSysConfig
+
+FULL = RecSysConfig(
+    name="dlrm-rm2", kind="dlrm", n_dense=13, n_sparse=26, embed_dim=64,
+    vocab_per_field=1_000_000,
+    bot_mlp=(13, 512, 256, 64), top_mlp=(512, 512, 256, 1),
+)
+
+SMOKE = dataclasses.replace(FULL, name="dlrm-smoke", vocab_per_field=100,
+                            bot_mlp=(13, 32, 16), top_mlp=(32, 16, 1),
+                            embed_dim=16)
+
+ARCH = base.register(base.ArchSpec(
+    name="dlrm-rm2", family="recsys",
+    model=lambda shape: FULL, smoke=lambda shape: SMOKE,
+    shapes=base.RECSYS_SHAPES,
+    source="arXiv:1906.00091; paper",
+))

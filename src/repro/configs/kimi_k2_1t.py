@@ -1,0 +1,42 @@
+"""kimi-k2-1t-a32b [moe] — 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384e top-8.  [arXiv:2501.kimi2; unverified]
+
+Assignment sheet wins over the model card: public K2 uses MLA attention; the
+assigned spec says GQA(kv=8), so GQA it is (DESIGN.md §Known deviations #4).
+d_ff=2048 is the per-expert width; +1 shared expert per the K2 report.
+All-MoE stack (every=1) → ≈1.04T total / ≈33B active params (pinned in
+tests).  Trains with Adafactor + bf16 params so state fits 512×16GB.
+"""
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="kimi-k2-1t-a32b",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=112,
+    d_ff=2048, vocab=163840, rope_theta=500_000.0,
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff=2048, n_shared=1, every=1,
+                  capacity_factor=1.25),
+    param_dtype=jnp.bfloat16,     # 1T fp32 params cannot fit 512×16GB
+)
+
+SMOKE = LMConfig(
+    name="kimi-smoke",
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, head_dim=8,
+    d_ff=64, vocab=512, rope_theta=500_000.0,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff=64, n_shared=1, every=1,
+                  capacity_factor=2.0),
+    attn_chunk_q=16, attn_chunk_kv=16, ce_chunk=16, remat=False,
+)
+
+ARCH = base.register(base.ArchSpec(
+    name="kimi-k2-1t-a32b",
+    family="lm",
+    model=lambda shape: FULL,
+    smoke=lambda shape: SMOKE,
+    shapes=base.LM_SHAPES,
+    source="arXiv:2501.kimi2; unverified",
+    notes="GQA per assignment (public K2 uses MLA); bf16 params + Adafactor.",
+))

@@ -1,0 +1,40 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H (GQA kv=8)
+d_ff=8192 vocab=202048, MoE 128e top-1.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+Construction notes (DESIGN.md §Known deviations #3): Llama-4 interleaves
+dense/MoE 1:1 and keeps one shared expert; with the assigned 128e/top-1 and
+d_ff=8192 this lands at ≈401B total / ≈17B active params, matching the
+"400b-a17b" designation.  Param-count pinned in tests/test_configs.py.
+"""
+from repro.configs import base
+from repro.models.moe import MoEConfig
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="llama4-maverick-400b-a17b",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=202048, rope_theta=500_000.0,
+    moe=MoEConfig(n_experts=128, top_k=1, d_ff=8192, n_shared=1, every=2,
+                  capacity_factor=1.25),
+)
+
+SMOKE = LMConfig(
+    name="llama4-smoke",
+    n_layers=4, d_model=64, n_heads=8, n_kv_heads=2, head_dim=8,
+    d_ff=128, vocab=512, rope_theta=500_000.0,
+    moe=MoEConfig(n_experts=8, top_k=1, d_ff=128, n_shared=1, every=2,
+                  capacity_factor=2.0),
+    attn_chunk_q=16, attn_chunk_kv=16, ce_chunk=16, remat=False,
+)
+
+ARCH = base.register(base.ArchSpec(
+    name="llama4-maverick-400b-a17b",
+    family="lm",
+    model=lambda shape: FULL,
+    smoke=lambda shape: SMOKE,
+    shapes=base.LM_SHAPES,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+    notes="MoE interleaved 1:1 with dense, +1 shared expert (early-fusion "
+          "modality frontend is out of scope for the LM backbone).",
+))

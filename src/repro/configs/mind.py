@@ -1,0 +1,25 @@
+"""mind [recsys] — embed_dim=64 n_interests=4 capsule_iters=3
+interaction=multi-interest.  [arXiv:1904.08030; unverified]
+Item vocab 10⁶ (unpinned); history length 50 per the shape regime table.
+`retrieval_cand` is MIND's native task: max-over-interests dot against 10⁶
+candidates — and the arch where PIR-RAG composes (private candidate fetch,
+examples/private_recsys.py)."""
+import dataclasses
+
+from repro.configs import base
+from repro.models.recsys import RecSysConfig
+
+FULL = RecSysConfig(
+    name="mind", kind="mind", n_dense=0, n_sparse=1, embed_dim=64,
+    vocab_per_field=1_000_000, n_interests=4, capsule_iters=3, hist_len=50,
+)
+
+SMOKE = dataclasses.replace(FULL, name="mind-smoke", vocab_per_field=200,
+                            embed_dim=16, hist_len=12)
+
+ARCH = base.register(base.ArchSpec(
+    name="mind", family="recsys",
+    model=lambda shape: FULL, smoke=lambda shape: SMOKE,
+    shapes=base.RECSYS_SHAPES,
+    source="arXiv:1904.08030; unverified",
+))

@@ -1,0 +1,26 @@
+"""phi4-mini-3.8b [dense] — 32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064 — RoPE SwiGLU GQA.  [arXiv:2412.08905; hf]"""
+from repro.configs import base
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="phi4-mini-3.8b",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=200064, rope_theta=10_000.0, tie_embeddings=True,
+)
+
+SMOKE = LMConfig(
+    name="phi4-smoke",
+    n_layers=3, d_model=48, n_heads=6, n_kv_heads=2, head_dim=8,
+    d_ff=128, vocab=512, rope_theta=10_000.0,
+    attn_chunk_q=16, attn_chunk_kv=16, ce_chunk=16, remat=False,
+)
+
+ARCH = base.register(base.ArchSpec(
+    name="phi4-mini-3.8b",
+    family="lm",
+    model=lambda shape: FULL,
+    smoke=lambda shape: SMOKE,
+    shapes=base.LM_SHAPES,
+    source="arXiv:2412.08905; hf",
+))

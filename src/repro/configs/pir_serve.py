@@ -1,0 +1,53 @@
+"""pir_serve — the PAPER'S OWN workload as a first-class arch (11th config).
+
+Production-scale PIR-RAG serving point: n=4096 clusters × 2 MiB cluster
+content ⇒ an 8.6 GB chunk-transposed u8 database (≈5.7M docs at 1.5 KB).
+The online step is the batched modular GEMM  ans = D·Q (mod 2^32); the
+offline step is the hint GEMM  H = D·A.
+
+Distribution (beyond-paper, DESIGN.md §3): DB rows shard over pod×model —
+the online hot path has ZERO collectives; the "data" axis shards the query
+batch.  Roofline: 4·B int8-MACs per DB byte ⇒ HBM-bound below B≈60,
+MXU-bound above.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.configs.base import ShapeSpec, sds
+
+
+@dataclasses.dataclass(frozen=True)
+class PIRServeConfig:
+    name: str
+    m: int                      # DB rows (bytes per cluster)
+    n: int                      # clusters
+    lwe_k: int = 1024
+    q_switch: int | None = 1 << 16
+
+
+FULL = PIRServeConfig(name="pir_serve", m=2 * 1024 * 1024, n=4096)
+SMOKE = PIRServeConfig(name="pir-smoke", m=2048, n=64)
+
+PIR_SHAPES = {
+    "online_b64": ShapeSpec("online_b64", "serve", {"batch": 64}),
+    "online_b512": ShapeSpec("online_b512", "serve", {"batch": 512}),
+    "hint_setup": ShapeSpec("hint_setup", "setup", {"k": 1024}),
+}
+
+
+def pir_input_specs(cfg: PIRServeConfig, shape: ShapeSpec) -> dict:
+    # the DB itself is the step's *state* (sharded server-resident matrix)
+    if shape.kind == "serve":
+        return {"queries": sds((cfg.n, shape.meta["batch"]), jnp.uint32)}
+    return {"a_mat": sds((cfg.n, cfg.lwe_k), jnp.uint32)}
+
+
+ARCH = base.register(base.ArchSpec(
+    name="pir_serve", family="pir",
+    model=lambda shape: FULL, smoke=lambda shape: SMOKE,
+    shapes=PIR_SHAPES,
+    source="this paper (§3) + SimplePIR (USENIX Sec'23)",
+    notes="Row-sharded zero-collective serving; int8 MXU roofline.",
+))

@@ -1,0 +1,26 @@
+"""qwen2-7b [dense] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944
+vocab=152064 — GQA, QKV bias.  [arXiv:2407.10671; hf]"""
+from repro.configs import base
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="qwen2-7b",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab=152064, rope_theta=1_000_000.0, qkv_bias=True,
+)
+
+SMOKE = LMConfig(
+    name="qwen2-smoke",
+    n_layers=3, d_model=48, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=192, vocab=512, rope_theta=1_000_000.0, qkv_bias=True,
+    attn_chunk_q=16, attn_chunk_kv=16, ce_chunk=16, remat=False,
+)
+
+ARCH = base.register(base.ArchSpec(
+    name="qwen2-7b",
+    family="lm",
+    model=lambda shape: FULL,
+    smoke=lambda shape: SMOKE,
+    shapes=base.LM_SHAPES,
+    source="arXiv:2407.10671; hf",
+))

@@ -1,0 +1,28 @@
+"""qwen3-4b [dense] — 36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936
+— qk_norm, GQA.  head_dim=128 (decoupled from d_model/n_heads, per Qwen3).
+[hf:Qwen/Qwen3-8B; hf]"""
+from repro.configs import base
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="qwen3-4b",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=9728, vocab=151936, rope_theta=1_000_000.0, qk_norm=True,
+    tie_embeddings=True,
+)
+
+SMOKE = LMConfig(
+    name="qwen3-smoke",
+    n_layers=3, d_model=48, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab=512, rope_theta=1_000_000.0, qk_norm=True,
+    attn_chunk_q=16, attn_chunk_kv=16, ce_chunk=16, remat=False,
+)
+
+ARCH = base.register(base.ArchSpec(
+    name="qwen3-4b",
+    family="lm",
+    model=lambda shape: FULL,
+    smoke=lambda shape: SMOKE,
+    shapes=base.LM_SHAPES,
+    source="hf:Qwen/Qwen3-8B; hf",
+))

@@ -1,0 +1,44 @@
+"""schnet [gnn] — n_interactions=3 d_hidden=64 rbf=300 cutoff=10.
+[arXiv:1706.08566; paper]
+
+Shape-dependent frontends (the interaction trunk is the assigned config):
+  molecule      → atom-number embedding + 3D positions (faithful SchNet)
+  graph shapes  → node-feature linear + per-edge scalar distance (cfconv over
+                  an explicit edge list via segment_sum; JAX has no CSR SpMM)
+PIR-RAG applicability: none (DESIGN.md §Arch-applicability) — built without
+the technique, full dry-run/roofline coverage.
+"""
+import dataclasses
+
+from repro.configs import base
+from repro.models.schnet import SchNetConfig
+
+_TRUNK = dict(n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0)
+
+
+def _full(shape: str) -> SchNetConfig:
+    m = base.GNN_SHAPES[shape].meta
+    if shape == "molecule":
+        return SchNetConfig(name="schnet", mode="molecule", n_out=1,
+                            n_species=100, **_TRUNK)
+    return SchNetConfig(name="schnet", mode="graph", d_feat=m["d_feat"],
+                        n_out=m["n_classes"], **_TRUNK)
+
+
+def _smoke(shape: str) -> SchNetConfig:
+    full = _full(shape)
+    return dataclasses.replace(full, n_interactions=2, d_hidden=16, n_rbf=16,
+                               d_feat=min(full.d_feat, 24) if
+                               full.mode == "graph" else 0)
+
+
+ARCH = base.register(base.ArchSpec(
+    name="schnet",
+    family="gnn",
+    model=_full,
+    smoke=_smoke,
+    shapes=base.GNN_SHAPES,
+    source="arXiv:1706.08566; paper",
+    notes="minibatch_lg uses the real fanout-[15,10] CSR sampler "
+          "(data/graph_sampler.py).",
+))

@@ -1,0 +1,25 @@
+"""xdeepfm [recsys] — n_sparse=39 embed_dim=10 cin_layers=200-200-200
+mlp=400-400 interaction=cin.  [arXiv:1803.05170; paper]
+Vocab 10⁶/field (unpinned by assignment); no dense features in the assigned
+spec (n_dense=0)."""
+import dataclasses
+
+from repro.configs import base
+from repro.models.recsys import RecSysConfig
+
+FULL = RecSysConfig(
+    name="xdeepfm", kind="xdeepfm", n_dense=0, n_sparse=39, embed_dim=10,
+    vocab_per_field=1_000_000, cin_layers=(200, 200, 200),
+    dnn_mlp=(400, 400),
+)
+
+SMOKE = dataclasses.replace(FULL, name="xdeepfm-smoke", vocab_per_field=100,
+                            n_sparse=8, embed_dim=4, cin_layers=(16, 16),
+                            dnn_mlp=(32,))
+
+ARCH = base.register(base.ArchSpec(
+    name="xdeepfm", family="recsys",
+    model=lambda shape: FULL, smoke=lambda shape: SMOKE,
+    shapes=base.RECSYS_SHAPES,
+    source="arXiv:1803.05170; paper",
+))

@@ -1,0 +1,124 @@
+"""Shared machinery for the baseline private-search architectures.
+
+Two pieces both baselines (and the RAG-ready accounting) need:
+
+* ``DocContentPIR`` — a per-document PIR database (one column per doc).  This
+  is the "retrieve-THEN-fetch" tail the paper charges to Graph-PIR and
+  Tiptoe: after they produce ids, each document's content still costs one
+  PIR query here.  PIR-RAG avoids it by construction.
+* Signed low-bit embedding quantization with offset correction, so encrypted
+  inner products run through the same u8×u32 modular-GEMM kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chunking, lwe, pir
+
+
+# ---------------------------------------------------------------------------
+# Low-bit signed quantization for homomorphic scoring
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantScheme:
+    """Symmetric signed quantizer stored as shifted-unsigned for the u8 kernel.
+
+    value v → round(v / scale) ∈ [−levels, levels], stored as +levels.
+    The inner product of two shifted vectors expands to
+        Σ(d+L)(q+L) = Σ d·q + L·Σd + L·Σq + d_dim·L²
+    so the client (which knows Σq) removes the offsets given the public
+    per-doc row sums Σd — doc-side constants that reveal nothing about a
+    query.
+    """
+    levels: int            # e.g. 15 → 5-bit signed
+    scale: float
+
+    def quantize(self, v: np.ndarray) -> np.ndarray:
+        q = np.clip(np.round(v / self.scale), -self.levels, self.levels)
+        return (q + self.levels).astype(np.uint8)
+
+    def unshift(self, stored: np.ndarray) -> np.ndarray:
+        return stored.astype(np.int64) - self.levels
+
+
+def fit_quant(embs: np.ndarray, levels: int) -> QuantScheme:
+    amax = float(np.abs(embs).max()) or 1.0
+    return QuantScheme(levels=levels, scale=amax / levels)
+
+
+# ---------------------------------------------------------------------------
+# Encrypted-embedding query (the Tiptoe-style uplink; also reused by tests)
+# ---------------------------------------------------------------------------
+
+def encrypt_embedding(key: jax.Array, q_shifted: np.ndarray,
+                      params: lwe.LWEParams, a_mat: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """LWE-encrypt a shifted-unsigned quantized embedding, coordinate-wise."""
+    k_sec, k_err = jax.random.split(key)
+    s = lwe.keygen(k_sec, params)
+    msg = jnp.asarray(q_shifted.astype(np.uint32))
+    ct = lwe.encrypt_vector(k_err, s, a_mat, msg, params.delta, params.sigma)
+    return ct, s
+
+
+# ---------------------------------------------------------------------------
+# Per-document content PIR (the expensive tail of retrieve-then-fetch)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DocContentPIR:
+    """One PIR column per document; fetching doc i = PIR query for column i."""
+    cfg: pir.PIRConfig
+    server: pir.PIRServer
+    hint: jax.Array
+    emb_dim: int
+
+    @classmethod
+    def build(cls, texts, embeddings: np.ndarray, *, impl: str = "xla",
+              chunk_size: int = 64) -> "DocContentPIR":
+        n_docs, emb_dim = embeddings.shape
+        recs = [chunking.serialize_doc(i, embeddings[i], texts[i])
+                for i in range(n_docs)]
+        raw = max(len(r) for r in recs)
+        m = ((raw + chunk_size - 1) // chunk_size) * chunk_size
+        mat = np.zeros((m, n_docs), np.uint8)
+        for i, r in enumerate(recs):
+            mat[:len(r), i] = np.frombuffer(r, np.uint8)
+        cfg = pir.make_config(m, n_docs, impl=impl)
+        server = pir.PIRServer(cfg, jnp.asarray(mat))
+        hint = server.setup()
+        return cls(cfg=cfg, server=server, hint=hint, emb_dim=emb_dim)
+
+    def fetch(self, key: jax.Array, doc_id: int
+              ) -> tuple[int, np.ndarray, bytes]:
+        client = pir.PIRClient(self.cfg, self.hint)
+        qu, state = client.query(key, doc_id)
+        ans = self.server.answer(qu)
+        col = np.asarray(client.recover(ans, state))
+        buf = col.tobytes()
+        did = int(np.frombuffer(buf[:4], np.uint32)[0])
+        tlen = int(np.frombuffer(buf[4:8], np.uint32)[0])
+        scale = float(np.frombuffer(buf[8:12], np.float32)[0])
+        off = float(np.frombuffer(buf[12:16], np.float32)[0])
+        qv = np.frombuffer(buf[16:16 + self.emb_dim], np.uint8)
+        text = buf[16 + self.emb_dim:16 + self.emb_dim + tlen]
+        return did, chunking.dequantize_embedding(qv, scale, off), text
+
+    def fetch_many(self, seed: int, doc_ids) -> list[tuple[int, np.ndarray,
+                                                           bytes]]:
+        """K sequential private fetches — the retrieve-then-fetch tail cost."""
+        return [self.fetch(jax.random.PRNGKey(seed * 9973 + t), int(d))
+                for t, d in enumerate(doc_ids)]
+
+    @property
+    def per_fetch_uplink(self) -> int:
+        return self.cfg.uplink_bytes
+
+    @property
+    def per_fetch_downlink(self) -> int:
+        return self.cfg.downlink_bytes

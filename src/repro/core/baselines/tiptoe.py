@@ -1,0 +1,144 @@
+"""Tiptoe-style private-scoring baseline (paper §4.1 baseline 2).
+
+Clustered corpus; the client picks a cluster from public centroids and sends
+(a) the cluster id IN THE CLEAR — the documented leak of this architecture —
+and (b) its query embedding LWE-encrypted coordinate-wise, quantized to a few
+signed bits.  The server homomorphically computes similarity scores for every
+document in that cluster (one u8×u32 GEMV through the same modular kernel)
+and returns ONLY encrypted scores.  The client decrypts, ranks, and — for a
+RAG workflow — still owes K private content fetches (``DocContentPIR``).
+
+Why its quality trails (paper Fig. 3, NDCG 0.513): homomorphic scoring must
+fit `Σ d_i·q_i` inside the plaintext modulus *after* LWE noise, forcing
+coarse (≈5-bit) embedding quantization server-side.  We reproduce that
+mechanism rather than hard-coding the number.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering, lwe
+from repro.core.baselines import common
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class TiptoeStats:
+    uplink_bytes: int
+    downlink_bytes: int
+    server_ms: float
+    cluster_index: int            # visible to the server (the leak)
+
+
+@dataclasses.dataclass
+class TiptoeSystem:
+    centroids: np.ndarray                     # public
+    params: lwe.LWEParams
+    quant: common.QuantScheme
+    cluster_mats: list[np.ndarray]            # per-cluster (n_docs_c, d) u8
+    cluster_doc_ids: list[np.ndarray]
+    cluster_rowsums: list[np.ndarray]         # public Σd per doc (offset corr.)
+    hints: list[jax.Array]                    # per-cluster D_c · A
+    a_seed: int
+    emb_dim: int
+    setup_seconds: float
+    impl: str = "xla"
+
+    # -- offline --------------------------------------------------------------
+
+    @classmethod
+    def build(cls, embeddings: np.ndarray, *, n_clusters: int,
+              levels: int = 15, kmeans_iters: int = 25, seed: int = 0,
+              impl: str = "xla") -> "TiptoeSystem":
+        t0 = time.perf_counter()
+        n, d = embeddings.shape
+        km = clustering.kmeans_fit(jax.random.PRNGKey(seed),
+                                   jnp.asarray(embeddings, jnp.float32),
+                                   k=n_clusters, iters=kmeans_iters)
+        cents, assign = np.asarray(km.centroids), np.asarray(km.assignment)
+
+        # Plaintext modulus is capped at 2^16 (kernel: u8 DB entries, here
+        # ≤ 2·levels).  Shifted-unsigned products reach d·(2L)² and LWE noise
+        # adds z·σ·√d·(2L); shrink L until both fit — this is exactly the
+        # quantization coarsening that costs Tiptoe its ranking quality.
+        p = 1 << 16
+        params = lwe.LWEParams(p=p, q_switch=None)
+        L = levels
+        while L > 1:
+            vmax = d * (2 * L) ** 2
+            noise = params.z_tail * params.sigma * np.sqrt(d) * (2 * L)
+            if vmax < p and noise < lwe.Q / (2 * p):
+                break
+            L -= 1
+        else:
+            raise ValueError("no feasible tiptoe quantization")
+        levels = L
+        quant = common.fit_quant(embeddings, levels)
+
+        mats, ids, rowsums, hints = [], [], [], []
+        a_seed = seed + 101
+        a_mat = lwe.gen_public_matrix(a_seed, d, params.k)
+        for j in range(n_clusters):
+            members = np.nonzero(assign == j)[0]
+            dq = quant.quantize(embeddings[members]) if len(members) else \
+                np.zeros((0, d), np.uint8)
+            mats.append(dq)
+            ids.append(members.astype(np.int64))
+            rowsums.append(dq.astype(np.int64).sum(axis=1))
+            if len(members):
+                hints.append(ops.hint_gemm(jnp.asarray(dq), a_mat, impl=impl))
+            else:
+                hints.append(jnp.zeros((0, params.k), jnp.uint32))
+        return cls(centroids=cents, params=params, quant=quant,
+                   cluster_mats=mats, cluster_doc_ids=ids,
+                   cluster_rowsums=rowsums, hints=hints, a_seed=a_seed,
+                   emb_dim=d, setup_seconds=time.perf_counter() - t0,
+                   impl=impl)
+
+    # -- online ---------------------------------------------------------------
+
+    def search(self, query_emb: np.ndarray, *, top_k: int = 10,
+               key: jax.Array | None = None
+               ) -> tuple[np.ndarray, TiptoeStats]:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        cl = int(clustering.assign_to_centroids(
+            jnp.asarray(query_emb, jnp.float32)[None],
+            jnp.asarray(self.centroids))[0])
+        dmat = self.cluster_mats[cl]
+        if dmat.shape[0] == 0:
+            return np.zeros(0, np.int64), TiptoeStats(0, 0, 0.0, cl)
+
+        # client: encrypt shifted-unsigned quantized query
+        q_shift = self.quant.quantize(query_emb.astype(np.float32))
+        a_mat = lwe.gen_public_matrix(self.a_seed, self.emb_dim,
+                                      self.params.k)
+        ct, s = common.encrypt_embedding(key, q_shift, self.params, a_mat)
+
+        # server: encrypted scores for every doc in the (known) cluster
+        t0 = time.perf_counter()
+        ans = jax.block_until_ready(
+            ops.modmatmul(jnp.asarray(dmat), ct, impl=self.impl))
+        server_ms = 1e3 * (time.perf_counter() - t0)
+
+        # client: decrypt, de-offset, rank
+        rec = lwe.hint_strip(ans, self.hints[cl], s)
+        raw = np.asarray(lwe.decode(rec, self.params)).astype(np.int64)
+        half = self.params.p // 2
+        raw = np.where(raw >= half, raw - self.params.p, raw)   # center mod p
+        L = self.quant.levels
+        sum_q = int(q_shift.astype(np.int64).sum())
+        # Σ(d+L)(q+L) = Σdq + L·Σd + L·Σq + dim·L²  →  Σdq =
+        scores = (raw - L * self.cluster_rowsums[cl] - L * sum_q
+                  - self.emb_dim * L * L)
+        order = np.argsort(-scores)[:top_k]
+        ids = self.cluster_doc_ids[cl][order]
+        stats = TiptoeStats(
+            uplink_bytes=self.emb_dim * 4,
+            downlink_bytes=int(dmat.shape[0]) * 4,
+            server_ms=server_ms, cluster_index=cl)
+        return ids, stats

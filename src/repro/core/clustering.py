@@ -1,0 +1,120 @@
+"""K-means clustering for the offline corpus-partitioning phase.
+
+kmeans++ seeding + Lloyd iterations, fully in JAX (assignment is one GEMM per
+iteration, so the same code shards over the corpus axis under pjit at scale).
+A host-side *balanced* assignment pass is provided as a beyond-paper option:
+PIR-RAG's downlink cost is `max_cluster_bytes`, so capping cluster occupancy
+directly shrinks the dominant cost of the paper's own architecture.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array      # (k, d) f32
+    assignment: jax.Array     # (N,) i32
+    inertia: jax.Array        # () f32, final mean squared distance
+
+
+def pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
+    """||x_i - c_j||² as a GEMM: (N, k)."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    return x2 - 2.0 * (x @ c.T) + c2
+
+
+def kmeanspp_init(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """D²-weighted seeding (Arthur & Vassilvitskii)."""
+    n, d = x.shape
+
+    k0, key = jax.random.split(key)
+    first = x[jax.random.randint(k0, (), 0, n)]
+    cents = jnp.zeros((k, d), x.dtype).at[0].set(first)
+    mind2 = jnp.sum((x - first) ** 2, axis=1)
+
+    def body(i, state):
+        cents, mind2, key = state
+        key, kc = jax.random.split(key)
+        # sample ∝ D²; categorical over logits = log D²
+        idx = jax.random.categorical(kc, jnp.log(mind2 + 1e-12))
+        c_new = x[idx]
+        cents = cents.at[i].set(c_new)
+        mind2 = jnp.minimum(mind2, jnp.sum((x - c_new) ** 2, axis=1))
+        return cents, mind2, key
+
+    cents, _, _ = jax.lax.fori_loop(1, k, body, (cents, mind2, key))
+    return cents
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_fit(key: jax.Array, x: jax.Array, *, k: int,
+               iters: int = 25) -> KMeansResult:
+    """kmeans++ init then `iters` Lloyd steps. Empty clusters keep centroids."""
+    cents0 = kmeanspp_init(key, x, k)
+
+    def lloyd(cents, _):
+        d2 = pairwise_sqdist(x, cents)
+        assign = jnp.argmin(d2, axis=1)
+        one = jnp.ones((x.shape[0],), x.dtype)
+        sums = jax.ops.segment_sum(x, assign, num_segments=k)
+        cnts = jax.ops.segment_sum(one, assign, num_segments=k)
+        new = jnp.where(cnts[:, None] > 0, sums / jnp.maximum(cnts, 1)[:, None],
+                        cents)
+        inertia = jnp.mean(jnp.min(d2, axis=1))
+        return new, inertia
+
+    cents, inertias = jax.lax.scan(lloyd, cents0, None, length=iters)
+    assign = jnp.argmin(pairwise_sqdist(x, cents), axis=1)
+    return KMeansResult(cents, assign.astype(jnp.int32), inertias[-1])
+
+
+def assign_to_centroids(x: jax.Array, cents: jax.Array,
+                        *, impl: str = "xla") -> jax.Array:
+    """Nearest-centroid assignment (the client-side cluster pick).
+
+    impl="pallas" uses the fused distance+argmin kernel
+    (kernels/kmeans_assign.py) — on TPU it avoids materializing the (N, K)
+    distance matrix in HBM for corpus-scale assignment sweeps."""
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.kmeans_assign(x, cents, impl="pallas")[0]
+    return jnp.argmin(pairwise_sqdist(x, cents), axis=1).astype(jnp.int32)
+
+
+def balanced_assign(x: np.ndarray, cents: np.ndarray, cap: int,
+                    batch: int = 65536) -> np.ndarray:
+    """Greedy capacity-capped assignment (host-side, offline).
+
+    Docs are visited in order of confidence (margin to their best centroid);
+    a doc whose best cluster is full spills to the nearest non-full one.
+    Bounds `max_cluster_bytes`, the PIR-RAG downlink driver.
+    """
+    n, k = x.shape[0], cents.shape[0]
+    if cap * k < n:
+        raise ValueError(f"cap {cap} × k {k} < N {n}")
+    # distances in batches to bound memory
+    d2 = np.empty((n, k), np.float32)
+    for s in range(0, n, batch):
+        xb = x[s:s + batch]
+        d2[s:s + batch] = (
+            (xb * xb).sum(1, keepdims=True) - 2 * xb @ cents.T
+            + (cents * cents).sum(1)[None, :])
+    best = d2.min(axis=1)
+    order = np.argsort(best)          # most-confident docs claim slots first
+    pref = np.argsort(d2, axis=1)     # per-doc centroid preference list
+    counts = np.zeros(k, np.int64)
+    out = np.full(n, -1, np.int32)
+    for i in order:
+        for j in pref[i]:
+            if counts[j] < cap:
+                out[i] = j
+                counts[j] += 1
+                break
+    assert (out >= 0).all()
+    return out

@@ -1,0 +1,142 @@
+"""PIR-RAG end-to-end system (paper §3): offline setup + online private query.
+
+Offline (server): embed → K-means → chunk-transposed DB → PIR hint.
+Online (client): embed query → pick cluster from PUBLIC centroids →
+LWE-encrypted one-hot → server modular GEMV → decrypt whole cluster →
+local exact re-rank → top-K documents, content in hand ("RAG-Ready").
+
+The server never sees the query embedding, the chosen cluster, or the ranked
+results; its entire view is one pseudorandom uint32 vector per query.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chunking, clustering, pir, rerank
+
+
+@dataclasses.dataclass
+class QueryStats:
+    uplink_bytes: int
+    downlink_bytes: int
+    client_ms: float
+    server_ms: float
+    cluster_index: int            # known to client only
+
+
+@dataclasses.dataclass
+class PirRagSystem:
+    """Bundles server-public state (centroids) and the two protocol roles."""
+    centroids: np.ndarray         # PUBLIC: (n_clusters, d)
+    db: chunking.ChunkedDB
+    cfg: pir.PIRConfig
+    server: pir.PIRServer
+    hint: jax.Array               # client-side after one-time download
+    setup_seconds: float          # total offline time
+    index_seconds: float = 0.0    # clustering + packing (no crypto)
+    hint_seconds: float = 0.0     # hint GEMM (int8-roofline op on TPU)
+
+    # -- offline ------------------------------------------------------------
+
+    @classmethod
+    def build(cls, texts: Sequence[bytes], embeddings: np.ndarray, *,
+              n_clusters: int, kmeans_iters: int = 25, chunk_size: int = 256,
+              balance_factor: float | None = None, seed: int = 0,
+              impl: str = "auto", q_switch: int | None = 1 << 16,
+              ) -> "PirRagSystem":
+        t0 = time.perf_counter()
+        emb_j = jnp.asarray(embeddings, jnp.float32)
+        km = clustering.kmeans_fit(jax.random.PRNGKey(seed), emb_j,
+                                   k=n_clusters, iters=kmeans_iters)
+        cents = np.asarray(km.centroids)
+        if balance_factor is not None:
+            cap = int(np.ceil(len(texts) / n_clusters * balance_factor))
+            assign = clustering.balanced_assign(
+                np.asarray(embeddings, np.float32), cents, cap)
+        else:
+            assign = np.asarray(km.assignment)
+        db = chunking.build_chunked_db(texts, np.asarray(embeddings, np.float32),
+                                       assign, n_clusters, chunk_size)
+        cfg = pir.make_config(db.m, db.n, impl=impl, q_switch=q_switch)
+        server = pir.PIRServer(cfg, jnp.asarray(db.matrix))
+        t_index = time.perf_counter()
+        hint = jax.block_until_ready(server.setup())
+        t_end = time.perf_counter()
+        return cls(centroids=cents, db=db, cfg=cfg, server=server, hint=hint,
+                   setup_seconds=t_end - t0, index_seconds=t_index - t0,
+                   hint_seconds=t_end - t_index)
+
+    # -- online -------------------------------------------------------------
+
+    def query(self, query_emb: np.ndarray, *, top_k: int = 10,
+              multi_probe: int = 1, key: jax.Array | None = None
+              ) -> tuple[list[tuple[int, float, bytes]], QueryStats]:
+        """One fully private retrieval; returns top-k docs + accounting.
+
+        multi_probe=P (beyond-paper): privately fetch the P nearest clusters
+        in ONE batched server GEMM round.  Recovers the boundary recall that
+        single-cluster pruning loses (the paper's quality gap vs Graph-PIR)
+        at P× downlink — the server still learns nothing, including P's
+        cluster identities.
+        """
+        key = key if key is not None else jax.random.PRNGKey(
+            np.random.default_rng().integers(2**31))
+        client = pir.PIRClient(self.cfg, self.hint)
+
+        t0 = time.perf_counter()
+        d2 = clustering.pairwise_sqdist(
+            jnp.asarray(query_emb, jnp.float32)[None, :],
+            jnp.asarray(self.centroids))[0]
+        order = np.argsort(np.asarray(d2))[:max(1, multi_probe)]
+        qs, states = [], []
+        for j, cl in enumerate(order):
+            qu, st = client.query(jax.random.fold_in(key, j), int(cl))
+            qs.append(qu)
+            states.append(st)
+        batch = jax.block_until_ready(jnp.stack(qs, axis=1))
+        t1 = time.perf_counter()
+
+        ans = jax.block_until_ready(self.server.answer(batch))
+        t2 = time.perf_counter()
+
+        docs = []
+        for j, st in enumerate(states):
+            col = np.asarray(client.recover(ans[:, j], st))
+            docs.extend(chunking.deserialize_docs(col, self.db.emb_dim))
+        top = rerank.rerank(np.asarray(query_emb, np.float32), docs, top_k)
+        t3 = time.perf_counter()
+
+        p = len(order)
+        stats = QueryStats(
+            uplink_bytes=p * self.cfg.uplink_bytes,
+            downlink_bytes=p * self.cfg.downlink_bytes,
+            client_ms=1e3 * ((t1 - t0) + (t3 - t2)),
+            server_ms=1e3 * (t2 - t1),
+            cluster_index=int(order[0]))
+        return top, stats
+
+    def query_batch(self, query_embs: np.ndarray, *, top_k: int = 10,
+                    seed: int = 0) -> list[list[tuple[int, float, bytes]]]:
+        """Batched serving: stack B encrypted queries into one server GEMM."""
+        client = pir.PIRClient(self.cfg, self.hint)
+        clusters = np.asarray(clustering.assign_to_centroids(
+            jnp.asarray(query_embs, jnp.float32), jnp.asarray(self.centroids)))
+        qs, states = [], []
+        for b, c in enumerate(clusters):
+            qu, st = client.query(jax.random.PRNGKey(seed * 10007 + b), int(c))
+            qs.append(qu)
+            states.append(st)
+        ans = self.server.answer(jnp.stack(qs, axis=1))      # (m, B)
+        out = []
+        for b, st in enumerate(states):
+            col = np.asarray(client.recover(ans[:, b], st))
+            docs = chunking.deserialize_docs(col, self.db.emb_dim)
+            out.append(rerank.rerank(np.asarray(query_embs[b], np.float32),
+                                     docs, top_k))
+        return out

@@ -1,0 +1,144 @@
+"""SimplePIR-style single-server PIR over a chunk-transposed database.
+
+Protocol roles (honest-but-curious server):
+
+  offline   server:  hint H = D·A  (one-time; A from a public seed)
+            client:  downloads H (m×k u32) once
+  online    client:  qu = A·s + e + Δ·onehot(i)          — uplink n·4 bytes
+            server:  ans = D·qu (mod 2^32)               — ONE modular GEMV
+            client:  decode(ans − H·s) → column i of D   — the whole cluster
+
+The answer step is the system hot loop; it dispatches to the Pallas MXU
+kernel on TPU (`kernels/ops.modmatmul`).  Batched serving stacks queries from
+many clients into the column dimension, turning the GEMV into a GEMM.
+
+Beyond-paper: modulus-switched responses (q → 2^16) halve the downlink at a
+rounding-noise cost accounted in `lwe.noise_budget_ok`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lwe
+from repro.kernels import ops
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass(frozen=True)
+class PIRConfig:
+    m: int                       # DB rows (cluster content bytes / entry)
+    n: int                       # DB cols (number of clusters)
+    params: lwe.LWEParams
+    a_seed: int = 7              # public seed for the LWE matrix A
+    impl: str = "auto"           # kernel dispatch for the server GEMM
+
+    def __post_init__(self):
+        if not lwe.noise_budget_ok(self.params, self.n):
+            raise ValueError(
+                f"LWE noise budget violated for n={self.n}, p={self.params.p}")
+
+    @property
+    def uplink_bytes(self) -> int:
+        return self.n * 4
+
+    @property
+    def downlink_bytes(self) -> int:
+        qs = self.params.q_switch
+        per = 2 if (qs is not None and qs <= 1 << 16) else 4
+        return self.m * per
+
+    @property
+    def hint_bytes(self) -> int:
+        return self.m * self.params.k * 4
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+class PIRServer:
+    """Holds the plaintext DB (u8, entries < p) and answers encrypted queries."""
+
+    def __init__(self, cfg: PIRConfig, db: jax.Array):
+        assert db.shape == (cfg.m, cfg.n), (db.shape, (cfg.m, cfg.n))
+        assert db.dtype == jnp.uint8
+        self.cfg = cfg
+        self.db = db
+
+    def setup(self) -> jax.Array:
+        """Offline hint H = D·A ∈ Z_q^{m×k} (the heavy one-time GEMM)."""
+        a_mat = lwe.gen_public_matrix(self.cfg.a_seed, self.cfg.n,
+                                      self.cfg.params.k)
+        return ops.hint_gemm(self.db, a_mat, impl=self.cfg.impl)
+
+    def answer(self, qu: jax.Array) -> jax.Array:
+        """Online answer: D·qu mod 2^32.  qu: (n,) or (n, batch) uint32."""
+        ans = ops.modmatmul(self.db, qu, impl=self.cfg.impl)
+        if self.cfg.params.q_switch is not None:
+            ans = lwe.switch_modulus(ans, self.cfg.params.q_switch)
+        return ans
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClientQueryState:
+    secret: jax.Array            # s ∈ Z_q^k
+    index: int                   # queried column (kept client-side!)
+
+
+class PIRClient:
+    """Client side: query formulation and response decoding."""
+
+    def __init__(self, cfg: PIRConfig, hint: jax.Array):
+        assert hint.shape == (cfg.m, cfg.params.k)
+        self.cfg = cfg
+        self.hint = hint
+        self._a_mat = lwe.gen_public_matrix(cfg.a_seed, cfg.n, cfg.params.k)
+
+    def query(self, key: jax.Array, index: int) -> tuple[jax.Array,
+                                                          ClientQueryState]:
+        """Encrypt a one-hot selector for column `index`."""
+        k_sec, k_err = jax.random.split(key)
+        s = lwe.keygen(k_sec, self.cfg.params)
+        onehot = jnp.zeros((self.cfg.n,), U32).at[index].set(1)
+        qu = lwe.encrypt_vector(k_err, s, self._a_mat, onehot,
+                                self.cfg.params.delta, self.cfg.params.sigma)
+        return qu, ClientQueryState(secret=s, index=index)
+
+    def recover(self, ans: jax.Array, state: ClientQueryState) -> jax.Array:
+        """Decode the server answer into the plaintext column (m,) u8."""
+        p = self.cfg.params
+        if p.q_switch is not None:
+            vals = lwe.decode_switched(ans, self.hint, state.secret, p)
+        else:
+            rec = lwe.hint_strip(ans, self.hint, state.secret)
+            vals = lwe.decode(rec, p)
+        return vals.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Convenience: parameter selection for a corpus
+# ---------------------------------------------------------------------------
+
+def make_config(m: int, n: int, *, impl: str = "auto",
+                q_switch: int | None = 1 << 16) -> PIRConfig:
+    params = lwe.choose_params(n, want_p=256, q_switch=q_switch)
+    return PIRConfig(m=m, n=n, params=params, impl=impl)
+
+
+def server_flops(cfg: PIRConfig, batch: int = 1) -> int:
+    """int8-MAC count of one online answer (limb-decomposed)."""
+    return 2 * cfg.m * cfg.n * batch * lwe.Q_BITS // 8
+
+
+def server_bytes(cfg: PIRConfig) -> int:
+    """HBM traffic floor of one answer: the DB streamed once."""
+    return cfg.m * cfg.n

@@ -1,0 +1,105 @@
+"""CSR neighbor sampler for GNN minibatch training (GraphSAGE fanout).
+
+`minibatch_lg` requires a *real* sampler: seeds → fanout-[15,10] two-hop
+neighborhoods drawn from a CSR adjacency, emitted as fixed-size padded
+(src, dst, nodes) buffers so the jitted step sees static shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CSRGraph:
+    indptr: np.ndarray           # (N+1,)
+    indices: np.ndarray          # (E,)
+    n_nodes: int
+
+    @classmethod
+    def random(cls, seed: int, n_nodes: int, avg_degree: int) -> "CSRGraph":
+        rng = np.random.default_rng(seed)
+        degrees = rng.poisson(avg_degree, n_nodes).clip(1)
+        indptr = np.zeros(n_nodes + 1, np.int64)
+        np.cumsum(degrees, out=indptr[1:])
+        indices = rng.integers(0, n_nodes, int(indptr[-1]))
+        return cls(indptr=indptr, indices=indices.astype(np.int64),
+                   n_nodes=n_nodes)
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.indptr[u]:self.indptr[u + 1]]
+
+
+@dataclasses.dataclass
+class SampledSubgraph:
+    """Fixed-size padded subgraph; edge (src→dst) ids index `nodes`."""
+    nodes: np.ndarray            # (max_nodes,) global ids (padded w/ 0)
+    node_mask: np.ndarray        # (max_nodes,) bool
+    src: np.ndarray              # (max_edges,) local ids
+    dst: np.ndarray              # (max_edges,) local ids
+    edge_mask: np.ndarray        # (max_edges,) bool
+    seeds_local: np.ndarray      # (n_seeds,) local ids of the seed nodes
+
+
+def sample_fanout(graph: CSRGraph, seeds: np.ndarray, fanout: list[int],
+                  *, seed: int = 0,
+                  max_nodes: int | None = None,
+                  max_edges: int | None = None) -> SampledSubgraph:
+    """Multi-hop uniform fanout sampling (with replacement when deg>fanout)."""
+    rng = np.random.default_rng(seed)
+    n_seeds = len(seeds)
+    cap_nodes = n_seeds
+    cap_edges = 0
+    layer = n_seeds
+    for f in fanout:
+        layer *= f
+        cap_nodes += layer
+        cap_edges += layer
+    max_nodes = max_nodes or cap_nodes
+    max_edges = max_edges or cap_edges
+
+    local_of: dict[int, int] = {}
+    nodes: list[int] = []
+
+    def local(u: int) -> int:
+        if u not in local_of:
+            local_of[u] = len(nodes)
+            nodes.append(u)
+        return local_of[u]
+
+    for s in seeds:
+        local(int(s))
+    src_l, dst_l = [], []
+    frontier = [int(s) for s in seeds]
+    for f in fanout:
+        nxt = []
+        for u in frontier:
+            nbrs = graph.neighbors(u)
+            if len(nbrs) == 0:
+                continue
+            picks = rng.choice(nbrs, size=min(f, len(nbrs)),
+                               replace=len(nbrs) < f)
+            for v in picks:
+                v = int(v)
+                src_l.append(local(v))       # message flows v → u
+                dst_l.append(local(u))
+                nxt.append(v)
+        frontier = nxt
+    n_nodes, n_edges = len(nodes), len(src_l)
+    assert n_nodes <= max_nodes and n_edges <= max_edges, \
+        (n_nodes, max_nodes, n_edges, max_edges)
+
+    out_nodes = np.zeros(max_nodes, np.int64)
+    out_nodes[:n_nodes] = nodes
+    node_mask = np.zeros(max_nodes, bool)
+    node_mask[:n_nodes] = True
+    src = np.zeros(max_edges, np.int32)
+    dst = np.zeros(max_edges, np.int32)
+    emask = np.zeros(max_edges, bool)
+    src[:n_edges] = src_l
+    dst[:n_edges] = dst_l
+    emask[:n_edges] = True
+    return SampledSubgraph(nodes=out_nodes, node_mask=node_mask, src=src,
+                           dst=dst, edge_mask=emask,
+                           seeds_local=np.arange(n_seeds, dtype=np.int32))

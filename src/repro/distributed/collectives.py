@@ -1,0 +1,96 @@
+"""Explicit shard_map building blocks for the model-parallel hot paths.
+
+pjit+constraints handles most of the framework; these are the three places
+where we want the communication pattern pinned down rather than inferred:
+
+  * ``sharded_embedding_lookup`` — row-sharded tables: local masked gather +
+    one psum (the classic model-parallel embedding; avoids XLA materializing
+    an all-gathered table).
+  * ``split_s_decode_attention`` — flash-decoding: KV cache sharded along
+    sequence; per-shard online-softmax partials combined with pmax/psum.
+  * ``ring_psum`` — reduce via collective_permute ring, used by the gradient
+    compression path so the wire format stays int8 end-to-end.
+
+Each has an 8-device subprocess test (tests/test_sharded.py) asserting
+bitwise/allclose equality with the single-device reference.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def sharded_embedding_lookup(mesh: Mesh, axis: str):
+    """Returns lookup(table, idx) with table row-sharded over `axis`.
+
+    table: (V, d) sharded P(axis, None); idx: (B,) replicated → (B, d)
+    replicated.  Each shard gathers only its local rows; one psum combines.
+    """
+    def local(table_shard, idx):
+        size = table_shard.shape[0]
+        lo = jax.lax.axis_index(axis) * size
+        local_idx = idx - lo
+        ok = (local_idx >= 0) & (local_idx < size)
+        safe = jnp.clip(local_idx, 0, size - 1)
+        rows = jnp.take(table_shard, safe, axis=0)
+        rows = jnp.where(ok[:, None], rows, 0)
+        return jax.lax.psum(rows, axis)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(axis, None), P()),
+                     out_specs=P())
+
+
+def split_s_decode_attention(mesh: Mesh, axis: str, *, scale: float):
+    """Returns attn(q, k, v, lengths) with K/V sharded on the seq axis.
+
+    q: (B, H, hd) replicated; k/v: (B, T, H, hd) sharded P(None, axis);
+    lengths: (B,) replicated.  Per-shard online softmax partials (m, l, o)
+    are combined with pmax/psum — numerically identical to global softmax.
+    """
+    def local(q, k_shard, v_shard, lengths):
+        t_local = k_shard.shape[1]
+        lo = jax.lax.axis_index(axis) * t_local
+        s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                       k_shard.astype(jnp.float32)) * scale
+        tpos = lo + jnp.arange(t_local)
+        mask = tpos[None, None, :] < lengths[:, None, None]
+        s = jnp.where(mask, s, -1e30)
+        m_loc = jnp.max(s, axis=-1)                          # (B, H)
+        m_glob = jax.lax.pmax(m_loc, axis)
+        p = jnp.exp(s - m_glob[..., None])
+        l_loc = jnp.sum(p, axis=-1)
+        o_loc = jnp.einsum("bht,bthd->bhd", p,
+                           v_shard.astype(jnp.float32))
+        l_glob = jax.lax.psum(l_loc, axis)
+        o_glob = jax.lax.psum(o_loc, axis)
+        return o_glob / jnp.maximum(l_glob[..., None], 1e-30)
+
+    return shard_map(local, mesh=mesh,
+                     in_specs=(P(), P(None, axis), P(None, axis), P()),
+                     out_specs=P())
+
+
+def ring_psum(mesh: Mesh, axis: str):
+    """All-reduce built from collective_permute (explicit ring; int-friendly).
+
+    x sharded P(axis, ...) — each device's block is its contribution; every
+    device ends with the elementwise sum of all blocks.
+    """
+    n = mesh.shape[axis]
+
+    def local(x):
+        def body(i, val):
+            acc, buf = val
+            buf = jax.lax.ppermute(
+                buf, axis, [(j, (j + 1) % n) for j in range(n)])
+            return acc + buf, buf
+        acc, _ = jax.lax.fori_loop(0, n - 1, body, (x, x))
+        return acc
+
+    return shard_map(local, mesh=mesh, in_specs=P(axis, None),
+                     out_specs=P(axis, None), check_rep=False)

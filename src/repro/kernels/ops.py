@@ -1,0 +1,93 @@
+"""Public jit'd wrappers around the modular-GEMM kernels.
+
+``modmatmul`` is the single entry point used by the PIR protocol (online
+answer, offline hint GEMM) and by the Tiptoe-style baseline (private scoring).
+It handles shape padding, implementation dispatch and matvec convenience:
+
+  impl="pallas"  — the Pallas TPU kernel (interpret=True off-TPU, for tests)
+  impl="xla"     — the exact uint32 XLA matmul (production CPU path; oracle)
+  impl="auto"    — pallas on TPU, xla elsewhere
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.modmatmul import modmatmul_pallas
+
+U32 = jnp.uint32
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def modmatmul(db: jax.Array, q: jax.Array, *, impl: str = "auto",
+              block: tuple[int, int, int] = (256, 512, 128)) -> jax.Array:
+    """Exact (db @ q) mod 2^32.
+
+    db: (m, n) uint8 (entries < plaintext modulus p ≤ 256).
+    q:  (n,) or (n, b) uint32.
+    Returns uint32 of shape (m,) or (m, b).
+    """
+    if db.dtype != jnp.uint8:
+        raise TypeError(f"db must be uint8, got {db.dtype}")
+    if q.dtype != U32:
+        raise TypeError(f"q must be uint32, got {q.dtype}")
+
+    was_vec = q.ndim == 1
+    q2 = q[:, None] if was_vec else q
+
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+
+    if impl == "xla":
+        out = ref.modmatmul_ref(db, q2)
+    elif impl == "pallas":
+        bm, bn, bb = block
+        m, n = db.shape
+        dbp = _pad_to(_pad_to(db, 0, bm), 1, bn)
+        qp = _pad_to(_pad_to(q2, 0, bn), 1, bb)
+        interpret = jax.default_backend() != "tpu"
+        out = modmatmul_pallas(dbp, qp, bm=bm, bn=bn, bb=bb,
+                               interpret=interpret)
+        out = out[:m, :q2.shape[1]]
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+
+    return out[:, 0] if was_vec else out
+
+
+def hint_gemm(db: jax.Array, a_mat: jax.Array, *, impl: str = "auto",
+              block: tuple[int, int, int] = (256, 512, 128)) -> jax.Array:
+    """Offline hint H = D · A (mod 2^32); same kernel, many query columns."""
+    return modmatmul(db, a_mat, impl=impl, block=block)
+
+
+def kmeans_assign(x: jax.Array, c: jax.Array, *, impl: str = "auto",
+                  block: tuple[int, int] = (256, 512)):
+    """Fused nearest-centroid assignment: (assign (N,) i32, min_d2 (N,))."""
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return ref.kmeans_assign_ref(x, c)
+    from repro.kernels.kmeans_assign import kmeans_assign_pallas
+    bn, bk = block
+    n, k = x.shape[0], c.shape[0]
+    xp = _pad_to(x, 0, bn)
+    cp = _pad_to(c, 0, bk)
+    if cp.shape[0] != k:
+        # padded centroids must never win the argmin
+        pad = cp.shape[0] - k
+        cp = cp.at[k:].set(jnp.full((pad, c.shape[1]), 1e30, c.dtype))
+    interpret = jax.default_backend() != "tpu"
+    assign, d2 = kmeans_assign_pallas(xp, cp, bn=bn, bk=bk,
+                                      interpret=interpret)
+    return assign[:n], d2[:n]

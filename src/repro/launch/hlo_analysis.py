@@ -1,0 +1,254 @@
+"""Structural analysis of compiled (post-SPMD) HLO text.
+
+``jax`` exposes `compiled.cost_analysis()`, but XLA's HloCostAnalysis counts
+while-loop bodies ONCE — a scan over 61 transformer blocks under-reports
+FLOPs by 61× (verified empirically; see tests/test_hlo_analysis.py).  This
+module parses the HLO text into computations, builds the call graph
+(while bodies/conditions, fusions, to_apply), extracts static trip counts
+from loop-condition constants, and accumulates with multiplicity:
+
+  * dot FLOPs (per dtype)        — 2·prod(result)·prod(contracting dims)
+  * dot operand/result bytes     — an HBM-traffic floor (weights must stream)
+  * collective wire bytes        — ring formulas per op type:
+        all-reduce          2·S·(g−1)/g
+        all-gather          S_out·(g−1)/g
+        reduce-scatter      S_in·(g−1)/g
+        all-to-all          S·(g−1)/g
+        collective-permute  S
+    with g = replica-group size, S = per-device bytes (post-SPMD shapes are
+    local, so these are per-device wire volumes).
+
+Elementwise FLOPs are ignored (≤1% for these architectures — documented).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shapes(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    """All `dtype[d0,d1,...]` shapes in a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims else ()
+        out.append((dtype, shape))
+    return out
+
+
+def _nbytes(shapes) -> int:
+    return sum(_DTYPE_BYTES[d] * int(math.prod(s) if s else 1)
+               for d, s in shapes)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    shapes: dict         # instr name -> list[(dtype, shape)]
+    dots: list           # (result_shapes, lhs_name, contracting_sizes, dtype)
+    collectives: list    # (kind, result_bytes, operand_bytes, group_size)
+    whiles: list         # (body_name, cond_name)
+    calls: list          # other referenced computations (×1)
+    constants: list      # integer constants seen (trip-count extraction)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), {}, [], [], [], [], [])
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        # result type = text before the opcode
+        shapes = _parse_shapes(rest.split("(")[0]) if "(" in rest else \
+            _parse_shapes(rest)
+        cur.shapes[name] = shapes
+
+        for const_m in re.finditer(r"constant\((\d+)\)", rest):
+            cur.constants.append(int(const_m.group(1)))
+
+        opcode_m = re.search(r"\s([a-z][a-z0-9\-_]*)\(", " " + rest)
+        opcode = opcode_m.group(1) if opcode_m else ""
+        if opcode.startswith("dot_general") or opcode == "dot_general":
+            opcode = "dot"
+
+        if opcode == "dot":
+            args_m = re.search(r"dot\(([^)]*)\)", rest)
+            operands = [a.strip().lstrip("%") for a in
+                        args_m.group(1).split(",")] if args_m else []
+            lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+            cdims = [int(x) for x in lhs_c.group(1).split(",")] if (
+                lhs_c and lhs_c.group(1)) else []
+            cur.dots.append((shapes, operands, cdims))
+        elif opcode in _COLLECTIVES or any(
+                rest.startswith(c) or f" {c}(" in rest
+                for c in _COLLECTIVES):
+            kind = next((c for c in _COLLECTIVES if f"{c}(" in rest), None)
+            if kind:
+                g = _group_size(rest)
+                args_m = re.search(re.escape(kind) + r"\(([^)]*)\)", rest)
+                operands = [a.strip().lstrip("%") for a in
+                            args_m.group(1).split(",")] if args_m else []
+                op_bytes = sum(_nbytes(cur.shapes.get(o, []))
+                               for o in operands)
+                cur.collectives.append((kind, _nbytes(shapes), op_bytes, g))
+        if "while(" in rest:
+            b = re.search(r"body=%?([\w.\-]+)", rest)
+            c = re.search(r"condition=%?([\w.\-]+)", rest)
+            if b and c:
+                cur.whiles.append((b.group(1), c.group(1)))
+        for ref in re.finditer(
+                r"(?:calls|to_apply|true_computation|false_computation)"
+                r"=%?([\w.\-]+)", rest):
+            cur.calls.append(ref.group(1))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", rest)
+        if bm:
+            cur.calls.extend(x.strip().lstrip("%")
+                             for x in bm.group(1).split(","))
+    return comps
+
+
+def _group_size(rest: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]*)\}", rest)
+    if m and m.group(1):
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _dot_flops_bytes(comp: Computation) -> tuple[dict, int]:
+    flops = defaultdict(float)
+    traffic = 0
+    for shapes, operands, cdims in comp.dots:
+        if not shapes:
+            continue
+        dtype, rshape = shapes[0]
+        out_elems = math.prod(rshape) if rshape else 1
+        k = 1
+        lhs = comp.shapes.get(operands[0], []) if operands else []
+        if lhs and cdims:
+            _, lshape = lhs[0]
+            for cd in cdims:
+                if cd < len(lshape):
+                    k *= lshape[cd]
+        flops[dtype] += 2.0 * out_elems * k
+        # HBM traffic floor: both operands + result stream at least once
+        traffic += _nbytes(shapes)
+        for o in operands[:2]:
+            traffic += _nbytes(comp.shapes.get(o, []))
+    return flops, traffic
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None or not cond.constants:
+        return 1
+    return max(1, max(cond.constants))
+
+
+@dataclasses.dataclass
+class HLOStats:
+    dot_flops: dict[str, float]        # per dtype, per device, trip-scaled
+    dot_traffic_bytes: float           # HBM floor per device
+    collective_bytes: dict[str, float]  # wire bytes per device by op kind
+    collective_counts: dict[str, int]
+    n_whiles: int
+    max_trip: int
+
+    @property
+    def total_flops(self) -> float:
+        return sum(self.dot_flops.values())
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(text: str) -> HLOStats:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    flops: dict[str, float] = defaultdict(float)
+    traffic = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, int] = defaultdict(int)
+    n_whiles = 0
+    max_trip = 1
+    seen_stack: list[str] = []
+
+    def visit(comp: Computation, mult: float):
+        nonlocal traffic, n_whiles, max_trip
+        if comp.name in seen_stack:       # recursion guard
+            return
+        seen_stack.append(comp.name)
+        f, t = _dot_flops_bytes(comp)
+        for k, v in f.items():
+            flops[k] += v * mult
+        traffic += t * mult
+        for kind, out_b, in_b, g in comp.collectives:
+            if g <= 1:
+                continue
+            if kind == "all-reduce":
+                wire = 2.0 * out_b * (g - 1) / g
+            elif kind == "all-gather":
+                wire = out_b * (g - 1) / g
+            elif kind == "reduce-scatter":
+                wire = max(in_b, out_b * g) * (g - 1) / g
+            elif kind == "all-to-all":
+                wire = out_b * (g - 1) / g
+            else:                          # collective-permute
+                wire = out_b
+            coll_bytes[kind] += wire * mult
+            coll_counts[kind] += int(round(mult))
+        for body, cond in comp.whiles:
+            trip = _trip_count(comps, cond)
+            n_whiles += 1
+            max_trip = max(max_trip, trip)
+            if body in comps:
+                visit(comps[body], mult * trip)
+        for callee in comp.calls:
+            if callee in comps:
+                visit(comps[callee], mult)
+        seen_stack.pop()
+
+    visit(entry, 1.0)
+    return HLOStats(dot_flops=dict(flops), dot_traffic_bytes=traffic,
+                    collective_bytes=dict(coll_bytes),
+                    collective_counts=dict(coll_counts),
+                    n_whiles=n_whiles, max_trip=max_trip)

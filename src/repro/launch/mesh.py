@@ -1,0 +1,20 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (smoke tests must keep seeing 1 CPU device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod; the multi-pod mesh adds a leading pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (possibly fake) local devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))

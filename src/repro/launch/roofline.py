@@ -1,0 +1,192 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e constants).
+
+    compute    = dot_FLOPs_per_device / peak            (int8 peak for PIR)
+    memory     = HBM_traffic_floor_per_device / HBM_bw
+    collective = wire_bytes_per_device / link_bw
+
+All inputs are PER DEVICE (post-SPMD HLO shapes are local), so no division
+by chip count is needed.  MODEL_FLOPS is the analytic useful work (6·N_active·D
+for LMs; closed forms per family below); MODEL/HLO is the useful-compute
+ratio (captures remat recompute, capacity padding, causal waste, etc.).
+
+Caveat recorded in every table: the CPU host backend canonicalizes bf16→f32
+before SPMD partitioning, so bf16 activation traffic/collectives are counted
+at 4 bytes; TPU-native wire volume for those tensors is ~0.5× ("adj" column).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_BF16 = 197e12          # v5e bf16 FLOP/s per chip
+PEAK_INT8 = 394e12          # v5e int8 OPS per chip (PIR kernel)
+HBM_BW = 819e9              # bytes/s per chip
+LINK_BW = 50e9              # bytes/s per ICI link
+
+BF16_ADJ = 0.5              # CPU-backend bf16→f32 canonicalization correction
+
+
+def model_flops(rec: dict) -> float:
+    """Analytic useful FLOPs for the whole step, GLOBAL (all chips)."""
+    from repro.configs import base as cfgbase
+    arch = cfgbase.get(rec["arch"])
+    shape = arch.shapes[rec["shape"]]
+    cfg = arch.model(rec["shape"])
+    fam = rec["family"]
+    if fam == "lm":
+        return cfgbase.lm_flops_per_step(cfg, shape)
+    if fam == "pir":
+        b = shape.meta.get("batch", cfg.lwe_k)
+        return 2.0 * cfg.m * cfg.n * b * 4          # int8 ops, 4 limbs
+    if fam == "gnn":
+        m = shape.meta
+        d = cfg.d_hidden
+        if rec["shape"] == "molecule":
+            pairs = m["batch"] * m["n_nodes"] ** 2
+            per_edge = 2 * (cfg.n_rbf * d + d * d)
+            f = pairs * per_edge + m["batch"] * m["n_nodes"] * 6 * d * d
+        else:
+            per_edge = 2 * (cfg.n_rbf * d + d * d) + 2 * d
+            per_node = 2 * 2 * d * d + 2 * d * (d // 2)
+            f = (m.get("n_edges_raw", m["n_edges"]) * per_edge
+                 + m["n_nodes"] * per_node) * cfg.n_interactions
+        return 3.0 * f                               # train: fwd+bwd
+    if fam == "recsys":
+        m = shape.meta
+        if shape.kind == "retrieval" and cfg.kind == "mind":
+            # interests extracted ONCE; per-candidate work is K·d dots
+            return (_recsys_fwd_flops(cfg)
+                    + 2.0 * cfg.n_interests * cfg.embed_dim
+                    * m["n_candidates"])
+        B = m.get("n_candidates", m.get("batch", 1))
+        f = _recsys_fwd_flops(cfg)
+        mult = 3.0 if shape.kind == "train" else 1.0
+        total = mult * f * B
+        if cfg.kind == "mind" and shape.kind == "train":
+            # in-batch sampled softmax: the (B, B) score GEMM dominates
+            total += mult * 2.0 * B * B * cfg.embed_dim
+        return total
+    return 0.0
+
+
+def _mlp_flops(sizes) -> float:
+    return sum(2.0 * sizes[i] * sizes[i + 1] for i in range(len(sizes) - 1))
+
+
+def _recsys_fwd_flops(cfg) -> float:
+    F, d = cfg.n_sparse, cfg.embed_dim
+    if cfg.kind == "dlrm":
+        inter = 2.0 * (F + 1) ** 2 * d
+        top_in = cfg.bot_mlp[-1] + (F + 1) * F // 2
+        return (_mlp_flops(cfg.bot_mlp) + inter
+                + _mlp_flops([top_in] + list(cfg.top_mlp)))
+    if cfg.kind == "dcn":
+        d_in = cfg.n_dense + F * d
+        return (cfg.n_cross_layers * 2.0 * d_in * d_in
+                + _mlp_flops([d_in] + list(cfg.top_mlp))
+                + 2.0 * (d_in + cfg.top_mlp[-1]))
+    if cfg.kind == "xdeepfm":
+        hs = [F] + list(cfg.cin_layers)
+        cin = sum(2.0 * hs[i] * F * d * hs[i + 1] for i in range(len(hs) - 1))
+        return cin + _mlp_flops([F * d] + list(cfg.dnn_mlp) + [1])
+    if cfg.kind == "mind":
+        L, K = cfg.hist_len, cfg.n_interests
+        return (2.0 * L * d * d                       # bilinear
+                + cfg.capsule_iters * 4.0 * L * K * d + 2.0 * K * d)
+    return 0.0
+
+
+def terms(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    fam = rec["family"]
+    n_dev = rec["n_devices"]
+    flops_dev = sum(hlo["dot_flops_per_device"].values())
+    int_flops = sum(v for k, v in hlo["dot_flops_per_device"].items()
+                    if k.startswith(("u", "s")))
+    peak = PEAK_INT8 if (fam == "pir" or int_flops > flops_dev / 2) \
+        else PEAK_BF16
+    if fam == "pir":
+        flops_dev *= 4.0      # u32 dot lowers as 4 int8 limb GEMMs on MXU
+
+    compute = flops_dev / peak
+    memory = hlo["dot_traffic_bytes_per_device"] / HBM_BW
+    collective = sum(hlo["collective_bytes_per_device"].values()) / LINK_BW
+
+    mf = model_flops(rec)
+    mf_dev = mf / n_dev
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    out = dict(
+        compute_s=compute, memory_s=memory, collective_s=collective,
+        peak_used="int8" if peak == PEAK_INT8 else "bf16",
+        model_flops_global=mf, useful_ratio=useful,
+        peak_gib=rec["memory"]["peak_per_device_bytes"] / 2**30,
+    )
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    out["bottleneck"] = dom[0]
+    out["step_s_lower_bound"] = max(compute, memory, collective)
+    # roofline fraction: useful work at peak vs achievable step time
+    ideal = mf_dev / peak
+    out["roofline_frac"] = (ideal / out["step_s_lower_bound"]
+                            if out["step_s_lower_bound"] else 0.0)
+    # bf16-adjusted (TPU-native) collective/memory estimate
+    out["memory_s_adj"] = memory * (BF16_ADJ if fam != "pir" else 1.0)
+    out["collective_s_adj"] = collective * (BF16_ADJ if fam != "pir"
+                                            else 1.0)
+    out["step_s_adj"] = max(compute, out["memory_s_adj"],
+                            out["collective_s_adj"])
+    out["roofline_frac_adj"] = (ideal / out["step_s_adj"]
+                                if out["step_s_adj"] else 0.0)
+    return out
+
+
+def load_records(d: str) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict], mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | peak GiB | compute s | memory s | coll s | "
+        "bottleneck | useful | roofline | roofline(adj) |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        if rec["mesh"] != mesh or not rec.get("ok") or rec.get("tag"):
+            continue
+        t = terms(rec)
+        lines.append(
+            f"| {rec['arch']} | {rec['shape']} | {t['peak_gib']:.1f} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {t['bottleneck']} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_frac']:.2f} "
+            f"| {t['roofline_frac_adj']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments",
+        "dryrun"))
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(table(recs, args.mesh))
+    bad = [r for r in recs if not r.get("ok")]
+    if bad:
+        print(f"\n{len(bad)} FAILED cells:")
+        for r in bad:
+            print(" ", r["arch"], r["shape"], r["mesh"],
+                  r.get("error", "")[:100])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""PIR serving driver: deadline-batched private retrieval.
+
+Production posture: requests queue; a batch is cut when either `max_batch`
+accumulate or the oldest request reaches `deadline_ms` (p99-latency control —
+the serving-side straggler mitigation).  All queries in a batch become ONE
+modular GEMM (ans = D·[q_1 … q_B]), which is the regime where the TPU kernel
+is MXU-bound (EXPERIMENTS §Perf-A).
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 2000 --requests 64
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    query_emb: np.ndarray
+    t_arrival: float
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    top: list
+    t_done: float
+    batch_size: int
+
+
+class DeadlineBatcher:
+    """Cut a batch at max_batch or when the head request ages past deadline."""
+
+    def __init__(self, *, max_batch: int = 64, deadline_ms: float = 20.0):
+        self.max_batch = max_batch
+        self.deadline_ms = deadline_ms
+        self.queue: deque[Request] = deque()
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def ready(self, now: float) -> bool:
+        if not self.queue:
+            return False
+        if len(self.queue) >= self.max_batch:
+            return True
+        age_ms = (now - self.queue[0].t_arrival) * 1e3
+        return age_ms >= self.deadline_ms
+
+    def cut(self) -> list[Request]:
+        batch = []
+        while self.queue and len(batch) < self.max_batch:
+            batch.append(self.queue.popleft())
+        return batch
+
+
+class PIRServeLoop:
+    def __init__(self, system, *, max_batch: int = 64,
+                 deadline_ms: float = 20.0,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.system = system
+        self.batcher = DeadlineBatcher(max_batch=max_batch,
+                                       deadline_ms=deadline_ms)
+        self.clock = clock
+        self.responses: list[Response] = []
+
+    def submit(self, rid: int, query_emb: np.ndarray):
+        self.batcher.submit(Request(rid, query_emb, self.clock()))
+
+    def tick(self) -> int:
+        """Serve one batch if ready; returns number of requests served."""
+        now = self.clock()
+        if not self.batcher.ready(now):
+            return 0
+        batch = self.batcher.cut()
+        embs = np.stack([r.query_emb for r in batch])
+        results = self.system.query_batch(embs, top_k=5,
+                                          seed=int(now * 1e3) % 99991)
+        t = self.clock()
+        for req, top in zip(batch, results):
+            self.responses.append(Response(req.rid, top, t, len(batch)))
+        return len(batch)
+
+    def drain(self):
+        while self.batcher.queue:
+            self.tick()
+            # force the deadline on the final partial batch
+            self.batcher.deadline_ms = 0.0
+
+
+def main():  # pragma: no cover - exercised by examples/tests
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=2000)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--deadline-ms", type=float, default=50.0)
+    args = ap.parse_args()
+
+    from repro.core import pipeline
+    from repro.data import corpus as corpus_lib
+
+    corp = corpus_lib.make_corpus(0, args.docs, emb_dim=64, n_topics=24)
+    system = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                         n_clusters=24, impl="xla")
+    loop = PIRServeLoop(system, max_batch=args.max_batch,
+                        deadline_ms=args.deadline_ms)
+    rng = np.random.default_rng(0)
+    t0 = time.perf_counter()
+    for rid in range(args.requests):
+        q = corp.embeddings[rng.integers(0, args.docs)]
+        loop.submit(rid, q)
+        loop.tick()
+    loop.drain()
+    dt = time.perf_counter() - t0
+    lat = [r.t_done - t0 for r in loop.responses]
+    sizes = [r.batch_size for r in loop.responses]
+    print(f"served {len(loop.responses)} requests in {dt:.2f}s; "
+          f"mean batch {np.mean(sizes):.1f}; "
+          f"p50/p99 completion {np.percentile(lat, 50):.2f}/"
+          f"{np.percentile(lat, 99):.2f}s")
+
+
+if __name__ == "__main__":
+    main()

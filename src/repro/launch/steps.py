@@ -1,0 +1,429 @@
+"""Uniform step builders per family: one StepBundle per (arch × shape).
+
+A StepBundle carries everything the dry-run / smoke tests / drivers need:
+the step callable, state + input ShapeDtypeStruct trees, logical-axis trees
+(→ PartitionSpecs via distributed/sharding), and a real initializer for
+reduced configs.  Full-size state is ONLY ever expressed as specs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.distributed import sharding
+from repro.models import recsys as rec
+from repro.models import schnet as sch
+from repro.models import transformer as tf
+from repro.optim import optimizers as opt_lib
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    kind: str
+    fn: Callable                  # (state, batch) → (new_state, out) | out
+    state_spec: Any               # pytree of ShapeDtypeStruct
+    state_axes: Any               # logical-axes tree (tuples)
+    batch_axes: dict[str, tuple]
+    rules: dict[str, Any]         # mesh-axis rule table (single-pod default)
+    init_state: Callable[[jax.Array], Any] | None = None
+    donate_state: bool = True
+
+    def rules_for(self, multi_pod: bool) -> dict[str, Any]:
+        return self._rules_builder(multi_pod)
+
+    _rules_builder: Callable[[bool], dict] = None  # set by make_bundle
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state axes
+# ---------------------------------------------------------------------------
+
+def _adamw_axes(param_axes):
+    return {"mu": param_axes, "nu": param_axes, "step": ()}
+
+
+def _adafactor_axes(param_axes, param_spec, min_dim=128):
+    def one(ax, spec):
+        if spec.ndim >= 2 and spec.shape[-1] >= min_dim and \
+                spec.shape[-2] >= min_dim:
+            return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+        return {"v": ax}
+    return {"v": jax.tree.map(one, param_axes, param_spec,
+                              is_leaf=lambda v: isinstance(v, tuple)),
+            "step": ()}
+
+
+def pick_optimizer(cfg) -> opt_lib.Optimizer:
+    """Adafactor for ≥100B configs (state must fit), AdamW otherwise."""
+    if getattr(cfg, "moe", None) is not None and cfg.d_model >= 5000:
+        return opt_lib.adafactor(1e-2)
+    return opt_lib.adamw(3e-4, weight_decay=0.1)
+
+
+def _opt_axes(optimizer, param_axes, param_spec):
+    if optimizer.name == "adafactor":
+        return _adafactor_axes(param_axes, param_spec)
+    if optimizer.name == "adamw":
+        return _adamw_axes(param_axes)
+    return {"step": ()}
+
+
+# ---------------------------------------------------------------------------
+# LM bundles
+# ---------------------------------------------------------------------------
+
+def _lm_train(arch, shape, cfg) -> StepBundle:
+    optimizer = pick_optimizer(cfg)
+    p_axes = tf.param_axes(cfg)
+    p_spec = tf.param_spec(cfg)
+
+    n_mb = cfg.n_microbatch
+
+    def grad_fn(p, mb):
+        return jax.value_and_grad(
+            lambda p: tf.lm_loss(p, mb, cfg), has_aux=True)(p)
+
+    def step(state, batch):
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(state["params"], batch)
+        else:
+            # gradient accumulation: activations live for ONE microbatch;
+            # grads accumulate in param dtype, sharded like params
+            B = batch["tokens"].shape[0]
+            mbs = jax.tree.map(
+                lambda x: x.reshape(n_mb, B // n_mb, *x.shape[1:]), batch)
+
+            def mb_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state["params"], mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                              state["params"])
+            (grads, loss), _ = jax.lax.scan(
+                mb_step, (g0, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss = loss / n_mb
+            metrics = {}
+        new_p, new_opt = optimizer.update(grads, state["opt"],
+                                          state["params"])
+        return ({"params": new_p, "opt": new_opt},
+                {"loss": loss, **metrics})
+
+    def init_state(key):
+        params = tf.init(key, cfg)
+        return {"params": params, "opt": optimizer.init(params)}
+
+    opt_spec = jax.eval_shape(optimizer.init, p_spec)
+    # dense ≤8B models: pure ZeRO-3 over all 256/512 chips (TP activation
+    # wire would dominate 20×); MoE giants keep TP+SP+EP
+    fsdp_only = cfg.moe is None
+    rules_builder = functools.partial(sharding.lm_train_rules,
+                                      fsdp_only=fsdp_only)
+    b = StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="train", fn=step,
+        state_spec={"params": p_spec, "opt": opt_spec},
+        state_axes={"params": p_axes,
+                    "opt": _opt_axes(optimizer, p_axes, p_spec)},
+        batch_axes={"tokens": ("batch", None), "labels": ("batch", None)},
+        rules=rules_builder(False), init_state=init_state)
+    b._rules_builder = rules_builder
+    return b
+
+
+def _lm_prefill(arch, shape, cfg) -> StepBundle:
+    B, S = shape.meta["global_batch"], shape.meta["seq_len"]
+    p_axes = tf.param_axes(cfg)
+
+    def step(params, batch):
+        cache = tf.init_cache(cfg, B, S)
+        logits, cache = tf.prefill(params, batch["tokens"], cache, cfg)
+        return logits, cache
+
+    b = StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="prefill", fn=step,
+        state_spec=tf.param_spec(cfg), state_axes=p_axes,
+        batch_axes={"tokens": ("batch", None)},
+        rules=sharding.lm_decode_rules(False),
+        init_state=lambda key: tf.init(key, cfg), donate_state=False)
+    b._rules_builder = lambda mp: sharding.lm_decode_rules(mp)
+    return b
+
+
+def _lm_decode(arch, shape, cfg) -> StepBundle:
+    B, S = shape.meta["global_batch"], shape.meta["seq_len"]
+    p_axes = tf.param_axes(cfg)
+    long_ctx = shape.name == "long_500k"
+
+    def step(state, batch):
+        logits, new_cache = tf.decode_step(
+            state["params"], state["cache"], batch["tokens"],
+            batch["lengths"], cfg)
+        return {"params": state["params"], "cache": new_cache}, logits
+
+    def rules_builder(mp: bool):
+        r = sharding.lm_decode_rules(mp)
+        if long_ctx:
+            # B=1: split-S over every axis, replicate batch
+            r["cache_seq"] = (("pod", "data", "model") if mp
+                              else ("data", "model"))
+            r["batch"] = None
+            r["kv_heads"] = None
+        else:
+            r["cache_seq"] = "model"
+            r["kv_heads"] = None
+        return r
+
+    def init_state(key):
+        return {"params": tf.init(key, cfg),
+                "cache": tf.init_cache(cfg, B, S)}
+
+    b = StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="decode", fn=step,
+        state_spec={"params": tf.param_spec(cfg),
+                    "cache": tf.cache_spec(cfg, B, S)},
+        state_axes={"params": p_axes, "cache": tf.cache_axes(cfg)},
+        batch_axes={"tokens": ("batch",), "lengths": ("batch",)},
+        rules=rules_builder(False), init_state=init_state)
+    b._rules_builder = rules_builder
+    return b
+
+
+# ---------------------------------------------------------------------------
+# GNN bundles
+# ---------------------------------------------------------------------------
+
+def _gnn_train(arch, shape, cfg) -> StepBundle:
+    optimizer = opt_lib.adamw(1e-3)
+    p_axes = sch.param_axes(cfg)
+    p_spec = jax.eval_shape(lambda k: sch.init(k, cfg), jax.random.PRNGKey(0))
+    loss_fn = (sch.molecule_loss if cfg.mode == "molecule"
+               else sch.graph_loss)
+
+    def step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg))(state["params"])
+        new_p, new_opt = optimizer.update(grads, state["opt"],
+                                          state["params"])
+        return {"params": new_p, "opt": new_opt}, {"loss": loss}
+
+    def init_state(key):
+        params = sch.init(key, cfg)
+        return {"params": params, "opt": optimizer.init(params)}
+
+    if cfg.mode == "molecule":
+        batch_axes = {"z": ("batch", None), "pos": ("batch", None, None),
+                      "energy": ("batch",)}
+    else:
+        batch_axes = {"node_feat": ("nodes", None), "src": ("edges",),
+                      "dst": ("edges",), "edge_dist": ("edges",),
+                      "labels": ("nodes",), "label_mask": ("nodes",)}
+    opt_spec = jax.eval_shape(optimizer.init, p_spec)
+    b = StepBundle(
+        name=f"{arch.name}:{shape.name}", kind="train", fn=step,
+        state_spec={"params": p_spec, "opt": opt_spec},
+        state_axes={"params": p_axes,
+                    "opt": _opt_axes(optimizer, p_axes, p_spec)},
+        batch_axes=batch_axes, rules=sharding.gnn_rules(False),
+        init_state=init_state)
+    b._rules_builder = sharding.gnn_rules
+    return b
+
+
+# ---------------------------------------------------------------------------
+# RecSys bundles
+# ---------------------------------------------------------------------------
+
+def _recsys_bundle(arch, shape, cfg) -> StepBundle:
+    p_axes = rec.param_axes(cfg)
+    p_spec = jax.eval_shape(lambda k: rec.init(k, cfg), jax.random.PRNGKey(0))
+
+    if shape.kind == "train":
+        optimizer = opt_lib.adamw(1e-3)
+
+        def step(state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: rec.loss(p, batch, cfg))(state["params"])
+            new_p, new_opt = optimizer.update(grads, state["opt"],
+                                              state["params"])
+            return {"params": new_p, "opt": new_opt}, {"loss": loss}
+
+        def init_state(key):
+            params = rec.init(key, cfg)
+            return {"params": params, "opt": optimizer.init(params)}
+
+        state_spec = {"params": p_spec,
+                      "opt": jax.eval_shape(optimizer.init, p_spec)}
+        state_axes = {"params": p_axes,
+                      "opt": _opt_axes(optimizer, p_axes, p_spec)}
+        donate = True
+    else:
+        if shape.kind == "retrieval":
+            def step(params, batch):
+                user = {k: v for k, v in batch.items() if k != "candidates"}
+                return rec.retrieval_score(params, user,
+                                           batch["candidates"], cfg)
+        else:
+            def step(params, batch):
+                return rec.serve(params, batch, cfg)
+        state_spec, state_axes = p_spec, p_axes
+        init_state = lambda key: rec.init(key, cfg)  # noqa: E731
+        donate = False
+
+    specs = cfgbase.recsys_input_specs(cfg, shape)
+    batch_axes = {}
+    for k, v in specs.items():
+        if k == "candidates":
+            batch_axes[k] = ("candidates",)
+        elif v.ndim >= 1 and v.shape[0] == shape.meta.get("batch", -1) \
+                and shape.kind != "retrieval":
+            batch_axes[k] = ("batch",) + (None,) * (v.ndim - 1)
+        else:
+            batch_axes[k] = (None,) * v.ndim
+    b = StepBundle(
+        name=f"{arch.name}:{shape.name}", kind=shape.kind, fn=step,
+        state_spec=state_spec, state_axes=state_axes, batch_axes=batch_axes,
+        rules=sharding.recsys_rules(False), init_state=init_state,
+        donate_state=donate)
+    b._rules_builder = sharding.recsys_rules
+    return b
+
+
+# ---------------------------------------------------------------------------
+# PIR bundles (the paper's serving step)
+# ---------------------------------------------------------------------------
+
+def _pir_bundle(arch, shape, cfg) -> StepBundle:
+    from repro.core import lwe
+    from repro.kernels import ref
+
+    if shape.kind == "serve":
+        def step(db, batch):
+            ans = ref.modmatmul_ref(db, batch["queries"])
+            if cfg.q_switch is not None:
+                ans = lwe.switch_modulus(ans, cfg.q_switch)
+            return ans
+        batch_axes = {"queries": ("clusters", "qbatch")}
+    else:
+        def step(db, batch):
+            return ref.modmatmul_ref(db, batch["a_mat"])
+        batch_axes = {"a_mat": ("clusters", "lwe_k")}
+
+    def rules_builder(mp: bool):
+        r = sharding.pir_rules(mp)
+        if shape.kind == "setup":
+            # hint GEMM has no query-batch dim: DB rows span EVERY axis or
+            # the data shards replicate the whole m×n×k GEMM 16×
+            r["chunks"] = (("pod", "data", "model") if mp
+                           else ("data", "model"))
+        return r
+
+    b = StepBundle(
+        name=f"{arch.name}:{shape.name}", kind=shape.kind, fn=step,
+        state_spec=cfgbase.sds((cfg.m, cfg.n), jnp.uint8),
+        state_axes=("chunks", "clusters"),
+        batch_axes=batch_axes, rules=rules_builder(False),
+        init_state=None, donate_state=False)
+    b._rules_builder = rules_builder
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+def make_bundle(arch: cfgbase.ArchSpec, shape_name: str,
+                *, smoke: bool = False) -> StepBundle:
+    shape = arch.shapes[shape_name]
+    if smoke:
+        shape = cfgbase.smoke_shape(shape)
+    cfg = (arch.smoke if smoke else arch.model)(shape_name)
+    if arch.family == "lm":
+        if shape.kind == "train":
+            return _lm_train(arch, shape, cfg)
+        if shape.kind == "prefill":
+            return _lm_prefill(arch, shape, cfg)
+        return _lm_decode(arch, shape, cfg)
+    if arch.family == "gnn":
+        return _gnn_train(arch, shape, cfg)
+    if arch.family == "recsys":
+        return _recsys_bundle(arch, shape, cfg)
+    if arch.family == "pir":
+        return _pir_bundle(arch, shape, cfg)
+    raise ValueError(arch.family)
+
+
+def input_specs_for(arch: cfgbase.ArchSpec, shape_name: str,
+                    *, smoke: bool = False) -> dict:
+    shape = arch.shapes[shape_name]
+    if smoke:
+        shape = cfgbase.smoke_shape(shape)
+    cfg = (arch.smoke if smoke else arch.model)(shape_name)
+    if arch.family == "lm":
+        return cfgbase.lm_input_specs(cfg, shape)
+    if arch.family == "gnn":
+        return cfgbase.gnn_input_specs(cfg, shape)
+    if arch.family == "recsys":
+        return cfgbase.recsys_input_specs(cfg, shape)
+    from repro.configs.pir_serve import pir_input_specs
+    return pir_input_specs(cfg, shape)
+
+
+def materialize_inputs(arch: cfgbase.ArchSpec, shape_name: str, key,
+                       *, smoke: bool = True) -> dict:
+    """Random concrete inputs matching the specs (bounded ids per family)."""
+    shape = arch.shapes[shape_name]
+    if smoke:
+        shape = cfgbase.smoke_shape(shape)
+    cfg = (arch.smoke if smoke else arch.model)(shape_name)
+    specs = input_specs_for(arch, shape_name, smoke=smoke)
+
+    def bound(name: str) -> int:
+        if arch.family == "lm":
+            return cfg.vocab
+        if arch.family == "recsys":
+            return cfg.vocab_per_field
+        if arch.family == "gnn":
+            if name in ("src", "dst"):
+                return shape.meta["n_nodes"]
+            if name == "labels":
+                return shape.meta.get("n_classes", cfg.n_out)
+            if name == "z":
+                return cfg.n_species
+        return 1 << 30
+
+    out = {}
+    for name, spec in specs.items():
+        key, k = jax.random.split(key)
+        if spec.dtype == jnp.int32:
+            if name == "lengths":
+                hi = shape.meta["seq_len"]
+                out[name] = jax.random.randint(k, spec.shape, hi // 2, hi - 1,
+                                               dtype=jnp.int32)
+            elif name == "z":
+                out[name] = jax.random.randint(k, spec.shape, 1, bound(name),
+                                               dtype=jnp.int32)
+            else:
+                out[name] = jax.random.randint(k, spec.shape, 0, bound(name),
+                                               dtype=jnp.int32)
+        elif spec.dtype == jnp.bool_:
+            out[name] = jax.random.bernoulli(k, 0.8, spec.shape)
+        elif spec.dtype == jnp.uint8:
+            out[name] = jax.random.randint(k, spec.shape, 0, 256,
+                                           dtype=jnp.int32).astype(jnp.uint8)
+        elif spec.dtype == jnp.uint32:
+            out[name] = jax.random.bits(k, spec.shape, dtype=jnp.uint32)
+        elif name == "edge_dist":
+            out[name] = jax.random.uniform(k, spec.shape, jnp.float32, 0.1,
+                                           cfg.cutoff * 0.95)
+        else:
+            out[name] = jax.random.normal(k, spec.shape, spec.dtype)
+    return out

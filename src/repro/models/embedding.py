@@ -1,0 +1,66 @@
+"""Embedding lookup / EmbeddingBag built from jnp.take + segment_sum.
+
+JAX has no native nn.EmbeddingBag and no CSR sparse — the ragged
+gather-reduce is implemented here as part of the system (see kernel taxonomy
+§RecSys).  Tables are stored stacked (n_fields·vocab, dim) and row-sharded
+over the "model" mesh axis (`emb_rows`); a shard_map lookup with masked psum
+lives in distributed/collectives.py for the explicit model-parallel path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+
+
+def table_init(key, n_fields: int, vocab: int, dim: int, dtype=jnp.float32):
+    t = jax.random.normal(key, (n_fields * vocab, dim)) / jnp.sqrt(dim)
+    return {"table": t.astype(dtype)}
+
+
+def table_axes():
+    return {"table": ("emb_rows", None)}
+
+
+def field_lookup(p, idx: jax.Array, vocab: int,
+                 *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """idx: (B, n_fields) per-field ids → (B, n_fields, dim)."""
+    n_fields = idx.shape[-1]
+    flat = idx + (jnp.arange(n_fields, dtype=idx.dtype) * vocab)[None, :]
+    out = jnp.take(p["table"], flat, axis=0).astype(compute_dtype)
+    return logical(out, "batch", "fields", None)
+
+
+def embedding_bag(table: jax.Array, idx: jax.Array, mask: jax.Array,
+                  *, mode: str = "mean",
+                  compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Dense-batch bag: idx (B, L), mask (B, L) → (B, dim)."""
+    e = jnp.take(table, idx, axis=0).astype(compute_dtype)
+    m = mask.astype(compute_dtype)[..., None]
+    s = jnp.sum(e * m, axis=1)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        return s / jnp.maximum(jnp.sum(m, axis=1), 1.0)
+    if mode == "max":
+        neg = jnp.finfo(compute_dtype).min
+        return jnp.max(jnp.where(m > 0, e, neg), axis=1)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(table: jax.Array, indices: jax.Array,
+                         segment_ids: jax.Array, n_bags: int,
+                         *, mode: str = "sum") -> jax.Array:
+    """Ragged bag: flat indices + segment ids → (n_bags, dim)."""
+    e = jnp.take(table, indices, axis=0)
+    if mode == "sum":
+        return jax.ops.segment_sum(e, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(e, segment_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(indices, e.dtype), segment_ids,
+                                num_segments=n_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(e, segment_ids, num_segments=n_bags)
+    raise ValueError(mode)

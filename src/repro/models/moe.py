@@ -1,0 +1,166 @@
+"""Mixture-of-Experts FFN: top-k routing with sort + capacity dispatch.
+
+GShard-style dense dispatch tensors are O(T·E·C) — intractable at assigned
+scales (Kimi-K2: 1M tokens × 384 experts).  We instead sort token→expert
+assignments and scatter into an (E, C, d) buffer (MegaBlocks-without-kernels),
+so dispatch cost is O(T·k·d) + one sort, and expert compute is a dense batched
+GEMM whose FLOPs match the *active* parameter count (6·N_active·D shows up
+cleanly in the roofline).
+
+Sharding: experts over the "model" mesh axis, capacity over "data" — the
+scatter/gather across those boundaries is XLA's all-to-all, i.e. the standard
+EP token shuffle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+from repro.models import nn
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                    # per-expert hidden width
+    n_shared: int = 0            # always-on shared experts
+    capacity_factor: float = 1.25
+    every: int = 1               # MoE layer every `every` layers
+
+
+def moe_init(key, d_model: int, moe: MoEConfig, dtype=jnp.float32):
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E, f = moe.n_experts, moe.d_ff
+    s_in, s_out = 1 / math.sqrt(d_model), 1 / math.sqrt(f)
+    p = {
+        "router": {"w": (s_in * jax.random.normal(kr, (d_model, E))
+                         ).astype(dtype)},
+        "w_gate": (s_in * jax.random.normal(kg, (E, d_model, f))).astype(dtype),
+        "w_up": (s_in * jax.random.normal(ku, (E, d_model, f))).astype(dtype),
+        "w_down": (s_out * jax.random.normal(kd, (E, f, d_model))).astype(dtype),
+    }
+    if moe.n_shared:
+        fs = f * moe.n_shared
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "w_gate": nn.dense_init(k1, d_model, fs, dtype=dtype),
+            "w_up": nn.dense_init(k2, d_model, fs, dtype=dtype),
+            "w_down": nn.dense_init(k3, fs, d_model, dtype=dtype),
+        }
+    return p
+
+
+def moe_param_axes(moe: MoEConfig):
+    ax = {
+        "router": {"w": ("fsdp", "experts")},
+        "w_gate": ("experts", "fsdp", None),
+        "w_up": ("experts", "fsdp", None),
+        "w_down": ("experts", None, "fsdp"),
+    }
+    if moe.n_shared:
+        ax["shared"] = {
+            "w_gate": {"w": ("fsdp", "d_ff")},
+            "w_up": {"w": ("fsdp", "d_ff")},
+            "w_down": {"w": ("d_ff", "fsdp")},
+        }
+    return ax
+
+
+def capacity(n_tokens: int, moe: MoEConfig) -> int:
+    c = int(math.ceil(n_tokens * moe.top_k * moe.capacity_factor
+                      / moe.n_experts))
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_apply(p, x: jax.Array, moe: MoEConfig, *,
+              compute_dtype=jnp.bfloat16) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (y, aux_load_balance_loss).
+
+    Dispatch is GROUPED by data shard: tokens reshape to (G, T/G, d) with
+    G = the mesh extent of the "batch" logical axis (1 on a single device),
+    and routing/sort/scatter are vmapped per group.  Each data shard then
+    sorts only its own tokens — a global argsort over B·S·k assignments
+    otherwise forces XLA into a distributed sort + full-activation gathers
+    (measured: 26 TB/device of all-reduce on kimi-k2 train_4k).  The (G, E,
+    C, d) buffer carries data sharding on G and EP sharding on E; the
+    scatter across those axes is the standard MoE all-to-all shuffle.
+    """
+    from repro.distributed.sharding import axis_size
+
+    B, S, d = x.shape
+    T = B * S
+    E, k = moe.n_experts, moe.top_k
+    G = math.gcd(axis_size("batch"), T)
+    T_loc = T // G
+    C = capacity(T_loc, moe)
+    xg = x.reshape(G, T_loc, d)
+    xg = logical(xg, "batch", None, None)
+
+    router_w = p["router"]["w"].astype(jnp.float32)
+
+    def dispatch(x_loc):
+        """One group's routing + sort + capacity scatter (runs vmapped)."""
+        gate_logits = x_loc.astype(jnp.float32) @ router_w      # (T_loc, E)
+        probs = jax.nn.softmax(gate_logits, axis=-1)
+        top_w, top_e = jax.lax.top_k(probs, k)
+        top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+        flat_e = top_e.reshape(-1)                              # (T_loc·k,)
+        flat_t = jnp.arange(T_loc * k, dtype=jnp.int32) // k
+        flat_w = top_w.reshape(-1)
+        order = jnp.argsort(flat_e)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        counts = jnp.bincount(flat_e, length=E)
+        offsets = jnp.cumsum(counts) - counts
+        pos = (jnp.arange(T_loc * k, dtype=jnp.int32)
+               - offsets[se].astype(jnp.int32))
+        keep = pos < C
+        vals = (x_loc[st].astype(compute_dtype)
+                * keep[:, None].astype(compute_dtype))
+        buf = jnp.zeros((E, C, d), compute_dtype)
+        buf = buf.at[se, pos].add(vals, mode="drop")
+        return buf, (se, st, sw, pos, keep, counts, probs)
+
+    buf, (se, st, sw, pos, keep, counts, probs) = jax.vmap(dispatch)(xg)
+    buf = logical(buf, "batch", "experts", "expert_cap", None)  # EP a2a here
+
+    # --- expert compute: batched SwiGLU (E sharded over model) ---------------
+    wg = p["w_gate"].astype(compute_dtype)
+    wu = p["w_up"].astype(compute_dtype)
+    wd = p["w_down"].astype(compute_dtype)
+    h = jnp.einsum("gecd,edf->gecf", buf, wg)
+    u = jnp.einsum("gecd,edf->gecf", buf, wu)
+    a = jax.nn.silu(h) * u
+    out = jnp.einsum("gecf,efd->gecd", a, wd)
+    out = logical(out, "batch", "experts", "expert_cap", None)
+
+    # --- combine per group: gather back, weight, scatter over tokens ---------
+    def combine(out_g, se_g, st_g, sw_g, pos_g, keep_g):
+        pos_c = jnp.minimum(pos_g, C - 1)
+        back = out_g[se_g, pos_c] * (keep_g.astype(compute_dtype)
+                                     * sw_g.astype(compute_dtype))[:, None]
+        return jax.ops.segment_sum(back, st_g, num_segments=T_loc)
+
+    y = jax.vmap(combine)(out, se, st, sw, pos, keep)           # (G, T_loc, d)
+    y = logical(y, "batch", None, None).reshape(T, d)
+
+    # --- shared experts (always-on) -------------------------------------------
+    if moe.n_shared:
+        sh = p["shared"]
+        xf = x.reshape(T, d)
+        g = nn.dense(sh["w_gate"], xf, compute_dtype=compute_dtype)
+        uu = nn.dense(sh["w_up"], xf, compute_dtype=compute_dtype)
+        y = y + nn.dense(sh["w_down"], jax.nn.silu(g) * uu,
+                         compute_dtype=compute_dtype)
+
+    # --- load-balance aux loss (Switch): E · Σ_i f_i · P_i -------------------
+    f_frac = jnp.sum(counts, axis=0).astype(jnp.float32) / jnp.maximum(
+        1, T * k)
+    p_mean = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_frac * p_mean)
+
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,95 @@
+"""Minimal pure-JAX NN substrate (no flax): params are nested dicts.
+
+Every init_* has a sibling *_axes helper producing the same-structure tree of
+logical dimension names used by distributed/sharding.py to derive
+PartitionSpecs — parameters never embed device placement themselves.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x, *, compute_dtype=jnp.bfloat16):
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p, ids, *, compute_dtype=jnp.bfloat16):
+    # cast BEFORE the gather: the sharded lookup's mask+psum intermediates
+    # (and their backward scatter-add) then move bf16, not f32 — measured
+    # 2× on the dominant activation buffers at train_4k scale
+    return jnp.take(p["table"].astype(compute_dtype), ids, axis=0)
+
+
+def mlp_init(key, sizes: list[int], *, bias: bool = True, dtype=jnp.float32):
+    """Plain ReLU MLP used by the recsys/gnn heads."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {f"l{i}": dense_init(k, sizes[i], sizes[i + 1], bias=bias,
+                                dtype=dtype)
+            for i, k in enumerate(keys)}
+
+
+def mlp(p, x, *, act=jax.nn.relu, final_act: bool = False,
+        compute_dtype=jnp.bfloat16):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x, compute_dtype=compute_dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def mlp_axes(sizes: list[int], *, bias: bool = True, row: str | None = None,
+             col: str | None = None):
+    out = {}
+    for i in range(len(sizes) - 1):
+        # never shard narrow dims (e.g. a final logit column of width 1)
+        c = col if sizes[i + 1] >= 128 else None
+        r = row if sizes[i] >= 128 else None
+        ax = {"w": (r, c)}
+        if bias:
+            ax["b"] = (c,)
+        out[f"l{i}"] = ax
+    return out
+
+
+def softplus_shifted(x):
+    """SchNet's shifted softplus: ln(0.5 e^x + 0.5)."""
+    return jax.nn.softplus(x) - math.log(2.0)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))

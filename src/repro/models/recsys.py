@@ -1,0 +1,253 @@
+"""RecSys architectures: DLRM (dot), DCN-v2 (cross), xDeepFM (CIN), MIND
+(multi-interest capsules).
+
+All four share the stacked embedding-table substrate (models/embedding.py:
+jnp.take + segment ops — JAX's EmbeddingBag).  Tables are the dominant state
+(n_fields × 10⁶ rows) and row-shard over the "model" mesh axis.
+
+``retrieval_score`` implements the `retrieval_cand` shape: score ONE user
+context against 10⁶ candidate items as a batched computation over the
+candidate axis (no loop) — for MIND this is the two-tower max-over-interests
+dot; for the ranking models the item field varies while user features
+broadcast.  This is also where PIR-RAG composes with recsys: candidate
+embeddings can be clustered and privately fetched (examples/private_recsys.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+from repro.models import embedding, nn
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    kind: str                        # dlrm | dcn | xdeepfm | mind
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    vocab_per_field: int = 1_000_000
+    bot_mlp: tuple = ()              # dlrm (includes input width)
+    top_mlp: tuple = ()              # dlrm/dcn (excludes input width)
+    n_cross_layers: int = 0          # dcn
+    cin_layers: tuple = ()           # xdeepfm feature-map widths
+    dnn_mlp: tuple = ()              # xdeepfm deep branch (excludes input)
+    n_interests: int = 0             # mind
+    capsule_iters: int = 0
+    hist_len: int = 50
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Init / axes
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: RecSysConfig):
+    ke, k1, k2, k3, k4 = jax.random.split(key, 5)
+    d, F = cfg.embed_dim, cfg.n_sparse
+    p: dict = {"emb": embedding.table_init(ke, F, cfg.vocab_per_field, d,
+                                           cfg.param_dtype)}
+    if cfg.kind == "dlrm":
+        p["bot"] = nn.mlp_init(k1, list(cfg.bot_mlp), dtype=cfg.param_dtype)
+        n_int = (F + 1) * F // 2 + F + 1        # pairwise dots incl. self grp
+        n_feat = cfg.bot_mlp[-1] + (F + 1) * F // 2
+        p["top"] = nn.mlp_init(k2, [n_feat] + list(cfg.top_mlp),
+                               dtype=cfg.param_dtype)
+    elif cfg.kind == "dcn":
+        d_in = cfg.n_dense + F * d
+        p["cross"] = {
+            f"c{i}": {"w": nn.dense_init(jax.random.fold_in(k1, i), d_in,
+                                         d_in, bias=True,
+                                         dtype=cfg.param_dtype)}
+            for i in range(cfg.n_cross_layers)}
+        p["deep"] = nn.mlp_init(k2, [d_in] + list(cfg.top_mlp),
+                                dtype=cfg.param_dtype)
+        p["final"] = nn.dense_init(k3, d_in + cfg.top_mlp[-1], 1, bias=True,
+                                   dtype=cfg.param_dtype)
+    elif cfg.kind == "xdeepfm":
+        hs = [F] + list(cfg.cin_layers)
+        p["cin"] = {f"w{i}": (jax.random.normal(
+            jax.random.fold_in(k1, i), (hs[i + 1], hs[i], F))
+            * (1.0 / jnp.sqrt(hs[i] * F))).astype(cfg.param_dtype)
+            for i in range(len(cfg.cin_layers))}
+        p["cin_out"] = nn.dense_init(k2, sum(cfg.cin_layers), 1, bias=True,
+                                     dtype=cfg.param_dtype)
+        p["dnn"] = nn.mlp_init(k3, [F * d] + list(cfg.dnn_mlp) + [1],
+                               dtype=cfg.param_dtype)
+        p["linear"] = embedding.table_init(k4, F, cfg.vocab_per_field, 1,
+                                           cfg.param_dtype)
+    elif cfg.kind == "mind":
+        p["bilinear"] = nn.dense_init(k1, d, d, dtype=cfg.param_dtype)
+    else:
+        raise ValueError(cfg.kind)
+    return p
+
+
+def param_axes(cfg: RecSysConfig):
+    ax: dict = {"emb": embedding.table_axes()}
+    if cfg.kind == "dlrm":
+        ax["bot"] = nn.mlp_axes(list(cfg.bot_mlp))
+        ax["top"] = nn.mlp_axes([0] + list(cfg.top_mlp))
+    elif cfg.kind == "dcn":
+        ax["cross"] = {f"c{i}": {"w": {"w": (None, None), "b": (None,)}}
+                       for i in range(cfg.n_cross_layers)}
+        ax["deep"] = nn.mlp_axes([0] + list(cfg.top_mlp), col="d_ff")
+        ax["final"] = {"w": (None, None), "b": (None,)}
+    elif cfg.kind == "xdeepfm":
+        ax["cin"] = {f"w{i}": (None, None, None)
+                     for i in range(len(cfg.cin_layers))}
+        ax["cin_out"] = {"w": (None, None), "b": (None,)}
+        ax["dnn"] = nn.mlp_axes([0] + list(cfg.dnn_mlp) + [1], col="d_ff")
+        ax["linear"] = embedding.table_axes()
+    elif cfg.kind == "mind":
+        ax["bilinear"] = {"w": (None, None)}
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# Forward passes (ranking models → logit (B,))
+# ---------------------------------------------------------------------------
+
+def _dlrm_forward(p, dense_x, sparse_idx, cfg):
+    cd = cfg.compute_dtype
+    bot = nn.mlp(p["bot"], dense_x.astype(cd), final_act=True,
+                 compute_dtype=cd)                          # (B, d)
+    emb = embedding.field_lookup(p["emb"], sparse_idx, cfg.vocab_per_field,
+                                 compute_dtype=cd)          # (B, F, d)
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)     # (B, F+1, d)
+    sims = jnp.einsum("bfd,bgd->bfg", z, z)                 # (B, F+1, F+1)
+    iu, ju = jnp.triu_indices(z.shape[1], k=1)
+    tri = sims[:, iu, ju]                                   # (B, (F+1)F/2)
+    feat = jnp.concatenate([bot, tri], axis=1)
+    return nn.mlp(p["top"], feat, compute_dtype=cd)[:, 0]
+
+
+def _dcn_forward(p, dense_x, sparse_idx, cfg):
+    cd = cfg.compute_dtype
+    emb = embedding.field_lookup(p["emb"], sparse_idx, cfg.vocab_per_field,
+                                 compute_dtype=cd)
+    x0 = jnp.concatenate([dense_x.astype(cd),
+                          emb.reshape(emb.shape[0], -1)], axis=1)
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        w = p["cross"][f"c{i}"]["w"]
+        x = x0 * nn.dense(w, x, compute_dtype=cd) + x       # DCN-v2 full-rank
+    deep = nn.mlp(p["deep"], x0, final_act=True, compute_dtype=cd)
+    out = nn.dense(p["final"], jnp.concatenate([x, deep], axis=1),
+                   compute_dtype=cd)
+    return out[:, 0]
+
+
+def _xdeepfm_forward(p, dense_x, sparse_idx, cfg):
+    del dense_x
+    cd = cfg.compute_dtype
+    x0 = embedding.field_lookup(p["emb"], sparse_idx, cfg.vocab_per_field,
+                                compute_dtype=cd)           # (B, F, d)
+    xk = x0
+    pools = []
+    for i in range(len(cfg.cin_layers)):
+        z = jnp.einsum("bid,bjd->bijd", xk, x0)             # outer product
+        xk = jnp.einsum("bijd,hij->bhd", z,
+                        p["cin"][f"w{i}"].astype(cd))       # compress
+        pools.append(jnp.sum(xk, axis=-1))                  # (B, H_i)
+    cin_logit = nn.dense(p["cin_out"], jnp.concatenate(pools, axis=1),
+                         compute_dtype=cd)[:, 0]
+    dnn_logit = nn.mlp(p["dnn"], x0.reshape(x0.shape[0], -1),
+                       compute_dtype=cd)[:, 0]
+    lin = embedding.field_lookup(p["linear"], sparse_idx,
+                                 cfg.vocab_per_field, compute_dtype=cd)
+    return cin_logit + dnn_logit + jnp.sum(lin[..., 0], axis=1)
+
+
+def _squash(x, axis=-1):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(p, hist_idx, hist_mask, cfg: RecSysConfig):
+    """B2I dynamic routing: history (B, L) → interest capsules (B, K, d)."""
+    cd = cfg.compute_dtype
+    e = jnp.take(p["emb"]["table"], hist_idx, axis=0).astype(cd)  # (B, L, d)
+    eS = nn.dense(p["bilinear"], e, compute_dtype=cd)             # (B, L, d)
+    m = hist_mask.astype(jnp.float32)
+    B, L, d = e.shape
+    b = jnp.zeros((B, L, cfg.n_interests), jnp.float32)
+    u = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=-1) * m[..., None]
+        z = jnp.einsum("blk,bld->bkd", w.astype(cd), eS)
+        u = _squash(z.astype(jnp.float32))
+        b = b + jnp.einsum("bkd,bld->blk", u,
+                           eS.astype(jnp.float32))
+    return u                                                # (B, K, d) f32
+
+
+def _mind_train_scores(p, batch, cfg):
+    u = mind_interests(p, batch["hist"], batch["hist_mask"], cfg)
+    tgt = jnp.take(p["emb"]["table"], batch["target"], axis=0)    # (B, d)
+    att = jax.nn.softmax(
+        jnp.einsum("bkd,bd->bk", u, tgt.astype(jnp.float32)) * 2.0, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att, u)                 # label-aware
+    return user @ tgt.astype(jnp.float32).T                 # (B, B) in-batch
+
+
+# ---------------------------------------------------------------------------
+# Uniform entry points
+# ---------------------------------------------------------------------------
+
+_FWD = {"dlrm": _dlrm_forward, "dcn": _dcn_forward, "xdeepfm": _xdeepfm_forward}
+
+
+def forward(params, batch, cfg: RecSysConfig):
+    if cfg.kind == "mind":
+        raise ValueError("mind uses mind_interests / loss directly")
+    return _FWD[cfg.kind](params, batch.get("dense"), batch["sparse"], cfg)
+
+
+def loss(params, batch, cfg: RecSysConfig):
+    """BCE for ranking models; in-batch sampled softmax for MIND."""
+    if cfg.kind == "mind":
+        scores = _mind_train_scores(params, batch, cfg)     # (B, B)
+        labels = jnp.arange(scores.shape[0])
+        logz = jax.nn.logsumexp(scores, axis=-1)
+        gold = jnp.take_along_axis(scores, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+    logit = forward(params, batch, cfg).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jax.nn.softplus(logit) - y * logit)     # stable BCE
+
+
+def serve(params, batch, cfg: RecSysConfig):
+    """Online/bulk scoring → probability (B,)."""
+    if cfg.kind == "mind":
+        u = mind_interests(params, batch["hist"], batch["hist_mask"], cfg)
+        tgt = jnp.take(params["emb"]["table"], batch["target"], axis=0)
+        return jnp.max(jnp.einsum("bkd,bd->bk", u,
+                                  tgt.astype(jnp.float32)), axis=-1)
+    return jax.nn.sigmoid(forward(params, batch, cfg).astype(jnp.float32))
+
+
+def retrieval_score(params, user_batch, candidate_ids, cfg: RecSysConfig):
+    """One user context × NC candidates → (NC,) scores, fully batched."""
+    cd = cfg.compute_dtype
+    nc = candidate_ids.shape[0]
+    if cfg.kind == "mind":
+        u = mind_interests(params, user_batch["hist"],
+                           user_batch["hist_mask"], cfg)    # (1, K, d)
+        cand = jnp.take(params["emb"]["table"], candidate_ids, axis=0)
+        cand = logical(cand, "candidates", None)
+        s = jnp.einsum("kd,nd->nk", u[0].astype(cd), cand.astype(cd))
+        return jnp.max(s, axis=-1).astype(jnp.float32)
+    # ranking models: item field = field 0 varies, user context broadcasts
+    sparse = jnp.broadcast_to(user_batch["sparse"], (nc, cfg.n_sparse))
+    sparse = sparse.at[:, 0].set(candidate_ids)
+    sparse = logical(sparse, "candidates", None)
+    dense = (jnp.broadcast_to(user_batch["dense"], (nc, cfg.n_dense))
+             if cfg.n_dense else None)
+    return _FWD[cfg.kind](params, dense, sparse, cfg).astype(jnp.float32)

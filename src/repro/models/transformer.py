@@ -1,0 +1,556 @@
+"""Decoder-only transformer LM covering all five assigned LM architectures.
+
+One configurable implementation: GQA attention (+optional QK-norm, QKV bias),
+RoPE, SwiGLU dense FFN, optional MoE layers (interleaved every
+``moe.every``), scan-over-layers (compile time O(1 layer)), blockwise
+online-softmax attention (flash-style memory, pure JAX so multi-pod dry-runs
+lower on any backend), KV-cache prefill/decode, chunked cross-entropy.
+
+Param dtype fp32 by default with bf16 compute; big-MoE configs train with
+Adafactor (see optim/) so the 1T-param Kimi-K2 state fits the v5e fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical
+from repro.models import nn
+from repro.models.moe import MoEConfig, moe_apply, moe_init, moe_param_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 500_000.0
+    moe: MoEConfig | None = None
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_chunk_q: int = 512
+    attn_chunk_kv: int = 1024
+    ce_chunk: int = 512          # sequence chunk for cross-entropy
+    n_microbatch: int = 1        # gradient-accumulation microbatches
+
+    @property
+    def block_size(self) -> int:
+        return self.moe.every if self.moe is not None else 1
+
+    @property
+    def n_blocks(self) -> int:
+        assert self.n_layers % self.block_size == 0
+        return self.n_layers // self.block_size
+
+    def sub_is_moe(self, i: int) -> bool:
+        return self.moe is not None and i == self.block_size - 1
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _attn_init(key, cfg: LMConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": nn.dense_init(kq, d, H * hd, bias=cfg.qkv_bias,
+                            dtype=cfg.param_dtype),
+        "wk": nn.dense_init(kk, d, KV * hd, bias=cfg.qkv_bias,
+                            dtype=cfg.param_dtype),
+        "wv": nn.dense_init(kv, d, KV * hd, bias=cfg.qkv_bias,
+                            dtype=cfg.param_dtype),
+        "wo": nn.dense_init(ko, H * hd, d, dtype=cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rmsnorm_init(hd, cfg.param_dtype)
+        p["k_norm"] = nn.rmsnorm_init(hd, cfg.param_dtype)
+    return p
+
+
+def _dense_ffn_init(key, cfg: LMConfig):
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": nn.dense_init(kg, cfg.d_model, cfg.d_ff,
+                                dtype=cfg.param_dtype),
+        "w_up": nn.dense_init(ku, cfg.d_model, cfg.d_ff,
+                              dtype=cfg.param_dtype),
+        "w_down": nn.dense_init(kd, cfg.d_ff, cfg.d_model,
+                                dtype=cfg.param_dtype),
+    }
+
+
+def _block_init(key, cfg: LMConfig):
+    blk = {}
+    for i in range(cfg.block_size):
+        ka, kf = jax.random.split(jax.random.fold_in(key, i))
+        sub = {
+            "ln1": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+            "attn": _attn_init(ka, cfg),
+            "ln2": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+        }
+        if cfg.sub_is_moe(i):
+            sub["moe"] = moe_init(kf, cfg.d_model, cfg.moe, cfg.param_dtype)
+        else:
+            sub["ffn"] = _dense_ffn_init(kf, cfg)
+        blk[f"sub{i}"] = sub
+    return blk
+
+
+def init(key, cfg: LMConfig):
+    ke, kb, kh = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.n_blocks)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(block_keys)
+    params = {
+        "embed": nn.embed_init(ke, cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "blocks": blocks,
+        "final_norm": nn.rmsnorm_init(cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = nn.dense_init(kh, cfg.d_model, cfg.vocab,
+                                       dtype=cfg.param_dtype)
+    return params
+
+
+def param_spec(cfg: LMConfig):
+    """Full-size ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init(k, cfg), jax.random.PRNGKey(0))
+
+
+def param_axes(cfg: LMConfig):
+    """Logical dim names per parameter (leading None = scan-stacked blocks)."""
+    def attn_ax():
+        ax = {"wq": {"w": ("fsdp", "heads")},
+              "wk": {"w": ("fsdp", "kv_heads")},
+              "wv": {"w": ("fsdp", "kv_heads")},
+              "wo": {"w": ("heads", "fsdp")}}
+        if cfg.qkv_bias:
+            ax["wq"]["b"] = ("heads",)
+            ax["wk"]["b"] = ("kv_heads",)
+            ax["wv"]["b"] = ("kv_heads",)
+        if cfg.qk_norm:
+            ax["q_norm"] = {"g": (None,)}
+            ax["k_norm"] = {"g": (None,)}
+        return ax
+
+    blk = {}
+    for i in range(cfg.block_size):
+        sub = {"ln1": {"g": (None,)}, "attn": attn_ax(),
+               "ln2": {"g": (None,)}}
+        if cfg.sub_is_moe(i):
+            sub["moe"] = moe_param_axes(cfg.moe)
+        else:
+            sub["ffn"] = {"w_gate": {"w": ("fsdp", "d_ff")},
+                          "w_up": {"w": ("fsdp", "d_ff")},
+                          "w_down": {"w": ("d_ff", "fsdp")}}
+        blk[f"sub{i}"] = sub
+    # prepend the scan-stacked block axis
+    blk = jax.tree.map(lambda t: (None,) + t, blk,
+                       is_leaf=lambda v: isinstance(v, tuple))
+    out = {
+        # vocab → model only: sharding the d dim too (over data) collides
+        # with batch-sharded ids in the gather, forcing XLA to materialize
+        # full-batch f32 intermediates (measured +24 GiB/device)
+        "embed": {"table": ("vocab", None)},
+        "blocks": blk,
+        "final_norm": {"g": (None,)},
+    }
+    if not cfg.tie_embeddings:
+        out["head"] = {"w": (None, "vocab")}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RoPE + attention
+# ---------------------------------------------------------------------------
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _qkv(p, x, cfg: LMConfig, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cd = cfg.compute_dtype
+    q = nn.dense(p["wq"], x, compute_dtype=cd).reshape(B, S, H, hd)
+    k = nn.dense(p["wk"], x, compute_dtype=cd).reshape(B, S, KV, hd)
+    v = nn.dense(p["wv"], x, compute_dtype=cd).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q)
+        k = nn.rmsnorm(p["k_norm"], k)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, cfg: LMConfig, *, causal: bool = True):
+    """Online-softmax (flash-style) attention in pure JAX.
+
+    q: (B, Sq, H, hd), k/v: (B, Skv, KV, hd).  Outer python loop over q
+    chunks (static count), inner lax.scan over only the kv chunks a causal
+    chunk can see — memory O(chunk²), FLOPs ≈ causal-optimal.
+
+    GQA is handled by repeating K/V to the full H heads PER CHUNK and using
+    flat-H einsums.  The alternative — grouped (B,S,KV,G,hd) einsums — makes
+    GSPMD replicate the whole attention over the model axis whenever H is
+    not divisible by it (28/24/40 heads on a 16-wide axis): measured 16×
+    redundant FLOPs + "involuntary full rematerialization" warnings.  With
+    flat H the head axis shards (with ≤14% padding) and K/V repetition stays
+    chunk-local.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    cq, ckv = min(cfg.attn_chunk_q, Sq), min(cfg.attn_chunk_kv, Skv)
+    nq = (Sq + cq - 1) // cq
+    scale = 1.0 / math.sqrt(hd)
+    # No explicit head-sharding constraint: with flat-H einsums GSPMD
+    # propagates the wq output sharding naturally; forcing P(..., heads)
+    # here measured 2× extra all-gather on the MoE TP path (llama4 train:
+    # 1397 → 643 GiB/device without it).
+    qg = q
+
+    # pad K/V to the chunk grid — dynamic_slice CLAMPS out-of-bounds starts,
+    # which would silently re-read shifted keys on a ragged final chunk
+    pad_kv = (-Skv) % ckv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+
+    def one_q_chunk(qc, k, v, q_lo, cq_i, nkv):  # noqa: D401
+        """One q-chunk's online softmax over its visible kv chunks.
+
+        jax.checkpoint'd: without it the inner scan saves its (m, l, acc)
+        carries for backward across ALL q chunks simultaneously (the python
+        loop is dataflow-parallel), costing O(Sq/cq · Skv/ckv · chunk²) HBM —
+        measured 20+ GiB/device at train_4k scale.  Remat recomputes the
+        inner scan during the chunk's backward instead.
+        """
+
+        def step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, ki * ckv, ckv, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ki * ckv, ckv, axis=1)
+            # GQA → flat H per chunk (see docstring)
+            kc = jnp.repeat(kc, G, axis=2)                  # (B, ckv, H, hd)
+            vc = jnp.repeat(vc, G, axis=2)
+            # matmuls stay in the input dtype (bf16 wire/HBM in the model,
+            # f32-exact in unit tests); accumulation is always f32
+            s = jnp.einsum("bqhd,bthd->bqht", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            kpos = ki * ckv + jnp.arange(ckv)
+            valid = kpos < Skv                              # padded keys
+            if causal:
+                qpos = q_lo + jnp.arange(cq_i)
+                mask = (qpos[:, None] >= kpos[None, :]) & valid[None, :]
+                s = jnp.where(mask[:, None, :][None], s, -1e30)
+            else:
+                s = jnp.where(valid[None, None, None, :], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            prob = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(prob, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bqht,bthd->bqhd", prob.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, cq_i, H), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, cq_i, H), jnp.float32)
+        a0 = jnp.zeros((B, cq_i, H, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(nkv))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out
+
+    chunk_fn = jax.checkpoint(
+        one_q_chunk, policy=jax.checkpoint_policies.nothing_saveable,
+        static_argnums=(3, 4, 5))
+
+    outs = []
+    for qi in range(nq):
+        q_lo = qi * cq
+        q_hi = min(Sq, q_lo + cq)
+        qc = qg[:, q_lo:q_hi]
+        cq_i = q_hi - q_lo
+        kv_hi = min(Skv, q_hi) if causal else Skv
+        nkv = max(1, (kv_hi + ckv - 1) // ckv)
+        outs.append(chunk_fn(qc, k, v, q_lo, cq_i, nkv))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, cfg: LMConfig):
+    """Single-token attention over a (possibly seq-sharded) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, T, KV, hd); lengths: (B,) valid length.
+    Masked full-width softmax — O(T) work, and XLA partitions the reduction
+    when the cache's T axis is sharded (split-S / flash-decoding layout).
+    """
+    B, _, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    tpos = jnp.arange(T)
+    mask = tpos[None, :] < lengths[:, None]                  # (B, T)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks / forward
+# ---------------------------------------------------------------------------
+
+def _sublayer(sub, x, cfg: LMConfig, i: int, positions):
+    h = nn.rmsnorm(sub["ln1"], x)
+    h = logical(h, "batch", None, None)       # SP: all-gather at entry
+    q, k, v = _qkv(sub["attn"], h, cfg, positions)
+    o = blockwise_attention(q, k, v, cfg)
+    o = nn.dense(sub["attn"]["wo"], o.reshape(*o.shape[:2], -1),
+                 compute_dtype=cfg.compute_dtype)
+    x = x + o.astype(x.dtype)
+    x = logical(x, "batch", "seq", None)      # SP: reduce-scatter at exit
+
+    h = nn.rmsnorm(sub["ln2"], x)
+    h = logical(h, "batch", None, None)
+    if cfg.sub_is_moe(i):
+        y, aux = moe_apply(sub["moe"], h, cfg.moe,
+                           compute_dtype=cfg.compute_dtype)
+    else:
+        f = sub["ffn"]
+        g = nn.dense(f["w_gate"], h, compute_dtype=cfg.compute_dtype)
+        u = nn.dense(f["w_up"], h, compute_dtype=cfg.compute_dtype)
+        y = nn.dense(f["w_down"], jax.nn.silu(g) * u,
+                     compute_dtype=cfg.compute_dtype)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + y.astype(x.dtype)
+    x = logical(x, "batch", "seq", None)
+    return x, aux
+
+
+def _block(blk, x, cfg: LMConfig, positions):
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(cfg.block_size):
+        x, aux = _sublayer(blk[f"sub{i}"], x, cfg, i, positions)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def forward(params, tokens: jax.Array, cfg: LMConfig) -> tuple[jax.Array,
+                                                               jax.Array]:
+    """tokens (B, S) → final hidden states (B, S, d) + total aux loss."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = nn.embed(params["embed"], tokens, compute_dtype=cfg.compute_dtype)
+    x = logical(x, "batch", "seq", None)
+
+    def blk_fn(x, blk):
+        return _block(blk, x, cfg, positions)
+
+    if cfg.remat:
+        blk_fn = jax.checkpoint(blk_fn,
+                                policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(carry, blk):
+        x, aux = carry
+        x, a = blk_fn(x, blk)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), params["blocks"])
+    x = nn.rmsnorm(params["final_norm"], x)
+    return x, aux
+
+
+def logits_from_hidden(params, x, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].astype(cfg.compute_dtype)
+        return (x.astype(cfg.compute_dtype) @ w.T).astype(jnp.float32)
+    return nn.dense(params["head"], x, compute_dtype=cfg.compute_dtype
+                    ).astype(jnp.float32)
+
+
+def chunked_xent(params, x, labels, cfg: LMConfig):
+    """Cross-entropy without materializing (B, S, V) logits: scan S chunks.
+
+    The per-chunk loss is checkpointed — otherwise the scan saves every
+    chunk's (B, c, V) logits for backward and the chunking saves nothing
+    (measured +2.3 GiB/device/chunk at train_4k scale).
+    """
+    B, S, d = x.shape
+    c = min(cfg.ce_chunk, S)
+    assert S % c == 0
+    # gather a seq-sharded (SP) residual stream before chunking S
+    x = logical(x, "batch", None, None)
+    xc = x.reshape(B, S // c, c, d).swapaxes(0, 1)       # (n, B, c, d)
+    lc = labels.reshape(B, S // c, c).swapaxes(0, 1)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_loss(xi, li):
+        logits = logits_from_hidden(params, xi, cfg)     # (B, c, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def step(tot, xl):
+        return tot + chunk_loss(*xl), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)
+
+
+def lm_loss(params, batch, cfg: LMConfig, *, aux_coef: float = 0.01):
+    """batch: {"tokens": (B, S), "labels": (B, S)} → scalar loss."""
+    x, aux = forward(params, batch["tokens"], cfg)
+    ce = chunked_xent(params, x, batch["labels"], cfg)
+    return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# KV cache: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    def one():
+        return {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+        }
+    blocks = {f"sub{i}": one() for i in range(cfg.block_size)}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_blocks,) + a.shape), blocks)
+
+
+def cache_spec(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))
+
+
+def cache_axes(cfg: LMConfig):
+    one = {"k": (None, "batch", "cache_seq", "kv_heads", None),
+           "v": (None, "batch", "cache_seq", "kv_heads", None)}
+    return {f"sub{i}": one for i in range(cfg.block_size)}
+
+
+def prefill(params, tokens, cache, cfg: LMConfig):
+    """Run the prompt through the model, filling the cache; return logits of
+    the last position (B, V) + new cache."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = nn.embed(params["embed"], tokens, compute_dtype=cfg.compute_dtype)
+
+    def blk_fn(x, blk_and_cache):
+        blk, cb = blk_and_cache
+        new_cb = {}
+        for i in range(cfg.block_size):
+            sub = blk[f"sub{i}"]
+            h = nn.rmsnorm(sub["ln1"], x)
+            q, k, v = _qkv(sub["attn"], h, cfg, positions)
+            new_cb[f"sub{i}"] = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cb[f"sub{i}"]["k"], k.astype(cb[f"sub{i}"]["k"].dtype),
+                    0, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cb[f"sub{i}"]["v"], v.astype(cb[f"sub{i}"]["v"].dtype),
+                    0, axis=1),
+            }
+            o = blockwise_attention(q, k, v, cfg)
+            o = nn.dense(sub["attn"]["wo"], o.reshape(B, S, -1),
+                         compute_dtype=cfg.compute_dtype)
+            x = x + o.astype(x.dtype)
+            h = nn.rmsnorm(sub["ln2"], x)
+            if cfg.sub_is_moe(i):
+                y, _ = moe_apply(sub["moe"], h, cfg.moe,
+                                 compute_dtype=cfg.compute_dtype)
+            else:
+                f = sub["ffn"]
+                g = nn.dense(f["w_gate"], h, compute_dtype=cfg.compute_dtype)
+                u = nn.dense(f["w_up"], h, compute_dtype=cfg.compute_dtype)
+                y = nn.dense(f["w_down"], jax.nn.silu(g) * u,
+                             compute_dtype=cfg.compute_dtype)
+            x = x + y.astype(x.dtype)
+        return x, new_cb
+
+    def scan_body(x, xs):
+        blk, cb = xs
+        x, new_cb = blk_fn(x, (blk, cb))
+        return x, new_cb
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = nn.rmsnorm(params["final_norm"], x)
+    logits = logits_from_hidden(params, x[:, -1:], cfg)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params, cache, tokens, lengths, cfg: LMConfig):
+    """One decode step.  tokens: (B,) new ids; lengths: (B,) current context
+    length (the new token is written at index `lengths`)."""
+    B = tokens.shape[0]
+    positions = lengths[:, None].astype(jnp.int32)            # (B, 1)
+    x = nn.embed(params["embed"], tokens[:, None],
+                 compute_dtype=cfg.compute_dtype)
+    barange = jnp.arange(B)
+
+    def blk_fn(x, xs):
+        blk, cb = xs
+        new_cb = {}
+        for i in range(cfg.block_size):
+            sub = blk[f"sub{i}"]
+            h = nn.rmsnorm(sub["ln1"], x)
+            q, k, v = _qkv(sub["attn"], h, cfg, positions)
+            kc = cb[f"sub{i}"]["k"].at[barange, lengths].set(
+                k[:, 0].astype(cb[f"sub{i}"]["k"].dtype))
+            vc = cb[f"sub{i}"]["v"].at[barange, lengths].set(
+                v[:, 0].astype(cb[f"sub{i}"]["v"].dtype))
+            kc = logical(kc, "batch", "cache_seq", "kv_heads", None)
+            vc = logical(vc, "batch", "cache_seq", "kv_heads", None)
+            new_cb[f"sub{i}"] = {"k": kc, "v": vc}
+            o = decode_attention(q, kc, vc, lengths + 1, cfg)
+            o = nn.dense(sub["attn"]["wo"], o.reshape(B, 1, -1),
+                         compute_dtype=cfg.compute_dtype)
+            x = x + o.astype(x.dtype)
+            h = nn.rmsnorm(sub["ln2"], x)
+            if cfg.sub_is_moe(i):
+                y, _ = moe_apply(sub["moe"], h, cfg.moe,
+                                 compute_dtype=cfg.compute_dtype)
+            else:
+                f = sub["ffn"]
+                g = nn.dense(f["w_gate"], h, compute_dtype=cfg.compute_dtype)
+                u = nn.dense(f["w_up"], h, compute_dtype=cfg.compute_dtype)
+                y = nn.dense(f["w_down"], jax.nn.silu(g) * u,
+                             compute_dtype=cfg.compute_dtype)
+            x = x + y.astype(x.dtype)
+        return x, new_cb
+
+    x, new_cache = jax.lax.scan(blk_fn, x, (params["blocks"], cache))
+    x = nn.rmsnorm(params["final_norm"], x)
+    logits = logits_from_hidden(params, x, cfg)[:, 0]         # (B, V)
+    return logits, new_cache

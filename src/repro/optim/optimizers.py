@@ -1,0 +1,168 @@
+"""Optimizers (no optax): AdamW, Adafactor, clipping, schedules.
+
+Adafactor (Shazeer & Stern '18) is the default for the ≥400B MoE configs: its
+factored second moment turns optimizer state from 2× params into ~(rows+cols),
+which is what lets the 1T-param Kimi-K2 training state fit a 512×16 GB fleet
+(see EXPERIMENTS.md §Dry-run memory table).
+
+API: ``opt.init(params) → state``; ``opt.update(grads, state, params) →
+(new_params, new_state)``.  All states are pytrees of arrays → they
+checkpoint/reshard through repro.checkpoint like any other state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    name: str = "opt"
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float | Callable = 1e-3, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: float | None = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            new_p = p.astype(jnp.float32) - lr_t * (
+                upd + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), mu, nu
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda v: isinstance(v, tuple))
+        mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda v: isinstance(v, tuple))
+        nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda v: isinstance(v, tuple))
+        return new_p, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; no first moment)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float | Callable = 1e-2, *, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr))
+
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and \
+            p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree.map(one, params), "step": jnp.zeros((),
+                                                                  jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr = beta * v["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * v["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                  eps)[..., None])
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta * v["v"] + (1 - beta) * g2
+                denom = jnp.sqrt(vv)
+                new_v = {"v": vv}
+            u = g / jnp.maximum(denom, eps)
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, new_v
+
+        out = jax.tree.map(upd, params, grads, state["v"],
+                           is_leaf=lambda v: isinstance(v, dict)
+                           and ("v" in v or "vr" in v))
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda v: isinstance(v, tuple))
+        new_v = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda v: isinstance(v, tuple))
+        return new_p, {"v": new_v, "step": step}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def sgd(lr: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, {"step": state["step"] + 1}
+
+    return Optimizer(init=init, update=update, name="sgd")

@@ -1,0 +1,49 @@
+"""Every assigned (arch × shape) cell runs as a REDUCED config on CPU.
+
+This is the per-cell smoke matrix required by the assignment: instantiate a
+small config of the same family, run one step (train/prefill/decode/serve/
+retrieval as the shape dictates), assert shapes + finiteness.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cfgbase
+from repro.launch import steps as steps_lib
+
+CELLS = [(n, s) for n in sorted(cfgbase.all_archs())
+         for s in cfgbase.get(n).shapes]
+
+
+@pytest.mark.parametrize("arch_name,shape_name", CELLS,
+                         ids=[f"{n}:{s}" for n, s in CELLS])
+def test_cell_smoke(arch_name, shape_name):
+    arch = cfgbase.get(arch_name)
+    bundle = steps_lib.make_bundle(arch, shape_name, smoke=True)
+    batch = steps_lib.materialize_inputs(arch, shape_name,
+                                         jax.random.PRNGKey(0))
+    if bundle.init_state is not None:
+        state = bundle.init_state(jax.random.PRNGKey(1))
+    else:
+        state = jnp.zeros(bundle.state_spec.shape, jnp.uint8)
+    out = jax.jit(bundle.fn)(state, batch)
+    leaves = jax.tree.leaves(out)
+    assert leaves
+    for x in leaves:
+        arr = np.asarray(x)
+        if arr.dtype.kind in "fc":
+            assert np.isfinite(arr).all(), (arch_name, shape_name)
+
+
+@pytest.mark.parametrize("arch_name,shape_name", CELLS,
+                         ids=[f"{n}:{s}" for n, s in CELLS])
+def test_cell_specs_consistent(arch_name, shape_name):
+    """Full-size input specs exist, have positive dims, right dtypes."""
+    arch = cfgbase.get(arch_name)
+    specs = steps_lib.input_specs_for(arch, shape_name, smoke=False)
+    assert specs
+    for name, s in specs.items():
+        assert all(d > 0 for d in s.shape), (arch_name, shape_name, name)
+        assert s.dtype in (jnp.int32, jnp.float32, jnp.bool_, jnp.uint8,
+                           jnp.uint32), s.dtype

@@ -1,0 +1,112 @@
+"""Baseline architectures: correctness vs plaintext oracles + trade-offs."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.baselines import common, graph_pir, tiptoe
+from repro.data import corpus as corpus_lib
+from repro.data import metrics
+
+
+@pytest.fixture(scope="module")
+def corp():
+    return corpus_lib.make_corpus(0, 400, emb_dim=48, n_topics=10)
+
+
+# ---------------------------------------------------------------------------
+# Graph-PIR
+# ---------------------------------------------------------------------------
+
+def test_knn_graph_is_exact(corp):
+    g = graph_pir.build_knn_graph(corp.embeddings[:50], k=5)
+    nn = corp.embeddings[:50]
+    nn = nn / np.linalg.norm(nn, axis=1, keepdims=True)
+    sims = nn @ nn.T
+    np.fill_diagonal(sims, -np.inf)
+    want = np.argsort(-sims, axis=1)[:, :5]
+    np.testing.assert_array_equal(g, want.astype(np.uint32))
+
+
+@pytest.fixture(scope="module")
+def gsys(corp):
+    return graph_pir.GraphPIRSystem.build(corp.embeddings, degree=12,
+                                          n_entry=4, impl="xla")
+
+
+def test_graph_search_recall_vs_bruteforce(corp, gsys):
+    nn = corp.embeddings / np.linalg.norm(corp.embeddings, axis=1,
+                                          keepdims=True)
+    recalls = []
+    for qi in range(8):
+        q = corp.embeddings[qi * 37] + 0.02
+        ids, stats = gsys.search(q, top_k=10, beam=8, max_hops=6, seed=qi)
+        oracle = np.argsort(-(nn @ (q / np.linalg.norm(q))))[:10]
+        recalls.append(len(set(ids.tolist()) & set(oracle.tolist())) / 10)
+        assert stats.hops >= 2
+        assert stats.uplink_bytes > 0 and stats.downlink_bytes > 0
+    assert np.mean(recalls) >= 0.7          # fine-grained traversal quality
+
+
+def test_graph_search_flat_downlink(corp, gsys):
+    """Downlink is per-node records (KBs), not cluster content (MBs)."""
+    q = corp.embeddings[3]
+    _, stats = gsys.search(q, top_k=10, beam=8, max_hops=6)
+    assert stats.downlink_bytes < 500_000
+
+
+# ---------------------------------------------------------------------------
+# Tiptoe-style
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tsys(corp):
+    return tiptoe.TiptoeSystem.build(corp.embeddings, n_clusters=10,
+                                     impl="xla", seed=1)
+
+
+def test_tiptoe_scores_match_plaintext_quantized(corp, tsys):
+    """Decrypted homomorphic scores == plaintext quantized dot products."""
+    q = corp.embeddings[123] + 0.01
+    ids, stats = tsys.search(q, top_k=5, key=jax.random.PRNGKey(2))
+    cl = stats.cluster_index
+    dq = tsys.quant.unshift(tsys.cluster_mats[cl])        # signed ints
+    qq = tsys.quant.unshift(tsys.quant.quantize(q.astype(np.float32)))
+    plain = dq @ qq
+    oracle_ids = tsys.cluster_doc_ids[cl][np.argsort(-plain)[:5]]
+    np.testing.assert_array_equal(ids, oracle_ids)
+
+
+def test_tiptoe_quantization_is_coarse(tsys):
+    """The mechanism behind Fig 3's quality gap: few signed levels."""
+    assert tsys.quant.levels <= 15
+
+
+def test_tiptoe_comm_is_small(corp, tsys):
+    _, stats = tsys.search(corp.embeddings[7], key=jax.random.PRNGKey(3))
+    assert stats.uplink_bytes == corp.d * 4
+    assert stats.downlink_bytes < 64_000   # scores only, no content
+
+
+# ---------------------------------------------------------------------------
+# Retrieve-then-fetch tail (what makes the baselines RAG-incomplete)
+# ---------------------------------------------------------------------------
+
+def test_doc_content_pir_fetch_exact(corp):
+    dc = common.DocContentPIR.build(corp.texts[:100], corp.embeddings[:100],
+                                    impl="xla")
+    for did in (0, 57, 99):
+        got_id, emb, text = dc.fetch(jax.random.PRNGKey(did), did)
+        assert got_id == did
+        assert text == corp.texts[did]
+        step = (corp.embeddings[did].max() - corp.embeddings[did].min()) / 255
+        assert np.abs(emb - corp.embeddings[did]).max() <= step / 2 + 1e-6
+
+
+def test_rag_ready_requires_k_more_fetches(corp):
+    """Fetching K docs costs K × (uplink+downlink) — PIR-RAG's whole point."""
+    dc = common.DocContentPIR.build(corp.texts[:100], corp.embeddings[:100],
+                                    impl="xla")
+    docs = dc.fetch_many(0, [1, 2, 3])
+    assert [d[0] for d in docs] == [1, 2, 3]
+    assert dc.per_fetch_uplink == 100 * 4
+    assert dc.per_fetch_downlink > 0

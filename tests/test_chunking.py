@@ -1,0 +1,68 @@
+"""Chunk-transposed DB: serialization round-trips exactly (property-tested)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chunking
+
+
+def _corpus(rng, n_docs, emb_dim, max_text=100):
+    texts = [rng.integers(0, 256, rng.integers(1, max_text),
+                          dtype=np.uint8).tobytes() for _ in range(n_docs)]
+    embs = rng.standard_normal((n_docs, emb_dim)).astype(np.float32)
+    return texts, embs
+
+
+def test_build_and_roundtrip_all_clusters():
+    rng = np.random.default_rng(0)
+    texts, embs = _corpus(rng, 40, 8)
+    assign = rng.integers(0, 5, 40)
+    db = chunking.build_chunked_db(texts, embs, assign, 5, chunk_size=64)
+    assert db.m % 64 == 0
+    assert db.matrix.dtype == np.uint8
+    seen = set()
+    for j in range(5):
+        docs = chunking.deserialize_docs(db.matrix[:, j], db.emb_dim)
+        assert len(docs) == int((assign == j).sum())
+        for doc_id, emb, text in docs:
+            assert text == texts[doc_id]
+            # u8 quantization error bound: half a step of the affine grid
+            step = (embs[doc_id].max() - embs[doc_id].min()) / 255.0
+            assert np.abs(emb - embs[doc_id]).max() <= step / 2 + 1e-6
+            seen.add(doc_id)
+    assert seen == set(range(40))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_docs=st.integers(1, 30), n_clusters=st.integers(1, 6),
+       emb_dim=st.integers(1, 32), seed=st.integers(0, 2**31 - 1))
+def test_property_pack_unpack_identity(n_docs, n_clusters, emb_dim, seed):
+    rng = np.random.default_rng(seed)
+    texts, embs = _corpus(rng, n_docs, emb_dim, max_text=40)
+    assign = rng.integers(0, n_clusters, n_docs)
+    db = chunking.build_chunked_db(texts, embs, assign, n_clusters)
+    recovered = {}
+    for j in range(n_clusters):
+        for doc_id, _, text in chunking.deserialize_docs(db.matrix[:, j],
+                                                         emb_dim):
+            recovered[doc_id] = text
+    assert recovered == {i: t for i, t in enumerate(texts)}
+
+
+def test_empty_cluster_column_is_parseable():
+    rng = np.random.default_rng(1)
+    texts, embs = _corpus(rng, 4, 4)
+    assign = np.zeros(4, np.int64)         # everything in cluster 0
+    db = chunking.build_chunked_db(texts, embs, assign, 3)
+    assert chunking.deserialize_docs(db.matrix[:, 1], 4) == []
+    assert chunking.deserialize_docs(db.matrix[:, 2], 4) == []
+
+
+def test_pad_fraction_reported():
+    rng = np.random.default_rng(2)
+    texts, embs = _corpus(rng, 20, 8)
+    skew = np.zeros(20, np.int64)          # maximally skewed
+    db_skew = chunking.build_chunked_db(texts, embs, skew, 4)
+    even = np.arange(20) % 4               # balanced
+    db_even = chunking.build_chunked_db(texts, embs, even, 4)
+    assert db_skew.pad_fraction > db_even.pad_fraction
+    assert db_skew.m > db_even.m           # downlink driver: max cluster bytes

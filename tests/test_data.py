@@ -1,0 +1,91 @@
+"""Data pipeline: determinism (resume), graph sampler invariants, metrics."""
+import numpy as np
+
+from repro.data import graph_sampler, lm_data, metrics
+
+
+def test_lm_batches_deterministic_and_step_indexed():
+    b1 = lm_data.batch_at(7, 42, batch=4, seq=16, vocab=97)
+    b2 = lm_data.batch_at(7, 42, batch=4, seq=16, vocab=97)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = lm_data.batch_at(7, 43, batch=4, seq=16, vocab=97)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_lm_task_is_affine_recurrence():
+    b = lm_data.batch_at(0, 0, batch=2, seq=8, vocab=31)
+    t, l = b["tokens"][0].astype(np.int64), b["labels"][0].astype(np.int64)
+    # exists (a, b): l[i] == (a*t[i]+b) % 31 for all i
+    found = False
+    for a in range(1, 31):
+        bb = (l[0] - a * t[0]) % 31
+        if ((a * t + bb) % 31 == l).all():
+            found = True
+            break
+    assert found
+
+
+def test_graph_sampler_fanout_bounds():
+    g = graph_sampler.CSRGraph.random(0, n_nodes=500, avg_degree=8)
+    seeds = np.arange(16)
+    sub = graph_sampler.sample_fanout(g, seeds, [5, 3], seed=1)
+    n_nodes = int(sub.node_mask.sum())
+    n_edges = int(sub.edge_mask.sum())
+    assert n_edges <= 16 * 5 + 16 * 5 * 3
+    assert n_nodes <= 16 + n_edges
+    # every edge endpoint is a valid local node
+    assert sub.src[:n_edges].max() < n_nodes
+    assert sub.dst[:n_edges].max() < n_nodes
+    # seeds map to themselves
+    np.testing.assert_array_equal(sub.nodes[:16], seeds)
+
+
+def test_graph_sampler_edges_exist_in_graph():
+    g = graph_sampler.CSRGraph.random(3, n_nodes=100, avg_degree=6)
+    sub = graph_sampler.sample_fanout(g, np.array([1, 2]), [4], seed=0)
+    ne = int(sub.edge_mask.sum())
+    for i in range(ne):
+        u = int(sub.nodes[sub.dst[i]])       # message dst = the sampled-for
+        v = int(sub.nodes[sub.src[i]])
+        assert v in g.neighbors(u)
+
+
+def test_minibatch_lg_shape_is_feasible():
+    """The assigned minibatch_lg buffers must hold any fanout-[15,10] draw."""
+    from repro.configs.base import GNN_SHAPES
+    m = GNN_SHAPES["minibatch_lg"].meta
+    assert m["n_edges_raw"] == 1024 * 15 + 1024 * 15 * 10
+    assert m["n_edges"] >= m["n_edges_raw"]          # mesh padding
+    assert m["n_edges"] % 512 == 0
+    assert m["n_nodes"] == 1024 + m["n_edges_raw"]
+
+
+def test_ndcg_hand_example():
+    retrieved = np.array([5, 9, 2])
+    relevant = np.array([5, 2])
+    gains = np.array([1.0, 0.5])
+    got = metrics.ndcg_at_k(retrieved, relevant, gains, 3)
+    want_dcg = 1.0 / np.log2(2) + 0.5 / np.log2(4)
+    want_ideal = 1.0 / np.log2(2) + 0.5 / np.log2(3)
+    np.testing.assert_allclose(got, want_dcg / want_ideal, rtol=1e-6)
+
+
+def test_precision_recall():
+    retrieved = np.array([1, 2, 3, 4])
+    relevant = np.array([2, 4, 9])
+    assert metrics.precision_at_k(retrieved, relevant, 4) == 0.5
+    np.testing.assert_allclose(metrics.recall_at_k(retrieved, relevant, 4),
+                               2 / 3)
+
+
+def test_corpus_quality_oracle_consistency():
+    from repro.data import corpus as corpus_lib
+    corp = corpus_lib.make_corpus(0, 200, emb_dim=16, n_topics=4)
+    qs = corpus_lib.make_queries(1, corp, 5, n_relevant=20)
+    # the oracle ranking must achieve NDCG 1.0 against itself
+    for i in range(5):
+        got = metrics.ndcg_at_k(qs.relevant[i], qs.relevant[i], qs.gains[i],
+                                10)
+        np.testing.assert_allclose(got, 1.0, rtol=1e-6)

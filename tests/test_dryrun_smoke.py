@@ -1,0 +1,61 @@
+"""The dry-run machinery itself, exercised end-to-end in a subprocess.
+
+Runs the fastest real cells (pir_serve + one recsys serve) on the actual
+512-device production meshes and checks the emitted JSON artifacts.
+"""
+import json
+import os
+import subprocess
+import sys
+
+
+def _run(args, timeout=560):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"})
+    return proc
+
+
+def test_pir_serve_cell_both_meshes(tmp_path):
+    proc = _run(["--arch", "pir_serve", "--shape", "online_b64",
+                 "--mesh", "both", "--out", str(tmp_path)])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    for mesh, n_dev in [("pod", 256), ("multipod", 512)]:
+        rec = json.load(open(
+            tmp_path / f"pir_serve__online_b64__{mesh}.json"))
+        assert rec["ok"], rec.get("error")
+        assert rec["n_devices"] == n_dev
+        # the zero-collective hot path claim, at production scale
+        assert rec["hlo"]["collective_bytes_per_device"] == {}
+        assert rec["memory"]["peak_per_device_bytes"] < 16 * 2**30
+        # per-device flops × devices == 2·m·n·b exactly (row+batch sharding)
+        total = sum(rec["hlo"]["dot_flops_per_device"].values()) * n_dev
+        want = 2 * (2 * 1024 * 1024) * 4096 * 64
+        assert abs(total - want) / want < 0.01
+
+
+def test_recsys_serve_cell(tmp_path):
+    proc = _run(["--arch", "dcn-v2", "--shape", "serve_p99",
+                 "--mesh", "pod", "--out", str(tmp_path)])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    rec = json.load(open(tmp_path / "dcn-v2__serve_p99__pod.json"))
+    assert rec["ok"], rec.get("error")
+    assert rec["memory"]["peak_per_device_bytes"] < 16 * 2**30
+    assert rec["compile_s"] > 0
+
+
+def test_roofline_terms_from_record(tmp_path):
+    _run(["--arch", "pir_serve", "--shape", "online_b512", "--mesh", "pod",
+          "--out", str(tmp_path)])
+    sys.path.insert(0, "src")
+    from repro.launch import roofline
+    rec = json.load(open(tmp_path / "pir_serve__online_b512__pod.json"))
+    t = roofline.terms(rec)
+    assert t["peak_used"] == "int8"
+    assert t["collective_s"] == 0.0
+    assert t["bottleneck"] in ("compute", "memory")
+    assert 0 < t["roofline_frac"] <= 1.05
+    # b=512 queries: 8·b int8-ops per DB byte ≫ 394/819 → MXU-bound
+    assert t["compute_s"] > t["memory_s"]

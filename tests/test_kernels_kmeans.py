@@ -1,0 +1,65 @@
+"""Fused k-means assignment kernel vs the unfused jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _data(seed, n, k, d):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal((n, d)), jnp.float32),
+            jnp.asarray(rng.standard_normal((k, d)), jnp.float32))
+
+
+@pytest.mark.parametrize("n,k,d", [
+    (256, 512, 64),           # one block
+    (512, 1024, 128),         # multi-block both axes
+    (300, 700, 96),           # ragged → wrapper pads
+    (64, 8, 32),              # K smaller than a block
+])
+def test_assign_matches_oracle(n, k, d):
+    x, c = _data(0, n, k, d)
+    got_a, got_d = ops.kmeans_assign(x, c, impl="pallas")
+    want_a, want_d = ref.kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_padded_centroids_never_win():
+    x, c = _data(1, 128, 5, 16)     # K=5 pads to 512
+    got_a, _ = ops.kmeans_assign(x, c, impl="pallas", block=(128, 512))
+    assert int(np.asarray(got_a).max()) < 5
+
+
+def test_earliest_index_tie_break():
+    """Duplicate centroids: kernel must pick the first, like jnp.argmin."""
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((64, 8)),
+                    jnp.float32)
+    c0 = jnp.asarray(np.random.default_rng(3).standard_normal((4, 8)),
+                     jnp.float32)
+    c = jnp.concatenate([c0, c0], axis=0)        # exact duplicates
+    got_a, _ = ops.kmeans_assign(x, c, impl="pallas", block=(64, 4))
+    assert int(np.asarray(got_a).max()) < 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 80), k=st.integers(1, 40), d=st.integers(1, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_matches_oracle(n, k, d, seed):
+    x, c = _data(seed, n, k, d)
+    got_a, _ = ops.kmeans_assign(x, c, impl="pallas", block=(32, 32))
+    want_a, _ = ref.kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
+def test_consistent_with_clustering_module():
+    from repro.core import clustering
+    x, c = _data(5, 200, 16, 32)
+    via_kernel, _ = ops.kmeans_assign(x, c, impl="pallas")
+    via_module = clustering.assign_to_centroids(x, c)
+    np.testing.assert_array_equal(np.asarray(via_kernel),
+                                  np.asarray(via_module))

@@ -1,0 +1,93 @@
+"""Pallas modmatmul kernel: bitwise-exact vs the pure-jnp u32 oracle.
+
+Integer crypto ⇒ exact equality, not allclose.  Sweeps shapes (aligned and
+ragged), batch sizes, and block configurations, in interpret mode on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.modmatmul import modmatmul_pallas
+
+
+def _rand_db_q(seed, m, n, b):
+    rng = np.random.default_rng(seed)
+    db = rng.integers(0, 256, (m, n), dtype=np.uint8)
+    q = rng.integers(0, 2**32, (n, b), dtype=np.uint32)
+    return jnp.asarray(db), jnp.asarray(q)
+
+
+@pytest.mark.parametrize("m,n,b", [
+    (256, 512, 128),          # exactly one block
+    (512, 1024, 128),         # multi-block contraction
+    (256, 512, 256),          # multi-block batch
+    (768, 1536, 128),         # 3x3 grid
+])
+def test_kernel_exact_aligned(m, n, b):
+    db, q = _rand_db_q(0, m, n, b)
+    got = modmatmul_pallas(db, q, interpret=True)
+    want = ref.modmatmul_ref(db, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,n,b", [
+    (100, 300, 1),            # ragged everything + matvec
+    (257, 513, 3),
+    (31, 1025, 129),
+])
+def test_ops_wrapper_pads_ragged(m, n, b):
+    db, q = _rand_db_q(1, m, n, b)
+    qq = q[:, 0] if b == 1 else q
+    got = ops.modmatmul(db, qq, impl="pallas")
+    want = ref.modmatmul_ref(db, qq)
+    assert got.shape == want.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block", [(128, 256, 128), (256, 512, 128),
+                                   (512, 512, 256)])
+def test_block_configs(block):
+    db, q = _rand_db_q(2, 512, 1024, 256)
+    got = ops.modmatmul(db, q, impl="pallas", block=block)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.modmatmul_ref(db, q)))
+
+
+def test_extreme_values_wraparound():
+    """All-255 DB × all-(2^32−1) queries stresses every carry path."""
+    m, n, b = 256, 512, 128
+    db = jnp.full((m, n), 255, jnp.uint8)
+    q = jnp.full((n, b), 0xFFFFFFFF, jnp.uint32)
+    got = modmatmul_pallas(db, q, interpret=True)
+    want = ref.modmatmul_ref(db, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_xla_impl_matches_numpy_u64():
+    rng = np.random.default_rng(3)
+    db = rng.integers(0, 256, (64, 96), dtype=np.uint8)
+    q = rng.integers(0, 2**32, (96, 5), dtype=np.uint32)
+    got = np.asarray(ops.modmatmul(jnp.asarray(db), jnp.asarray(q), impl="xla"))
+    want = ((db.astype(np.uint64) @ q.astype(np.uint64)) & 0xFFFFFFFF)
+    np.testing.assert_array_equal(got, want.astype(np.uint32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 64), n=st.integers(1, 128), b=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_pallas_equals_oracle(m, n, b, seed):
+    db, q = _rand_db_q(seed, m, n, b)
+    got = ops.modmatmul(db, q, impl="pallas", block=(32, 64, 32))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.modmatmul_ref(db, q)))
+
+
+def test_dtype_guards():
+    db, q = _rand_db_q(4, 8, 8, 1)
+    with pytest.raises(TypeError):
+        ops.modmatmul(db.astype(jnp.int32), q)
+    with pytest.raises(TypeError):
+        ops.modmatmul(db, q.astype(jnp.int64))

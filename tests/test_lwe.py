@@ -1,0 +1,108 @@
+"""LWE scheme correctness: bitwise homomorphic exactness + noise margins."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lwe
+
+
+def test_u32_matmul_is_exact_mod_2_32():
+    """Foundation check: XLA u32 dot wraps exactly mod 2^32."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 2**32, (32, 48), dtype=np.uint32)
+    b = rng.integers(0, 2**32, (48, 8), dtype=np.uint32)
+    got = np.asarray(jnp.matmul(jnp.asarray(a), jnp.asarray(b)))
+    ref = ((a.astype(np.uint64) @ b.astype(np.uint64)) & 0xFFFFFFFF)
+    assert np.array_equal(got, ref.astype(np.uint32))
+
+
+@pytest.mark.parametrize("n,p", [(64, 256), (1024, 256), (4096, 256)])
+def test_decrypt_matvec_roundtrip(n, p):
+    """Dec(D · Enc(onehot_i)) == D[:, i] exactly, for random u8 DBs."""
+    params = lwe.LWEParams(p=p, q_switch=None)
+    assert lwe.noise_budget_ok(params, n)
+    m = 96
+    key = jax.random.PRNGKey(1)
+    k_db, k_s, k_e = jax.random.split(key, 3)
+    db = jax.random.randint(k_db, (m, n), 0, p, dtype=jnp.int32).astype(jnp.uint8)
+    a_mat = lwe.gen_public_matrix(3, n, params.k)
+    s = lwe.keygen(k_s, params)
+    idx = n // 3
+    onehot = jnp.zeros((n,), jnp.uint32).at[idx].set(1)
+    ct = lwe.encrypt_vector(k_e, s, a_mat, onehot, params.delta, params.sigma)
+
+    ans = jnp.matmul(db.astype(jnp.uint32), ct)
+    hint = jnp.matmul(db.astype(jnp.uint32), a_mat)
+    rec = lwe.hint_strip(ans, hint, s)
+    got = lwe.decode(rec, params)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(db[:, idx], np.uint32))
+
+
+def test_modulus_switched_roundtrip():
+    params = lwe.LWEParams(p=256, q_switch=1 << 16)
+    n, m = 2048, 128
+    assert lwe.noise_budget_ok(params, n)
+    key = jax.random.PRNGKey(2)
+    k_db, k_s, k_e = jax.random.split(key, 3)
+    db = jax.random.randint(k_db, (m, n), 0, 256, dtype=jnp.int32).astype(jnp.uint8)
+    a_mat = lwe.gen_public_matrix(5, n, params.k)
+    s = lwe.keygen(k_s, params)
+    idx = 17
+    onehot = jnp.zeros((n,), jnp.uint32).at[idx].set(1)
+    ct = lwe.encrypt_vector(k_e, s, a_mat, onehot, params.delta, params.sigma)
+    ans = jnp.matmul(db.astype(jnp.uint32), ct)
+    hint = jnp.matmul(db.astype(jnp.uint32), a_mat)
+
+    ans_sw = lwe.switch_modulus(ans, params.q_switch)
+    assert ans_sw.dtype == jnp.uint16  # downlink halved
+    got = lwe.decode_switched(ans_sw, hint, s, params)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(db[:, idx], np.uint32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(idx=st.integers(0, 255), seed=st.integers(0, 2**31 - 1))
+def test_property_any_index_any_key(idx, seed):
+    """Hypothesis: recovery is exact for arbitrary index / key / DB."""
+    params = lwe.LWEParams(p=256, q_switch=None)
+    n, m = 256, 32
+    key = jax.random.PRNGKey(seed)
+    k_db, k_s, k_e = jax.random.split(key, 3)
+    db = jax.random.randint(k_db, (m, n), 0, 256, dtype=jnp.int32).astype(jnp.uint8)
+    a_mat = lwe.gen_public_matrix(11, n, params.k)
+    s = lwe.keygen(k_s, params)
+    onehot = jnp.zeros((n,), jnp.uint32).at[idx].set(1)
+    ct = lwe.encrypt_vector(k_e, s, a_mat, onehot, params.delta, params.sigma)
+    ans = jnp.matmul(db.astype(jnp.uint32), ct)
+    hint = jnp.matmul(db.astype(jnp.uint32), a_mat)
+    got = lwe.decode(lwe.hint_strip(ans, hint, s), params)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(db[:, idx], np.uint32))
+
+
+def test_choose_params_shrinks_p_when_needed():
+    small = lwe.choose_params(256)
+    assert small.p == 256
+    # gigantic inner dim forces a smaller plaintext modulus
+    big = lwe.choose_params(1 << 34, q_switch=None)
+    assert big.p < 256
+    assert lwe.noise_budget_ok(big, 1 << 34)
+
+
+def test_noise_budget_monotone():
+    p = lwe.LWEParams()
+    assert lwe.noise_bound(p, 1024) < lwe.noise_bound(p, 4096)
+
+
+def test_query_is_pseudorandom_marginal():
+    """Sanity (not a proof): ciphertext words should look ~uniform mod 2^32."""
+    params = lwe.LWEParams()
+    n = 4096
+    a_mat = lwe.gen_public_matrix(9, n, params.k)
+    s = lwe.keygen(jax.random.PRNGKey(3), params)
+    onehot = jnp.zeros((n,), jnp.uint32).at[0].set(1)
+    ct = lwe.encrypt_vector(jax.random.PRNGKey(4), s, a_mat, onehot,
+                            params.delta, params.sigma)
+    x = np.asarray(ct).astype(np.float64) / 2**32
+    assert abs(x.mean() - 0.5) < 0.05
+    assert abs(x.var() - 1 / 12) < 0.01

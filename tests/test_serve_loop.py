@@ -1,0 +1,53 @@
+"""Deadline batcher + serving loop: batching policy and correctness."""
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.data import corpus as corpus_lib
+from repro.launch.serve import DeadlineBatcher, PIRServeLoop, Request
+
+
+def test_batcher_cuts_at_max_batch():
+    b = DeadlineBatcher(max_batch=4, deadline_ms=1e9)
+    for i in range(5):
+        b.submit(Request(i, np.zeros(2), t_arrival=0.0))
+    assert b.ready(now=0.0)                 # 5 ≥ max_batch
+    cut = b.cut()
+    assert [r.rid for r in cut] == [0, 1, 2, 3]
+    assert len(b.queue) == 1
+
+
+def test_batcher_cuts_on_deadline():
+    b = DeadlineBatcher(max_batch=100, deadline_ms=20.0)
+    b.submit(Request(0, np.zeros(2), t_arrival=1.000))
+    assert not b.ready(now=1.010)           # 10ms old
+    assert b.ready(now=1.025)               # 25ms old → deadline
+
+
+def test_batcher_empty_never_ready():
+    b = DeadlineBatcher()
+    assert not b.ready(now=123.0)
+
+
+@pytest.fixture(scope="module")
+def system():
+    corp = corpus_lib.make_corpus(0, 250, emb_dim=24, n_topics=8)
+    sys = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                      n_clusters=8, impl="xla")
+    return sys, corp
+
+
+def test_serve_loop_end_to_end(system):
+    sys, corp = system
+    loop = PIRServeLoop(sys, max_batch=4, deadline_ms=1e9)
+    for rid in range(6):
+        loop.submit(rid, corp.embeddings[rid * 11])
+        loop.tick()
+    loop.drain()
+    assert len(loop.responses) == 6
+    # each response's top-1 must be the anchor doc (exact private retrieval)
+    for r in loop.responses:
+        top_ids = [d for d, _, _ in r.top]
+        assert r.rid * 11 in top_ids
+    # first four went out as one batch of 4
+    assert loop.responses[0].batch_size == 4
