@@ -1,0 +1,115 @@
+"""Live-index freshness benchmark: delta-hint updates vs full offline rebuild.
+
+For mutation batches touching a growing fraction of clusters, measure
+
+  delta_s      — LiveIndex.commit() wall time (plan + column repack +
+                 sparse ΔH GEMM + epoch publish)
+  rebuild_s    — a from-scratch offline build of the same post-mutation
+                 corpus (k-means + pack + full hint GEMM), the only way a
+                 frozen-index deployment can absorb the batch
+  patch_bytes  — client downlink to stay fresh (HintPatch wire bytes)
+  hint_bytes   — what re-downloading the hint would cost instead
+
+Acceptance (ISSUE 1): a batch touching ≤5% of clusters must commit ≥10×
+faster than the rebuild, with patch_bytes ≪ hint_bytes.
+
+    PYTHONPATH=src python -m benchmarks.update_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def run(*, n_docs: int = 3000, n_clusters: int = 64, emb_dim: int = 48,
+        fracs=(0.02, 0.05, 0.10, 0.25), seed: int = 0) -> list[dict]:
+    from repro.data import corpus as corpus_lib
+    from repro.core import pipeline
+    from repro.update import LiveIndex
+
+    corp = corpus_lib.make_corpus(seed, n_docs, emb_dim=emb_dim,
+                                  n_topics=n_clusters)
+    rows = []
+    for frac in fracs:
+        live = LiveIndex.build(corp.texts, corp.embeddings,
+                               n_clusters=n_clusters, impl="xla")
+        rng = np.random.default_rng(seed + 1)
+        # one replace per targeted cluster: docs are picked from distinct
+        # clusters so the batch touches ~frac·n columns
+        n_target = max(1, int(round(frac * n_clusters)))
+        targets = []
+        seen = set()
+        for doc in rng.permutation(n_docs):
+            cl = int(live.system.assignment[doc])
+            if cl not in seen:
+                seen.add(cl)
+                targets.append(int(doc))
+            if len(targets) == n_target:
+                break
+        # warmup round: same batch size → same bucketed GEMM shape, so the
+        # timed round below measures the steady-state streaming cost
+        for doc in targets:
+            live.replace(doc, f"warmup doc {doc}".encode(),
+                         corp.embeddings[doc])
+        live.commit()
+        for doc in targets:
+            live.replace(doc, f"refreshed doc {doc}".encode(),
+                         corp.embeddings[doc])
+
+        t0 = time.perf_counter()
+        patch = live.commit()
+        delta_s = time.perf_counter() - t0
+        assert patch is not None and not patch.is_full
+
+        ids = live.doc_ids()
+        texts = [live._docs[i][0] for i in ids]
+        embs = np.stack([live._docs[i][1] for i in ids])
+        t0 = time.perf_counter()
+        rebuilt = pipeline.PirRagSystem.build(texts, embs,
+                                              n_clusters=n_clusters,
+                                              impl="xla", doc_ids=ids)
+        rebuild_s = time.perf_counter() - t0
+
+        rows.append(dict(
+            frac_clusters=len(patch.cols) / n_clusters,
+            touched=len(patch.cols),
+            delta_s=delta_s,
+            rebuild_s=rebuild_s,
+            speedup=rebuild_s / delta_s,
+            patch_bytes=patch.wire_bytes,
+            hint_bytes=live.system.cfg.hint_bytes,
+            hint_ratio=patch.wire_bytes / live.system.cfg.hint_bytes,
+            rebuilt_m=rebuilt.db.m))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    kwargs = (dict(n_docs=800, n_clusters=16, emb_dim=24,
+                   fracs=(0.0625, 0.25))
+              if args.fast else {})
+    rows = run(**kwargs)
+    print("frac_clusters,touched,delta_s,rebuild_s,speedup,"
+          "patch_bytes,hint_bytes,hint_ratio")
+    for r in rows:
+        print(f"{r['frac_clusters']:.3f},{r['touched']},{r['delta_s']:.4f},"
+              f"{r['rebuild_s']:.3f},{r['speedup']:.1f},{r['patch_bytes']},"
+              f"{r['hint_bytes']},{r['hint_ratio']:.2e}")
+    small = [r for r in rows if r["frac_clusters"] <= 0.05 + 1e-9]
+    for r in small:
+        ok = r["speedup"] >= 10 and r["hint_ratio"] < 0.1
+        print(f"{'PASS' if ok else 'FAIL'}: ≤5% batch — "
+              f"{r['speedup']:.1f}× vs rebuild, patch is "
+              f"{r['hint_ratio']:.3%} of the hint")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,15 +15,34 @@ Column layout: [n_docs : u32][record ...][zero padding to m rows].
 m = max serialized cluster size, rounded up to `chunk_size` (the PIR rows are
 byte-granular because the plaintext modulus is p = 256; `chunk_size` is the
 padding/alignment granule).
+
+Live-index support (update/): columns are individually re-serializable via
+``pack_column`` / ``rebuild_columns`` so a streaming mutation touching
+clusters J re-packs only those columns.  ``used_bytes`` tracks per-column
+occupancy — the capacity accounting that decides when an insert overflows
+`m` and forces a full rebuild instead of a sparse delta.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
 _HDR = 16  # doc_id + text_len + scale + offset
+
+#: (doc_id, embedding f32 (d,), text bytes) — the canonical document triple.
+DocTriple = tuple[int, np.ndarray, bytes]
+
+
+class ColumnOverflowError(ValueError):
+    """A re-packed column no longer fits in the m-row budget (rebuild needed)."""
+
+    def __init__(self, cluster: int, need: int, have: int):
+        super().__init__(f"cluster {cluster} needs {need} bytes > m={have}")
+        self.cluster = cluster
+        self.need = need
+        self.have = have
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +53,7 @@ class ChunkedDB:
     n_docs: int
     cluster_sizes: np.ndarray     # (n,) docs per cluster
     pad_fraction: float           # wasted bytes / total bytes (reported)
+    used_bytes: np.ndarray | None = None   # (n,) serialized bytes per column
 
     @property
     def m(self) -> int:
@@ -88,31 +108,74 @@ def record_bytes(emb_dim: int, text_len: int) -> int:
     return _HDR + emb_dim + text_len
 
 
+def column_payload_bytes(emb_dim: int, text_lens: Sequence[int]) -> int:
+    """Serialized size of a column holding docs with the given text lengths."""
+    return 4 + sum(record_bytes(emb_dim, t) for t in text_lens)
+
+
+def pack_column(docs: Sequence[DocTriple]) -> bytes:
+    """Serialize one cluster's documents into its column payload.
+
+    Canonical ordering (ascending doc_id) is enforced so an incremental
+    column rebuild is byte-identical to a from-scratch pack of the same
+    document set — the invariant the delta-hint path relies on.
+    """
+    docs = sorted(docs, key=lambda d: d[0])
+    parts = [np.uint32(len(docs)).tobytes()]
+    parts += [serialize_doc(int(i), emb, text) for i, emb, text in docs]
+    return b"".join(parts)
+
+
+def rebuild_columns(m: int, docs_by_col: Mapping[int, Sequence[DocTriple]]
+                    ) -> tuple[np.ndarray, np.ndarray, dict[int, int]]:
+    """Re-serialize the given clusters into fresh m-row columns.
+
+    Returns (sorted cluster ids (J,), new columns (m, J) u8, used bytes per
+    cluster).  Raises ColumnOverflowError when a payload exceeds m — the
+    caller's signal to fall back to a full rebuild (m must grow).
+    """
+    cols = np.asarray(sorted(docs_by_col), np.int64)
+    out = np.zeros((m, len(cols)), np.uint8)
+    used: dict[int, int] = {}
+    for idx, j in enumerate(cols):
+        payload = pack_column(docs_by_col[int(j)])
+        if len(payload) > m:
+            raise ColumnOverflowError(int(j), len(payload), m)
+        out[:len(payload), idx] = np.frombuffer(payload, np.uint8)
+        used[int(j)] = len(payload)
+    return cols, out, used
+
+
 def build_chunked_db(texts: Sequence[bytes], embeddings: np.ndarray,
                      assignment: np.ndarray, n_clusters: int,
-                     chunk_size: int = 256) -> ChunkedDB:
-    """Pack the corpus into the chunk-transposed uint8 matrix."""
+                     chunk_size: int = 256,
+                     doc_ids: Sequence[int] | None = None) -> ChunkedDB:
+    """Pack the corpus into the chunk-transposed uint8 matrix.
+
+    `doc_ids` (default: positional 0..N-1) lets a live-index full rebuild
+    preserve stable external document ids across a sparse id space.
+    """
     n_docs, emb_dim = embeddings.shape
     assert len(texts) == n_docs
+    ids = np.arange(n_docs) if doc_ids is None else np.asarray(doc_ids)
+    assert len(ids) == n_docs
 
     columns: list[bytes] = []
     sizes = np.zeros(n_clusters, np.int64)
     for j in range(n_clusters):
         members = np.nonzero(assignment == j)[0]
         sizes[j] = len(members)
-        parts = [np.uint32(len(members)).tobytes()]
-        parts += [serialize_doc(int(i), embeddings[i], texts[i])
-                  for i in members]
-        columns.append(b"".join(parts))
+        columns.append(pack_column(
+            [(int(ids[i]), embeddings[i], texts[i]) for i in members]))
 
     raw = max(len(c) for c in columns)
     m = ((raw + chunk_size - 1) // chunk_size) * chunk_size
     mat = np.zeros((m, n_clusters), np.uint8)
-    used = 0
+    used = np.zeros(n_clusters, np.int64)
     for j, c in enumerate(columns):
         mat[:len(c), j] = np.frombuffer(c, np.uint8)
-        used += len(c)
-    pad_frac = 1.0 - used / float(m * n_clusters)
+        used[j] = len(c)
+    pad_frac = 1.0 - int(used.sum()) / float(m * n_clusters)
     return ChunkedDB(matrix=mat, emb_dim=emb_dim, chunk_size=chunk_size,
                      n_docs=n_docs, cluster_sizes=sizes,
-                     pad_fraction=pad_frac)
+                     pad_fraction=pad_frac, used_bytes=used)

@@ -41,6 +41,7 @@ class PirRagSystem:
     setup_seconds: float          # total offline time
     index_seconds: float = 0.0    # clustering + packing (no crypto)
     hint_seconds: float = 0.0     # hint GEMM (int8-roofline op on TPU)
+    assignment: np.ndarray | None = None  # (N,) doc→cluster (live index)
 
     # -- offline ------------------------------------------------------------
 
@@ -49,6 +50,7 @@ class PirRagSystem:
               n_clusters: int, kmeans_iters: int = 25, chunk_size: int = 256,
               balance_factor: float | None = None, seed: int = 0,
               impl: str = "auto", q_switch: int | None = 1 << 16,
+              doc_ids: Sequence[int] | None = None,
               ) -> "PirRagSystem":
         t0 = time.perf_counter()
         emb_j = jnp.asarray(embeddings, jnp.float32)
@@ -62,7 +64,8 @@ class PirRagSystem:
         else:
             assign = np.asarray(km.assignment)
         db = chunking.build_chunked_db(texts, np.asarray(embeddings, np.float32),
-                                       assign, n_clusters, chunk_size)
+                                       assign, n_clusters, chunk_size,
+                                       doc_ids=doc_ids)
         cfg = pir.make_config(db.m, db.n, impl=impl, q_switch=q_switch)
         server = pir.PIRServer(cfg, jnp.asarray(db.matrix))
         t_index = time.perf_counter()
@@ -70,7 +73,7 @@ class PirRagSystem:
         t_end = time.perf_counter()
         return cls(centroids=cents, db=db, cfg=cfg, server=server, hint=hint,
                    setup_seconds=t_end - t0, index_seconds=t_index - t0,
-                   hint_seconds=t_end - t_index)
+                   hint_seconds=t_end - t_index, assignment=assign)
 
     # -- online -------------------------------------------------------------
 
@@ -122,14 +125,22 @@ class PirRagSystem:
         return top, stats
 
     def query_batch(self, query_embs: np.ndarray, *, top_k: int = 10,
-                    seed: int = 0) -> list[list[tuple[int, float, bytes]]]:
-        """Batched serving: stack B encrypted queries into one server GEMM."""
+                    seed: int = 0, key: jax.Array | None = None
+                    ) -> list[list[tuple[int, float, bytes]]]:
+        """Batched serving: stack B encrypted queries into one server GEMM.
+
+        Per-query LWE secrets are derived by `fold_in` from ONE caller key
+        (or, absent a key, from `seed` as a fallback); the serve loop threads
+        a split stream through here so secrets never collide across batches.
+        """
+        if key is None:
+            key = jax.random.PRNGKey(seed)
         client = pir.PIRClient(self.cfg, self.hint)
         clusters = np.asarray(clustering.assign_to_centroids(
             jnp.asarray(query_embs, jnp.float32), jnp.asarray(self.centroids)))
         qs, states = [], []
         for b, c in enumerate(clusters):
-            qu, st = client.query(jax.random.PRNGKey(seed * 10007 + b), int(c))
+            qu, st = client.query(jax.random.fold_in(key, b), int(c))
             qs.append(qu)
             states.append(st)
         ans = self.server.answer(jnp.stack(qs, axis=1))      # (m, B)

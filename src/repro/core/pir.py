@@ -69,12 +69,19 @@ class PIRServer:
         assert db.dtype == jnp.uint8
         self.cfg = cfg
         self.db = db
+        self._a_mat: jax.Array | None = None   # lazy; immutable per config
+
+    @property
+    def a_matrix(self) -> jax.Array:
+        """The public LWE matrix A (seed-derived, cached across commits)."""
+        if self._a_mat is None:
+            self._a_mat = lwe.gen_public_matrix(
+                self.cfg.a_seed, self.cfg.n, self.cfg.params.k)
+        return self._a_mat
 
     def setup(self) -> jax.Array:
         """Offline hint H = D·A ∈ Z_q^{m×k} (the heavy one-time GEMM)."""
-        a_mat = lwe.gen_public_matrix(self.cfg.a_seed, self.cfg.n,
-                                      self.cfg.params.k)
-        return ops.hint_gemm(self.db, a_mat, impl=self.cfg.impl)
+        return ops.hint_gemm(self.db, self.a_matrix, impl=self.cfg.impl)
 
     def answer(self, qu: jax.Array) -> jax.Array:
         """Online answer: D·qu mod 2^32.  qu: (n,) or (n, batch) uint32."""
@@ -82,6 +89,49 @@ class PIRServer:
         if self.cfg.params.q_switch is not None:
             ans = lwe.switch_modulus(ans, self.cfg.params.q_switch)
         return ans
+
+    def update_columns(self, cols: jax.Array, new_cols: jax.Array
+                       ) -> jax.Array:
+        """Replace DB columns J and return the exact hint delta.
+
+        The hint is linear in the database, so a mutation confined to columns
+        J patches it with a sparse GEMM instead of a full rebuild:
+
+            ΔH = ΔD[:,J] · A[J,:]  =  D_new[:,J]·A[J,:] − D_old[:,J]·A[J,:]
+
+        Both products go through the same `ops.modmatmul` kernel path as the
+        offline hint, so `H + ΔH` is bit-identical to `setup()` on the
+        updated DB (all arithmetic exact mod 2^32).
+
+        cols: (J,) int column indices.  new_cols: (m, J) uint8.
+        Returns ΔH: (m, k) uint32.
+
+        The GEMM is bucketed: J is padded up to a power of two with columns
+        whose "new" contents equal their current contents, so padding slots
+        cancel exactly in ΔH while streamed mutation batches of varying size
+        reuse a handful of compiled shapes instead of recompiling per batch.
+        """
+        cols = jnp.asarray(cols)
+        new_cols = jnp.asarray(new_cols)
+        j = int(cols.shape[0])
+        assert new_cols.shape == (self.cfg.m, j)
+        assert new_cols.dtype == jnp.uint8
+        old_cols = self.db[:, cols]
+        self.db = self.db.at[:, cols].set(new_cols)  # true columns only
+
+        bucket = 1 << max(0, (j - 1).bit_length())
+        pad = min(bucket, self.cfg.n) - j
+        if pad > 0:
+            # pad with column 0 on BOTH sides of the subtraction: its new
+            # and old contents are identical, so it contributes ΔH = 0
+            cols_g = jnp.concatenate([cols, jnp.zeros(pad, cols.dtype)])
+            unchanged = jnp.repeat(self.db[:, :1], pad, axis=1)
+            new_g = jnp.concatenate([new_cols, unchanged], axis=1)
+            old_g = jnp.concatenate([old_cols, unchanged], axis=1)
+        else:
+            cols_g, new_g, old_g = cols, new_cols, old_cols
+        a_j = self.a_matrix[cols_g]                        # (J', k)
+        return ops.delta_gemm(new_g, old_g, a_j, impl=self.cfg.impl)
 
 
 # ---------------------------------------------------------------------------

@@ -71,6 +71,29 @@ def hint_gemm(db: jax.Array, a_mat: jax.Array, *, impl: str = "auto",
     return modmatmul(db, a_mat, impl=impl, block=block)
 
 
+def delta_gemm(new_cols: jax.Array, old_cols: jax.Array, a_j: jax.Array, *,
+               impl: str = "auto") -> jax.Array:
+    """Sparse hint delta ΔH = (new − old)·A_J, exact mod 2^32.
+
+    The live-index hot path (PIRServer.update_columns).  The difference
+    ΔD isn't u8-representable (entries ∈ [−255, 255] wrap to u32), so:
+
+      xla    — ONE u32 GEMM on the wrapped difference (ref path accepts
+               u32; halves the work vs subtracting two products)
+      pallas — two u8 limb GEMMs on the MXU, subtracted afterwards (the
+               MXU kernel needs u8 inputs, and on TPU the GEMMs are cheap)
+
+    new_cols/old_cols: (m, J) uint8.  a_j: (J, k) uint32.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        diff = new_cols.astype(U32) - old_cols.astype(U32)
+        return ref.modmatmul_ref(diff, a_j)
+    return (modmatmul(new_cols, a_j, impl=impl)
+            - modmatmul(old_cols, a_j, impl=impl))
+
+
 def kmeans_assign(x: jax.Array, c: jax.Array, *, impl: str = "auto",
                   block: tuple[int, int] = (256, 512)):
     """Fused nearest-centroid assignment: (assign (N,) i32, min_d2 (N,))."""

@@ -1,10 +1,23 @@
-"""PIR serving driver: deadline-batched private retrieval.
+"""PIR serving driver: deadline-batched private retrieval + live mutations.
 
 Production posture: requests queue; a batch is cut when either `max_batch`
 accumulate or the oldest request reaches `deadline_ms` (p99-latency control —
 the serving-side straggler mitigation).  All queries in a batch become ONE
 modular GEMM (ans = D·[q_1 … q_B]), which is the regime where the TPU kernel
 is MXU-bound (EXPERIMENTS §Perf-A).
+
+Live-index mode (`live=LiveIndex(...)`): corpus mutations stream in via
+`submit_mutation` and are committed *between* query batches, so a GEMM never
+races a column swap.  Each request records the epoch of the hint it was
+encrypted against; a commit advances the epoch, so requests already queued
+become stale — the loop rejects them, the (simulated) client syncs its
+HintCache and re-encrypts, and the retry is served in the next batch.
+`stale_retries` counts these, the freshness/latency trade-off made visible.
+
+Per-query LWE secrets come from ONE `jax.random.split` stream threaded
+through the loop (`fold_in` per query inside `query_batch`) — wall-clock
+seeding could collide secrets across batches, which is a security bug, not
+just a testing nuisance.
 
     PYTHONPATH=src python -m repro.launch.serve --docs 2000 --requests 64
 """
@@ -25,6 +38,8 @@ class Request:
     rid: int
     query_emb: np.ndarray
     t_arrival: float
+    epoch: int = 0                 # hint epoch the query was formed against
+    retries: int = 0
 
 
 @dataclasses.dataclass
@@ -33,6 +48,8 @@ class Response:
     top: list
     t_done: float
     batch_size: int
+    epoch: int = 0
+    retries: int = 0
 
 
 class DeadlineBatcher:
@@ -45,6 +62,10 @@ class DeadlineBatcher:
 
     def submit(self, req: Request):
         self.queue.append(req)
+
+    def requeue(self, req: Request):
+        """Put a rejected request back at the head (it keeps its arrival)."""
+        self.queue.appendleft(req)
 
     def ready(self, now: float) -> bool:
         if not self.queue:
@@ -62,37 +83,87 @@ class DeadlineBatcher:
 
 
 class PIRServeLoop:
+    """Deadline-batched serving; optionally wraps a LiveIndex for mutations.
+
+    `system` may be a PirRagSystem (static corpus) or, with `live=...`, the
+    LiveIndex whose `.system` is queried at its current epoch.
+    """
+
     def __init__(self, system, *, max_batch: int = 64,
                  deadline_ms: float = 20.0,
-                 clock: Callable[[], float] = time.perf_counter):
-        self.system = system
+                 clock: Callable[[], float] = time.perf_counter,
+                 live=None, seed: int = 0):
+        self.live = live if live is not None else (
+            system if hasattr(system, "epochs") else None)
+        self.system = system if self.live is None else self.live.system
         self.batcher = DeadlineBatcher(max_batch=max_batch,
                                        deadline_ms=deadline_ms)
         self.clock = clock
         self.responses: list[Response] = []
+        self.mutations: deque = deque()
+        self.stale_retries = 0
+        self._key = jax.random.PRNGKey(seed)   # per-batch query-key stream
+
+    @property
+    def epoch(self) -> int:
+        return self.live.epoch if self.live is not None else 0
 
     def submit(self, rid: int, query_emb: np.ndarray):
-        self.batcher.submit(Request(rid, query_emb, self.clock()))
+        """A client submits a query formed against the CURRENT epoch's hint."""
+        self.batcher.submit(Request(rid, query_emb, self.clock(),
+                                    epoch=self.epoch))
 
-    def tick(self) -> int:
-        """Serve one batch if ready; returns number of requests served."""
+    def submit_mutation(self, mut):
+        assert self.live is not None, "mutations need a LiveIndex"
+        self.mutations.append(mut)
+
+    def _commit_mutations(self):
+        """Fold queued mutations into one epoch between query batches."""
+        if self.live is None or not self.mutations:
+            return None
+        while self.mutations:
+            self.live.journal.append(self.mutations.popleft())
+        return self.live.commit()
+
+    def tick(self, force: bool = False) -> int:
+        """Serve one batch if ready; returns number of requests served.
+
+        force=True flushes a partial batch regardless of the deadline
+        (used by drain) WITHOUT touching the configured deadline_ms.
+        """
+        self._commit_mutations()
         now = self.clock()
-        if not self.batcher.ready(now):
+        if not self.batcher.ready(now) and not (force and self.batcher.queue):
             return 0
         batch = self.batcher.cut()
-        embs = np.stack([r.query_emb for r in batch])
-        results = self.system.query_batch(embs, top_k=5,
-                                          seed=int(now * 1e3) % 99991)
+
+        # Epoch admission control: a query encrypted against a superseded
+        # hint would decode garbage, so reject it; the client syncs its
+        # cached hint (HintCache.sync) and re-encrypts against the head.
+        cur = self.epoch
+        fresh = [r for r in batch if r.epoch == cur]
+        for r in reversed([r for r in batch if r.epoch != cur]):
+            self.stale_retries += 1
+            r.epoch = cur
+            r.retries += 1
+            self.batcher.requeue(r)
+        if not fresh:
+            return 0
+
+        system = self.live.system if self.live is not None else self.system
+        embs = np.stack([r.query_emb for r in fresh])
+        self._key, kq = jax.random.split(self._key)
+        results = system.query_batch(embs, top_k=5, key=kq)
         t = self.clock()
-        for req, top in zip(batch, results):
-            self.responses.append(Response(req.rid, top, t, len(batch)))
-        return len(batch)
+        for req, top in zip(fresh, results):
+            self.responses.append(Response(req.rid, top, t, len(fresh),
+                                           epoch=cur, retries=req.retries))
+        return len(fresh)
 
     def drain(self):
-        while self.batcher.queue:
-            self.tick()
-            # force the deadline on the final partial batch
-            self.batcher.deadline_ms = 0.0
+        """Serve everything still queued, force-flushing partial batches."""
+        while self.batcher.queue or self.mutations:
+            self.tick(force=True)
 
 
 def main():  # pragma: no cover - exercised by examples/tests
@@ -101,30 +172,51 @@ def main():  # pragma: no cover - exercised by examples/tests
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--mutate-every", type=int, default=0,
+                    help="if >0, replace a random doc every N requests "
+                         "(exercises the live-index delta path)")
     args = ap.parse_args()
 
     from repro.core import pipeline
     from repro.data import corpus as corpus_lib
+    from repro.update import LiveIndex, journal as journal_lib
 
     corp = corpus_lib.make_corpus(0, args.docs, emb_dim=64, n_topics=24)
-    system = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
-                                         n_clusters=24, impl="xla")
-    loop = PIRServeLoop(system, max_batch=args.max_batch,
-                        deadline_ms=args.deadline_ms)
     rng = np.random.default_rng(0)
+    if args.mutate_every > 0:
+        live = LiveIndex.build(corp.texts, corp.embeddings,
+                               n_clusters=24, impl="xla")
+        loop = PIRServeLoop(live, max_batch=args.max_batch,
+                            deadline_ms=args.deadline_ms)
+    else:
+        live = None
+        system = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                             n_clusters=24, impl="xla")
+        loop = PIRServeLoop(system, max_batch=args.max_batch,
+                            deadline_ms=args.deadline_ms)
+
     t0 = time.perf_counter()
     for rid in range(args.requests):
         q = corp.embeddings[rng.integers(0, args.docs)]
         loop.submit(rid, q)
+        if live is not None and args.mutate_every and rid % args.mutate_every == 0:
+            d = int(rng.integers(0, args.docs))
+            loop.submit_mutation(journal_lib.replace(
+                d, f"refreshed doc {d}".encode(), corp.embeddings[d]))
         loop.tick()
     loop.drain()
     dt = time.perf_counter() - t0
+    if not loop.responses:
+        print(f"served 0 requests in {dt:.2f}s")
+        return
     lat = [r.t_done - t0 for r in loop.responses]
     sizes = [r.batch_size for r in loop.responses]
     print(f"served {len(loop.responses)} requests in {dt:.2f}s; "
           f"mean batch {np.mean(sizes):.1f}; "
           f"p50/p99 completion {np.percentile(lat, 50):.2f}/"
-          f"{np.percentile(lat, 99):.2f}s")
+          f"{np.percentile(lat, 99):.2f}s"
+          + (f"; epoch {loop.epoch}; stale retries {loop.stale_retries}"
+             if live is not None else ""))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Live-index subsystem: streaming corpus mutations over a PirRagSystem.
+
+The paper's offline/online split assumes a frozen corpus; this package makes
+the index *live*.  Because the PIR hint `H = D·A` is linear in the database,
+a mutation batch touching clusters J yields an exact sparse patch
+`ΔH = ΔD[:,J]·A[J,:]` — a small GEMM instead of a full offline rebuild, and
+a tiny versioned download (`HintPatch`) instead of a fresh m×k hint.
+
+Layering:
+
+    journal.py — durable append-only mutation log (insert/delete/replace)
+    planner.py — mutations → touched clusters + overflow / pad-degradation
+                 full-rebuild triggers (column-capacity accounting)
+    epochs.py  — versioned HintPatch wire format + client-side HintCache
+    live.py    — LiveIndex: orchestrates plan → column rebuild → delta GEMM
+                 → epoch publish, with bit-exactness vs a from-scratch setup
+"""
+from repro.update.epochs import EpochLog, HintCache, HintPatch, StaleEpochError
+from repro.update.journal import Mutation, MutationJournal
+from repro.update.live import LiveIndex
+from repro.update.planner import UpdatePlan, plan_updates
+
+__all__ = [
+    "EpochLog", "HintCache", "HintPatch", "StaleEpochError",
+    "Mutation", "MutationJournal", "LiveIndex", "UpdatePlan", "plan_updates",
+]

@@ -1,0 +1,219 @@
+"""LiveIndex: streaming corpus mutations over a PirRagSystem.
+
+Mutations accumulate in the journal; `commit()` folds the pending batch into
+one published epoch:
+
+    plan      — planner resolves the batch, accounts column capacity
+    repack    — `chunking.rebuild_columns` re-serializes only touched columns
+    delta     — `PIRServer.update_columns` swaps the columns in-place and
+                returns ΔH = ΔD[:,J]·A[J,:] via the modmatmul kernel path
+    publish   — EpochLog gains a HintPatch; clients `HintCache.sync()` to
+                patch their cached hint instead of re-downloading it
+
+When the planner trips a full-rebuild trigger (insert overflowing the m-row
+budget, or pad_fraction degrading past the threshold after deletes), the
+epoch is published as a full-hint patch over a freshly re-clustered system.
+
+Exactness invariant (tested): after any mutation sequence, the incrementally
+patched hint — server-side AND client-side — is bit-identical to
+`server.setup()` on the rebuilt database.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chunking, pipeline
+from repro.update import journal as journal_lib
+from repro.update import planner
+from repro.update.epochs import EpochLog, HintPatch
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass
+class CommitStats:
+    epoch: int
+    n_mutations: int
+    touched_clusters: int
+    full_rebuild: bool
+    reason: str | None
+    seconds: float
+    patch_bytes: int
+
+
+class LiveIndex:
+    """A PirRagSystem that accepts insert/delete/replace without downtime."""
+
+    def __init__(self, system: pipeline.PirRagSystem,
+                 texts, embeddings, *,
+                 doc_ids=None,
+                 max_pad_fraction: float = 0.95,
+                 rebuild_kwargs: dict | None = None):
+        assert system.assignment is not None, "build system via PirRagSystem.build"
+        assert system.db.used_bytes is not None
+        self.system = system
+        self.journal = journal_lib.MutationJournal()
+        self.epochs = EpochLog()
+        self.max_pad_fraction = max_pad_fraction
+        self._rebuild_kwargs = dict(rebuild_kwargs or {})
+        # _commit_full supplies the then-current id set itself
+        self._rebuild_kwargs.pop("doc_ids", None)
+        self._rebuild_kwargs.setdefault("n_clusters", system.db.n)
+        self.commits: list[CommitStats] = []
+
+        ids = (np.arange(len(texts)) if doc_ids is None
+               else np.asarray(doc_ids))
+        embs = np.asarray(embeddings, np.float32)
+        self._docs = {int(i): (texts[p], embs[p])
+                      for p, i in enumerate(ids)}
+        self._cluster_of = {int(i): int(system.assignment[p])
+                            for p, i in enumerate(ids)}
+        self._used = {j: int(system.db.used_bytes[j])
+                      for j in range(system.db.n)}
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(cls, texts, embeddings, *, n_clusters: int,
+              max_pad_fraction: float = 0.95, doc_ids=None,
+              **build_kwargs) -> "LiveIndex":
+        system = pipeline.PirRagSystem.build(
+            texts, embeddings, n_clusters=n_clusters, doc_ids=doc_ids,
+            **build_kwargs)
+        return cls(system, texts, embeddings, doc_ids=doc_ids,
+                   max_pad_fraction=max_pad_fraction,
+                   rebuild_kwargs=dict(n_clusters=n_clusters, **build_kwargs))
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self.epochs.epoch
+
+    @property
+    def n_docs(self) -> int:
+        return len(self._docs)
+
+    def pad_fraction(self) -> float:
+        db = self.system.db
+        return 1.0 - sum(self._used.values()) / float(db.m * db.n)
+
+    def doc_ids(self) -> list[int]:
+        return sorted(self._docs)
+
+    # -- mutation intake -----------------------------------------------------
+
+    def insert(self, doc_id: int, text: bytes, emb: np.ndarray):
+        self.journal.append(journal_lib.insert(doc_id, text, emb))
+
+    def delete(self, doc_id: int):
+        self.journal.append(journal_lib.delete(doc_id))
+
+    def replace(self, doc_id: int, text: bytes, emb: np.ndarray):
+        self.journal.append(journal_lib.replace(doc_id, text, emb))
+
+    # -- commit --------------------------------------------------------------
+
+    def commit(self) -> HintPatch | None:
+        """Fold all pending mutations into one published epoch."""
+        muts = self.journal.pending()
+        if not muts:
+            return None
+        t0 = time.perf_counter()
+        db = self.system.db
+        plan = planner.plan_updates(
+            muts, docs=self._docs, cluster_of=self._cluster_of,
+            centroids=self.system.centroids, m=db.m,
+            used_bytes=self._used, n_clusters=db.n, emb_dim=db.emb_dim,
+            max_pad_fraction=self.max_pad_fraction)
+        if plan.full_rebuild:
+            patch = self._commit_full(plan)
+        else:
+            patch = self._commit_delta(plan)
+        self.epochs.publish(patch)
+        self.journal.mark_committed(self.epochs.epoch)
+        self._docs = plan.new_docs
+        self._cluster_of = plan.new_cluster_of
+        self.commits.append(CommitStats(
+            epoch=self.epochs.epoch, n_mutations=len(muts),
+            touched_clusters=len(plan.touched),
+            full_rebuild=plan.full_rebuild, reason=plan.reason,
+            seconds=time.perf_counter() - t0,
+            patch_bytes=patch.wire_bytes))
+        return patch
+
+    def _commit_delta(self, plan: planner.UpdatePlan) -> HintPatch:
+        db, system = self.system.db, self.system
+        cols, new_cols, used = chunking.rebuild_columns(
+            db.m, plan.docs_by_cluster)
+
+        # Row truncation for the patch: beyond the max used length of the
+        # old and new touched columns both sides are zero padding, so ΔD
+        # there is identically zero and need not travel.
+        old_used = max(self._used[int(j)] for j in cols)
+        r = max(old_used, max(used.values()))
+        old_rows = np.asarray(system.server.db[:, jnp.asarray(cols)])[:r]
+        delta = (new_cols[:r].astype(np.int16)
+                 - old_rows.astype(np.int16))           # entries ∈ [−255, 255]
+
+        delta_h = system.server.update_columns(jnp.asarray(cols),
+                                               jnp.asarray(new_cols))
+        system.hint = system.hint + delta_h             # u32 wraparound: exact
+
+        # Mirror the host-side ChunkedDB view (tests/tools read db.matrix).
+        # Patched in place: copying the full (m, n) matrix per commit would
+        # make host cost O(DB) and swamp the O(m·|J|) delta path at scale.
+        db.matrix[:, cols] = new_cols
+        for j in cols:
+            db.cluster_sizes[j] = len(plan.docs_by_cluster[int(j)])
+            self._used[int(j)] = used[int(j)]
+            db.used_bytes[j] = used[int(j)]
+        self.system.db = dataclasses.replace(
+            db, n_docs=len(plan.new_docs),
+            pad_fraction=1.0 - sum(self._used.values()) / float(db.m * db.n))
+        return HintPatch(from_epoch=self.epochs.epoch,
+                         to_epoch=self.epochs.epoch + 1,
+                         cols=np.asarray(cols), delta=delta)
+
+    def _commit_full(self, plan: planner.UpdatePlan) -> HintPatch:
+        """Overflow / pad-degradation: re-cluster, re-pack, re-hint."""
+        ids = sorted(plan.new_docs)
+        texts = [plan.new_docs[i][0] for i in ids]
+        embs = np.stack([plan.new_docs[i][1] for i in ids])
+        new_system = pipeline.PirRagSystem.build(
+            texts, embs, doc_ids=ids, **self._rebuild_kwargs)
+        self.system = new_system
+        # Rebuild re-clusters, so the plan's incremental cluster map is stale.
+        plan.new_cluster_of.clear()
+        plan.new_cluster_of.update(
+            {i: int(new_system.assignment[p]) for p, i in enumerate(ids)})
+        self._used = {j: int(new_system.db.used_bytes[j])
+                      for j in range(new_system.db.n)}
+        return HintPatch(from_epoch=self.epochs.epoch,
+                         to_epoch=self.epochs.epoch + 1,
+                         full_hint=np.asarray(new_system.hint),
+                         cfg=new_system.cfg)
+
+    # -- epoch-checked queries ----------------------------------------------
+
+    def check_epoch(self, epoch: int):
+        """Raise StaleEpochError unless `epoch` is the published head."""
+        self.epochs.check_fresh(epoch)
+
+    def query(self, query_emb: np.ndarray, *, epoch: int, **kwargs):
+        """Epoch-checked private query (kwargs forwarded to the system).
+
+        A query formed against a stale cached hint would decode garbage, so
+        the server rejects it up front; the client syncs its HintCache and
+        retries.
+        """
+        self.check_epoch(epoch)
+        return self.system.query(query_emb, **kwargs)
+
+    def query_batch(self, query_embs: np.ndarray, *, epoch: int, **kwargs):
+        self.check_epoch(epoch)
+        return self.system.query_batch(query_embs, **kwargs)

@@ -1,0 +1,68 @@
+"""Hypothesis shim: property tests degrade to seeded sweeps when absent.
+
+The CI image carries hypothesis (see pyproject's `dev` extra), but minimal
+environments may not.  Importing `given/settings/st` from here instead of
+from hypothesis keeps every test module collectable either way: with
+hypothesis installed the real library runs; without it, each `@given` test
+runs `max_examples` deterministic draws from a seeded RNG over the same
+strategy ranges (no shrinking, but the property still gets exercised).
+
+Only the strategy surface this repo uses is shimmed: `st.integers` and
+`st.sampled_from`.
+"""
+from __future__ import annotations
+
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def draw(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom:
+        def __init__(self, options):
+            self.options = list(options)
+
+        def draw(self, rng):
+            return self.options[int(rng.integers(len(self.options)))]
+
+    class st:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+    def given(**strategies):
+        def decorate(fn):
+            # deliberately NOT functools.wraps: the wrapper must present a
+            # zero-arg signature or pytest treats the drawn parameters as
+            # missing fixtures
+            def run():
+                n = getattr(run, "_max_examples", 10)
+                for i in range(n):
+                    rng = np.random.default_rng(0xC0FFEE + i)
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategies.items()}
+                    fn(**drawn)
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+        return decorate
+
+    def settings(max_examples: int = 10, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

@@ -1,6 +1,6 @@
 """Chunk-transposed DB: serialization round-trips exactly (property-tested)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import chunking
 

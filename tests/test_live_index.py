@@ -1,0 +1,249 @@
+"""Live-index subsystem: delta-hint exactness, epochs, triggers, journal."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import chunking
+from repro.update import (HintCache, LiveIndex, StaleEpochError,
+                          journal as journal_lib)
+from repro.update.planner import plan_updates
+
+
+def _build_live(seed=0, n_docs=120, emb_dim=12, n_clusters=5, **kw):
+    from repro.data import corpus as corpus_lib
+    corp = corpus_lib.make_corpus(seed, n_docs, emb_dim=emb_dim,
+                                  n_topics=n_clusters)
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=n_clusters,
+                           impl="xla", kmeans_iters=6, **kw)
+    return live, corp
+
+
+def _random_mutations(live, rng, n_ops, emb_dim):
+    """Apply a random insert/delete/replace batch to the journal.
+
+    Tracks the id set as mutations accumulate so the batch never targets a
+    doc it already deleted (which the planner rightly rejects).
+    """
+    ids = set(live.doc_ids())
+    for _ in range(n_ops):
+        op = int(rng.integers(3))
+        if op == 0:
+            nid = int(10_000 + rng.integers(10_000))
+            if nid not in ids:
+                live.insert(nid, f"ins {nid}".encode(),
+                            rng.standard_normal(emb_dim).astype(np.float32))
+                ids.add(nid)
+        elif op == 1 and len(ids) > 20:
+            d = int(rng.choice(sorted(ids)))
+            live.delete(d)
+            ids.discard(d)
+        else:
+            d = int(rng.choice(sorted(ids)))
+            live.replace(d, f"rep {d}".encode(),
+                         rng.standard_normal(emb_dim).astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def live_and_corpus():
+    return _build_live()
+
+
+# ---------------------------------------------------------------------------
+# Delta-hint exactness (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_batches=st.integers(1, 3))
+def test_property_patched_hint_equals_full_rebuild(seed, n_batches):
+    """After ANY mutation sequence: patched hint == setup() bit-for-bit,
+    both server-side and through the client's HintPatch chain."""
+    live, _ = _build_live(seed=seed % 7, n_docs=80, emb_dim=8, n_clusters=4)
+    cache = HintCache(live.system.hint, live.system.cfg)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        _random_mutations(live, rng, int(rng.integers(1, 5)), 8)
+        if live.commit() is None:
+            continue
+        fresh = jax.block_until_ready(live.system.server.setup())
+        assert jnp.array_equal(fresh, live.system.hint)
+        cache.sync(live.epochs)
+        assert cache.epoch == live.epoch
+        assert jnp.array_equal(jnp.asarray(cache.hint), live.system.hint)
+
+
+def test_delta_columns_match_from_scratch_pack():
+    """Incrementally rebuilt columns are byte-identical to a fresh pack."""
+    live, corp = _build_live()
+    rng = np.random.default_rng(3)
+    live.replace(10, b"touched ten", rng.standard_normal(12).astype(np.float32))
+    live.delete(11)
+    live.insert(5000, b"the new doc", rng.standard_normal(12).astype(np.float32))
+    live.commit()
+    db = live.system.db
+    members = {j: [] for j in range(db.n)}
+    for i, cl in live._cluster_of.items():
+        text, emb = live._docs[i]
+        members[cl].append((i, emb, text))
+    for j in range(db.n):
+        payload = np.frombuffer(chunking.pack_column(members[j]), np.uint8)
+        assert np.array_equal(db.matrix[:len(payload), j], payload)
+        assert not db.matrix[len(payload):, j].any()        # zero padding
+        assert db.used_bytes[j] == len(payload)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end freshness: queries see mutations at the right epoch
+# ---------------------------------------------------------------------------
+
+def test_query_returns_updated_content_at_new_epoch():
+    live, corp = _build_live(n_docs=150, emb_dim=16, n_clusters=6)
+    cache = HintCache(live.system.hint, live.system.cfg)
+    e0 = live.epoch
+
+    live.replace(7, b"revised seven", corp.embeddings[7])
+    live.delete(23)
+    new_emb = corp.embeddings[40] + 0.01
+    live.insert(7777, b"inserted doc", new_emb)
+    live.commit()
+    assert live.epoch == e0 + 1
+
+    # stale client is refused before any crypto runs
+    with pytest.raises(StaleEpochError):
+        live.query(corp.embeddings[7], epoch=e0)
+    cache.sync(live.epochs)
+
+    top, _ = live.query(corp.embeddings[7], epoch=cache.epoch, top_k=3,
+                        key=jax.random.PRNGKey(0))
+    assert [t for d, _, t in top if d == 7] == [b"revised seven"]
+
+    top, _ = live.query(np.asarray(new_emb), epoch=cache.epoch, top_k=3,
+                        key=jax.random.PRNGKey(1))
+    assert 7777 in [d for d, _, _ in top]
+
+    top, _ = live.query(corp.embeddings[23], epoch=cache.epoch, top_k=10,
+                        key=jax.random.PRNGKey(2))
+    assert 23 not in [d for d, _, _ in top]                 # deleted
+
+
+# ---------------------------------------------------------------------------
+# Full-rebuild triggers
+# ---------------------------------------------------------------------------
+
+def test_overflow_triggers_full_rebuild():
+    live, corp = _build_live()
+    cache = HintCache(live.system.hint, live.system.cfg)
+    m0 = live.system.db.m
+    live.insert(8888, b"x" * (m0 + 1), corp.embeddings[0])
+    patch = live.commit()
+    assert patch.is_full
+    assert live.commits[-1].reason == "overflow"
+    assert live.system.db.m > m0
+    cache.sync(live.epochs)
+    assert cache.cfg == live.system.cfg
+    assert jnp.array_equal(jnp.asarray(cache.hint), live.system.hint)
+    top, _ = live.query(corp.embeddings[0], epoch=live.epoch, top_k=1,
+                        key=jax.random.PRNGKey(4))
+    assert top
+
+
+def test_pad_degradation_triggers_full_rebuild():
+    live, _ = _build_live(max_pad_fraction=0.7)
+    for i in list(live.doc_ids())[:100]:
+        live.delete(i)
+    patch = live.commit()
+    assert patch.is_full
+    assert live.commits[-1].reason == "pad-degradation"
+    assert live.pad_fraction() <= 0.7
+
+
+def test_planner_flags_overflow_without_committing():
+    live, corp = _build_live()
+    live.insert(9999, b"y" * (live.system.db.m + 1), corp.embeddings[1])
+    plan = plan_updates(
+        live.journal.pending(), docs=live._docs,
+        cluster_of=live._cluster_of, centroids=live.system.centroids,
+        m=live.system.db.m, used_bytes=live._used,
+        n_clusters=live.system.db.n, emb_dim=live.system.db.emb_dim)
+    assert plan.full_rebuild and plan.reason == "overflow"
+
+
+# ---------------------------------------------------------------------------
+# Patch accounting + journal wire format
+# ---------------------------------------------------------------------------
+
+def test_patch_bytes_much_smaller_than_hint(live_and_corpus):
+    live, corp = live_and_corpus
+    live.replace(3, b"small edit", corp.embeddings[3])
+    patch = live.commit()
+    assert not patch.is_full
+    assert patch.wire_bytes < live.system.cfg.hint_bytes / 10
+    # documented wire format: header + col ids (u32) + int16 delta rows
+    assert patch.wire_bytes == 16 + 4 * len(patch.cols) + 2 * patch.delta.size
+    assert patch.delta.dtype == np.int16
+
+
+def test_journal_roundtrip_and_replay():
+    j = journal_lib.MutationJournal()
+    emb = np.arange(4, dtype=np.float32)
+    j.append(journal_lib.insert(3, b"three", emb))
+    j.append(journal_lib.delete(1))
+    j.append(journal_lib.replace(2, b"two!", emb * 2))
+    back = journal_lib.MutationJournal.from_bytes(j.to_bytes())
+    assert len(back) == 3
+    for a, b in zip(j.pending(), back.pending()):
+        assert (a.kind, a.doc_id, a.text) == (b.kind, b.doc_id, b.text)
+        if a.emb is not None:
+            assert np.array_equal(a.emb, b.emb)
+    base = {1: (b"one", emb), 2: (b"two", emb)}
+    docs = journal_lib.replay(base, back.pending())
+    assert set(docs) == {2, 3}
+    assert docs[2][0] == b"two!"
+
+    j.mark_committed(epoch=1)
+    assert [e for e, _ in j.committed_records()] == [1, 1, 1]
+    assert j.pending() == []
+
+
+def test_commit_empty_journal_is_noop(live_and_corpus):
+    live, _ = live_and_corpus
+    e = live.epoch
+    assert live.commit() is None
+    assert live.epoch == e
+
+
+def test_external_doc_ids_survive_delta_and_rebuild():
+    """LiveIndex.build(doc_ids=...) keys every map by the external id space,
+    through both the delta path and a forced full rebuild."""
+    from repro.data import corpus as corpus_lib
+    corp = corpus_lib.make_corpus(2, 60, emb_dim=8, n_topics=3)
+    ids = [int(i) for i in 1000 + np.arange(60) * 3]
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=3,
+                           impl="xla", kmeans_iters=5, doc_ids=ids)
+    assert live.doc_ids() == ids
+    live.replace(ids[4], b"external-id edit", corp.embeddings[4])
+    live.commit()
+    fresh = jax.block_until_ready(live.system.server.setup())
+    assert jnp.array_equal(fresh, live.system.hint)
+    top, _ = live.query(corp.embeddings[4], epoch=live.epoch, top_k=3,
+                        key=jax.random.PRNGKey(5))
+    assert [t for d, _, t in top if d == ids[4]] == [b"external-id edit"]
+    # overflow-triggered full rebuild must not re-pass doc_ids twice
+    live.insert(5, b"z" * (live.system.db.m + 1), corp.embeddings[0])
+    patch = live.commit()
+    assert patch.is_full
+    assert 5 in live.doc_ids() and ids[4] in live.doc_ids()
+
+
+def test_db_mirror_tracks_mutations():
+    live, corp = _build_live(n_docs=60, emb_dim=8, n_clusters=3)
+    n0 = live.system.db.n_docs
+    live.delete(0)
+    live.commit()
+    assert live.system.db.n_docs == n0 - 1
+    sizes = [len(chunking.deserialize_docs(live.system.db.matrix[:, j], 8))
+             for j in range(3)]
+    assert np.array_equal(live.system.db.cluster_sizes, sizes)

@@ -51,3 +51,65 @@ def test_serve_loop_end_to_end(system):
         assert r.rid * 11 in top_ids
     # first four went out as one batch of 4
     assert loop.responses[0].batch_size == 4
+
+
+def test_drain_preserves_configured_deadline(system):
+    """drain() force-flushes the final partial batch WITHOUT zeroing the
+    deadline — later traffic must still batch under the configured SLO."""
+    sys, corp = system
+    loop = PIRServeLoop(sys, max_batch=4, deadline_ms=77.0)
+    loop.submit(0, corp.embeddings[0])
+    loop.drain()
+    assert len(loop.responses) == 1
+    assert loop.batcher.deadline_ms == 77.0
+    # the loop keeps batching afterwards: a fresh request is NOT cut early
+    loop.submit(1, corp.embeddings[3])
+    assert loop.tick() == 0
+
+
+def test_per_batch_keys_are_distinct(system):
+    """LWE secrets must come from one split stream, not wall-clock seeds:
+    two equal-content batches in the same loop must encrypt differently."""
+    sys, corp = system
+    loop = PIRServeLoop(sys, max_batch=2, deadline_ms=1e9, seed=0)
+    import repro.core.pipeline as pipeline_mod
+    seen_keys = []
+    orig = pipeline_mod.PirRagSystem.query_batch
+
+    def spy(self, embs, **kw):
+        seen_keys.append(np.asarray(kw["key"]).tolist())
+        return orig(self, embs, **kw)
+
+    pipeline_mod.PirRagSystem.query_batch = spy
+    try:
+        for rid in range(4):
+            loop.submit(rid, corp.embeddings[0])   # identical queries
+            loop.tick()
+    finally:
+        pipeline_mod.PirRagSystem.query_batch = orig
+    assert len(seen_keys) == 2
+    assert seen_keys[0] != seen_keys[1]
+
+
+def test_live_mode_interleaves_mutations_and_retries_stale():
+    from repro.update import LiveIndex, journal as journal_lib
+
+    corp = corpus_lib.make_corpus(1, 200, emb_dim=16, n_topics=6)
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=6,
+                           impl="xla", kmeans_iters=6)
+    loop = PIRServeLoop(live, max_batch=4, deadline_ms=1e9)
+    for rid in range(3):                   # formed against epoch 0
+        loop.submit(rid, corp.embeddings[rid])
+    loop.submit_mutation(journal_lib.replace(9, b"live-updated nine",
+                                             corp.embeddings[9]))
+    loop.drain()
+    # the commit advanced the epoch, so all 3 were rejected once and retried
+    assert live.epoch == 1
+    assert loop.stale_retries == 3
+    assert len(loop.responses) == 3
+    assert all(r.epoch == 1 and r.retries == 1 for r in loop.responses)
+    # fresh queries now see the mutated content
+    loop.submit(50, corp.embeddings[9])
+    loop.drain()
+    assert [t for d, _, t in loop.responses[-1].top
+            if d == 9] == [b"live-updated nine"]
