@@ -1,0 +1,215 @@
+"""Batch-PIR amortization benchmark: κ-pass → 1-pass server cost.
+
+Measures the online server op across probe counts κ on the same DB:
+
+  legacy  — `PIRServer.answer` with κ stacked one-hot columns: the server
+            pays κ GEMM columns over the FULL database, so time scales ~κ×
+            (worse on XLA-CPU, whose u32 GEMM leaves the fast matvec path
+            at κ ≥ 2).
+  batch   — `BatchPIRServer.answer_batch`: one streamed pass over the
+            bucketed replica DB, so time is FLAT in κ.  The pass costs
+            ~3× the raw DB bytes (3-way cuckoo replication) minus what
+            bucket-local row truncation reclaims from skewed cluster
+            sizes — `stored/db` in the output is that measured ratio.
+
+Headline checks (ISSUE 2 acceptance):
+  * batch κ=4 is within 1.5× of a single-probe batched query (measured
+    ~1.0×: the pass is κ-independent) while the legacy path scales ~4×;
+  * batch κ=4 beats legacy κ=4 outright in wall-clock;
+  * the quality fixture shows identical nDCG@10 for batch vs legacy at
+    P=4 (same clusters fetched ⇒ same rerank pool);
+  * a live-index mutation batch patches per-bucket hints bit-identically
+    to a from-scratch bucket setup().
+
+    PYTHONPATH=src python -m benchmarks.batchpir_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _skewed_db(rng, m, n):
+    """Random u8 DB with a heavy-tailed per-column payload profile (real
+    corpora: cluster payloads vary widely), zero-padded to the global m."""
+    base = rng.lognormal(0.0, 0.6, n)
+    used = np.maximum(256, (base / base.max() * m)).astype(np.int64)
+    mat = rng.integers(0, 256, (m, n), dtype=np.uint8)
+    for j in range(n):
+        mat[used[j]:, j] = 0
+    return mat, used
+
+
+def run_timing(*, m=32768, n=1024, kappas=(1, 2, 4, 8), n_buckets=12,
+               seed=0, iters=10) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro import batchpir
+    from repro.core import pir
+
+    rng = np.random.default_rng(seed)
+    mat, used = _skewed_db(rng, m, n)
+    cfg = pir.make_config(m, n, impl="xla")
+    server = pir.PIRServer(cfg, jnp.asarray(mat))
+    bp = batchpir.build(mat, used, cfg.params, kappa=max(kappas),
+                        n_buckets=n_buckets, seed=seed + 1, impl="xla")
+
+    qvec = jnp.asarray(rng.integers(0, 2**32, (n,), dtype=np.uint32))
+    legacy_pool: list[tuple[str, int, object]] = [
+        ("single", 1, lambda: server.answer(qvec))]
+    batch_pool: list[tuple[str, int, object]] = []
+    for kappa in kappas:
+        qk = jnp.asarray(rng.integers(0, 2**32, (n, kappa), dtype=np.uint32))
+        legacy_pool.append(("legacy", kappa,
+                            lambda qk=qk: server.answer(qk)))
+        probes = rng.choice(n, size=kappa, replace=False)
+        qs, _ = bp.client.query(jax.random.PRNGKey(kappa), probes)
+        batch_pool.append(("batch", kappa,
+                           lambda qs=qs: bp.server.answer_batch(qs)))
+
+    # Per-kind interleaved rounds with a min-of-rounds estimator: drift on a
+    # shared box hits every κ equally, and keeping the pools separate stops
+    # the big legacy GEMMs polluting the cache state of the batch op (whose
+    # shape is κ-independent BY CONSTRUCTION — the server cannot even see κ,
+    # so any per-κ spread measured here is noise, not signal).
+    best: dict[tuple[str, int], float] = {}
+    for pool in (batch_pool, legacy_pool):
+        for _, _, fn in pool:
+            jax.block_until_ready(fn())                 # warm/compile
+        for case in pool:
+            best[case[:2]] = float("inf")
+        for r in range(iters):
+            order = rng.permutation(len(pool))
+            for i in order:
+                kind, kappa, fn = pool[i]
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                best[(kind, kappa)] = min(best[(kind, kappa)],
+                                          time.perf_counter() - t0)
+
+    t_single = best[("single", 1)]
+    batch1 = best[("batch", kappas[0])]
+    rows = []
+    for kappa in kappas:
+        rows.append(dict(
+            kappa=kappa,
+            legacy_us=best[("legacy", kappa)] * 1e6,
+            batch_us=best[("batch", kappa)] * 1e6,
+            legacy_vs_single=best[("legacy", kappa)] / t_single,
+            batch_vs_single=best[("batch", kappa)] / t_single,
+            batch_vs_batch1=best[("batch", kappa)] / batch1))
+    return dict(m=m, n=n, n_buckets=n_buckets,
+                single_us=t_single * 1e6,
+                stored_ratio=bp.server.stored_bytes / float(m * n),
+                uplink_batch=bp.server.uplink_bytes,
+                downlink_batch=bp.server.downlink_bytes,
+                hint_batch=bp.server.hint_bytes,
+                rows=rows)
+
+
+def run_quality(*, n_docs=600, n_clusters=40, probe=4, seed=0) -> dict:
+    import jax
+    from repro.core import pipeline
+    from repro.data import corpus as corpus_lib
+    from repro.data import metrics
+
+    corp = corpus_lib.make_corpus(seed, n_docs, emb_dim=96, n_topics=24,
+                                  topic_spread=1.0, encoder_noise=0.35)
+    qs = corpus_lib.make_queries(1, corp, 8, n_relevant=20, noise=0.5)
+    sysm = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                       n_clusters=n_clusters, impl="xla",
+                                       seed=seed)
+    sysm.enable_batch(kappa=probe, seed=seed + 2)
+
+    def mean_ndcg(mode, p):
+        vals = []
+        for i in range(len(qs.embeddings)):
+            top, _ = sysm.query(qs.embeddings[i], top_k=10, multi_probe=p,
+                                mode=mode, key=jax.random.PRNGKey(50 + i))
+            ids = np.array([d for d, _, _ in top])
+            vals.append(metrics.ndcg_at_k(ids, qs.relevant[i],
+                                          qs.gains[i], 10))
+        return float(np.mean(vals))
+
+    return dict(probe=probe,
+                ndcg_single=mean_ndcg("legacy", 1),
+                ndcg_legacy=mean_ndcg("legacy", probe),
+                ndcg_batch=mean_ndcg("batch", probe))
+
+
+def run_patch_identity(*, seed=0) -> dict:
+    """Live-index batch: patched bucket hints vs from-scratch setup()."""
+    from repro.data import corpus as corpus_lib
+    from repro.update import LiveIndex
+
+    corp = corpus_lib.make_corpus(seed + 4, 300, emb_dim=16, n_topics=8)
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=8,
+                           impl="xla", kmeans_iters=5)
+    live.system.enable_batch(kappa=3, n_buckets=9, seed=seed)
+    bp = live.system.batch
+    for d in (3, 57, 121):
+        live.replace(d, f"refreshed {d}".encode(), corp.embeddings[d])
+    t0 = time.perf_counter()
+    live.commit()
+    patch_s = time.perf_counter() - t0
+    fresh = bp.server.setup()
+    identical = all((np.asarray(h) == np.asarray(f)).all()
+                    for h, f in zip(bp.server.hints, fresh))
+    return dict(patch_s=patch_s, bit_identical=bool(identical),
+                buckets=bp.partition.n_buckets)
+
+
+def run(fast: bool = False) -> dict:
+    timing = (run_timing(m=16384, n=1024, iters=8) if fast
+              else run_timing())
+    quality = (run_quality(n_docs=400, n_clusters=24) if fast
+               else run_quality())
+    patch = run_patch_identity()
+    k4 = next(r for r in timing["rows"] if r["kappa"] == 4)
+    checks = [
+        ("batch κ=4 within 1.5× of single-probe batched query "
+         f"({k4['batch_vs_batch1']:.2f}×); legacy path scales "
+         f"{k4['legacy_vs_single']:.1f}× (≈κ)",
+         k4["batch_vs_batch1"] <= 1.5),
+        (f"batch κ=4 beats legacy κ=4 outright "
+         f"({k4['batch_us']:.0f}µs vs {k4['legacy_us']:.0f}µs)",
+         k4["batch_us"] < k4["legacy_us"]),
+        (f"equal-or-better nDCG@10 at P=4 "
+         f"(batch {quality['ndcg_batch']:.3f} vs "
+         f"legacy {quality['ndcg_legacy']:.3f})",
+         quality["ndcg_batch"] >= quality["ndcg_legacy"]),
+        ("per-bucket hint patch bit-identical to from-scratch setup()",
+         patch["bit_identical"]),
+    ]
+    return dict(timing=timing, quality=quality, patch=patch,
+                checks=[(("PASS" if ok else "FAIL") + ": " + msg)
+                        for msg, ok in checks])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    out = run(fast=args.fast)
+    t = out["timing"]
+    print(f"# batch-PIR amortization  m={t['m']} n={t['n']} "
+          f"B={t['n_buckets']} stored/db={t['stored_ratio']:.2f}")
+    print("kappa,legacy_us,batch_us,legacy_vs_single,batch_vs_batch1")
+    for r in t["rows"]:
+        print(f"{r['kappa']},{r['legacy_us']:.0f},{r['batch_us']:.0f},"
+              f"{r['legacy_vs_single']:.2f},{r['batch_vs_batch1']:.2f}")
+    q = out["quality"]
+    print(f"ndcg10 single={q['ndcg_single']:.3f} "
+          f"legacy_p4={q['ndcg_legacy']:.3f} batch_p4={q['ndcg_batch']:.3f}")
+    for c in out["checks"]:
+        print(c)
+
+
+if __name__ == "__main__":
+    main()

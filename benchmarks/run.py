@@ -4,7 +4,10 @@
 
 Emits ``name,us_per_call,derived`` CSV rows plus PASS/FAIL validation of the
 paper's qualitative claims (EXPERIMENTS.md §Paper-validation mirrors this
-output).
+output), and writes the machine-readable perf trajectory to
+``BENCH_pirrag.json`` at the repo root (kernel µs, fig2/fig3 rows, and the
+batch-PIR amortization section); CI uploads that JSON as an artifact per
+commit.
 """
 from __future__ import annotations
 
@@ -62,15 +65,34 @@ def main() -> None:
     checks3 = quality.validate(qrows)
     results["quality"] = {"rows": qrows, "checks": checks3}
 
+    # ---- batch-PIR: κ-probe amortization (beyond-paper) ---------------------
+    from benchmarks import batchpir_bench
+    bres = batchpir_bench.run(fast=args.fast)
+    for r in bres["timing"]["rows"]:
+        print(f"batchpir_k{r['kappa']},{r['batch_us']:.0f},"
+              f"legacy_us={r['legacy_us']:.0f};"
+              f"batch_vs_batch1={r['batch_vs_batch1']:.2f}")
+    checks_b = bres["checks"]
+    results["batchpir"] = bres
+
     print("\n# paper-claim validation")
-    for c in checks2 + checks3:
+    for c in checks2 + checks3 + checks_b:
         print("#", c)
 
     with open(os.path.join(args.out, "bench_results.json"), "w") as f:
         json.dump(results, f, indent=1, default=float)
-    n_fail = sum(1 for c in checks2 + checks3 if c.startswith("FAIL"))
-    print(f"\n# {len(checks2) + len(checks3) - n_fail} claims PASS, "
-          f"{n_fail} FAIL")
+    # Machine-readable perf trajectory for CI: one JSON at the repo root,
+    # uploaded as a workflow artifact per commit.
+    root_json = os.path.join(os.path.dirname(__file__), "..",
+                             "BENCH_pirrag.json")
+    with open(root_json, "w") as f:
+        json.dump(dict(kernel=results["kernel"],
+                       fig2=results["scalability"],
+                       fig3=results["quality"],
+                       batchpir=bres), f, indent=1, default=float)
+    all_checks = checks2 + checks3 + checks_b
+    n_fail = sum(1 for c in all_checks if c.startswith("FAIL"))
+    print(f"\n# {len(all_checks) - n_fail} claims PASS, {n_fail} FAIL")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,117 @@
+"""Batch-PIR client: placement, per-bucket encryption, decode.
+
+One batched query is exactly B ciphertexts — one per bucket, always:
+
+  placed buckets  — an LWE-encrypted one-hot selecting the member column
+                    where the wanted cluster's replica lives;
+  empty buckets   — a DUMMY: an encryption of the all-zero message under a
+                    fresh secret.
+
+Under LWE both are pseudorandom uint32 vectors, so the server's view is κ-
+and pattern-independent: it learns neither how many probes the client
+packed nor which buckets carry them.  Dummy answers are discarded without
+decryption.
+
+Secrets are per-bucket per-query, folded from one caller key; decoding per
+bucket is the standard SimplePIR recover against that bucket's hint H_b.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batchpir.partition import CuckooPartition
+from repro.batchpir.server import BatchPIRServer
+from repro.core import lwe, pir
+
+U32 = jnp.uint32
+
+
+@dataclasses.dataclass
+class BatchQueryState:
+    """Client-side secrets + placement for one batched query (never sent)."""
+    placement: dict[int, int]            # bucket → cluster (real queries)
+    secrets: list[jax.Array]             # per bucket LWE secret
+
+
+@dataclasses.dataclass
+class BatchAccounting:
+    uplink_bytes: int
+    downlink_bytes: int
+    hint_bytes: int
+    n_buckets: int
+    placed: int
+
+
+class BatchPIRClient:
+    """Forms batched queries and decodes per-bucket answers."""
+
+    def __init__(self, partition: CuckooPartition,
+                 cfgs: list[pir.PIRConfig], hints: list[jax.Array]):
+        self.partition = partition
+        self.cfgs = cfgs
+        self.hints = hints                 # shared refs; patched by epochs
+        self._a_mats = [lwe.gen_public_matrix(c.a_seed, c.n, c.params.k)
+                        for c in cfgs]
+
+    @classmethod
+    def from_server(cls, server: BatchPIRServer) -> "BatchPIRClient":
+        if not server.hints:
+            server.install_hints()
+        return cls(server.partition, server.cfgs, server.hints)
+
+    # -- query formulation ---------------------------------------------------
+
+    def query(self, key: jax.Array, clusters, *, walk_seed: int = 0
+              ) -> tuple[jax.Array, BatchQueryState]:
+        """Encrypt probes for `clusters` (distinct) → ((B, W) u32, state).
+
+        Raises PlacementError if the probe set is structurally unplaceable
+        (callers fall back to the legacy multi-query path).
+        """
+        part = self.partition
+        placement = part.place(clusters, walk_seed=walk_seed)
+        qs, secrets = [], []
+        for b in range(part.n_buckets):
+            cfg = self.cfgs[b]
+            k_sec, k_err = jax.random.split(jax.random.fold_in(key, b))
+            s = lwe.keygen(k_sec, cfg.params)
+            msg = jnp.zeros((cfg.n,), U32)
+            if b in placement:
+                msg = msg.at[part.position(b, placement[b])].set(1)
+            qs.append(lwe.encrypt_vector(k_err, s, self._a_mats[b], msg,
+                                         cfg.params.delta, cfg.params.sigma))
+            secrets.append(s)
+        return jnp.stack(qs), BatchQueryState(placement=placement,
+                                              secrets=secrets)
+
+    # -- decode --------------------------------------------------------------
+
+    def recover(self, answers: list[jax.Array], state: BatchQueryState
+                ) -> dict[int, np.ndarray]:
+        """Decode REAL buckets only → {cluster: column bytes (m_b,) u8}."""
+        out: dict[int, np.ndarray] = {}
+        for b, cluster in state.placement.items():
+            p = self.cfgs[b].params
+            s = state.secrets[b]
+            if p.q_switch is not None:
+                vals = lwe.decode_switched(answers[b], self.hints[b], s, p)
+            else:
+                vals = lwe.decode(lwe.hint_strip(answers[b], self.hints[b],
+                                                 s), p)
+            out[cluster] = np.asarray(vals.astype(jnp.uint8))
+        return out
+
+    # -- accounting ----------------------------------------------------------
+
+    def accounting(self, state: BatchQueryState) -> BatchAccounting:
+        """Exact per-bucket wire costs of one batched query (summed)."""
+        return BatchAccounting(
+            uplink_bytes=sum(c.uplink_bytes for c in self.cfgs),
+            downlink_bytes=sum(c.downlink_bytes for c in self.cfgs),
+            hint_bytes=sum(c.hint_bytes for c in self.cfgs),
+            n_buckets=self.partition.n_buckets,
+            placed=len(state.placement))

@@ -1,0 +1,135 @@
+"""Cuckoo bucketization of the cluster space (batch-PIR layer 1).
+
+The cluster axis of the chunk-transposed DB is split into B buckets using
+3-way cuckoo hashing (the probabilistic-batch-code construction from the
+batch-PIR literature):
+
+  server side — every cluster j gets THREE candidate buckets derived from a
+    public seed, and its column is replicated into each candidate's sub-DB.
+    Candidates come from a balanced template (each bucket receives the same
+    number of replicas ±1), so all bucket widths equal ~3n/B and the shared
+    kernel width pads minimally.
+
+  client side — a client that wants κ clusters cuckoo-places them, each
+    into exactly ONE of its three candidates with at most one cluster per
+    bucket, via random-walk eviction.  A placement failure (walk cycles)
+    retries with a fresh walk seed; only a structurally infeasible probe
+    set (Hall violation, probability ≪ 1e-4 for κ ≤ B/3) raises
+    PlacementError, which callers treat as "fall back to the legacy path".
+
+Everything here is deterministic given (seed, walk seed): server and client
+derive identical candidate tables independently, so only the seed is ever
+communicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class PlacementError(RuntimeError):
+    """The probe set admits no one-cluster-per-bucket cuckoo placement."""
+
+    def __init__(self, clusters, n_buckets: int, retries: int):
+        super().__init__(
+            f"cannot place {len(clusters)} probe clusters into "
+            f"{n_buckets} buckets after {retries} walk retries")
+        self.clusters = tuple(clusters)
+        self.retries = retries
+
+
+def _balanced_candidates(n_clusters: int, n_buckets: int,
+                         rng: np.random.Generator) -> np.ndarray:
+    """(n, 3) distinct candidate buckets per cluster, bucket loads ±1.
+
+    Greedy least-loaded with a random tiebreak: each cluster takes the three
+    least-loaded buckets, which keeps every load within 1 of the others
+    (inductively: the three minima are always raised first), while the
+    tiebreak shuffle makes the triples pseudorandom — what the cuckoo walk
+    needs for placement to succeed with overwhelming probability.
+    """
+    cand = np.zeros((n_clusters, 3), np.int64)
+    loads = np.zeros(n_buckets, np.int64)
+    for j in range(n_clusters):
+        order = np.lexsort((rng.random(n_buckets), loads))
+        cand[j] = np.sort(order[:3])
+        loads[cand[j]] += 1
+    return cand
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(0, (x - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class CuckooPartition:
+    """Public cluster → candidate-bucket mapping plus placement logic."""
+    n_clusters: int
+    n_buckets: int
+    seed: int
+    candidates: np.ndarray              # (n, 3) int64, distinct per row
+    members: tuple[np.ndarray, ...]     # per bucket: sorted member clusters
+    width: int                          # shared sub-DB width (power of two)
+
+    @classmethod
+    def build(cls, n_clusters: int, n_buckets: int, seed: int
+              ) -> "CuckooPartition":
+        if n_buckets < 3:
+            raise ValueError("3-way cuckoo needs at least 3 buckets")
+        rng = np.random.default_rng([0x5C0B, seed, n_clusters, n_buckets])
+        cand = _balanced_candidates(n_clusters, n_buckets, rng)
+        members = tuple(np.sort(np.nonzero((cand == b).any(axis=1))[0])
+                        for b in range(n_buckets))
+        width = _next_pow2(max(1, max(len(m) for m in members)))
+        return cls(n_clusters=n_clusters, n_buckets=n_buckets, seed=seed,
+                   candidates=cand, members=members, width=width)
+
+    def position(self, bucket: int, cluster: int) -> int:
+        """Local column index of `cluster` inside `bucket`'s sub-DB."""
+        mem = self.members[bucket]
+        pos = int(np.searchsorted(mem, cluster))
+        if pos >= len(mem) or mem[pos] != cluster:
+            raise KeyError(f"cluster {cluster} not in bucket {bucket}")
+        return pos
+
+    def buckets_of(self, cluster: int) -> tuple[int, int, int]:
+        """The three candidate buckets holding `cluster`'s replicas."""
+        return tuple(int(b) for b in self.candidates[cluster])
+
+    def place(self, clusters, *, walk_seed: int = 0, retries: int = 16
+              ) -> dict[int, int]:
+        """Cuckoo-place distinct probe clusters; returns {bucket: cluster}.
+
+        Random-walk eviction: a cluster whose candidates are all occupied
+        kicks out one occupant (uniformly) and the evictee re-places.  A
+        walk that exceeds its step budget restarts with the next walk seed;
+        after `retries` restarts the probe set is declared unplaceable.
+        """
+        clusters = [int(c) for c in clusters]
+        if len(set(clusters)) != len(clusters):
+            raise ValueError("probe clusters must be distinct")
+        if len(clusters) > self.n_buckets:
+            raise PlacementError(clusters, self.n_buckets, 0)
+        max_steps = 16 * max(1, len(clusters))
+        for r in range(retries):
+            rng = np.random.default_rng(
+                [0xC0C0, self.seed, walk_seed, r])
+            occ: dict[int, int] = {}
+            failed = False
+            for c in clusters:
+                item = c
+                for _ in range(max_steps):
+                    cand = self.candidates[item]
+                    free = [int(b) for b in cand if b not in occ]
+                    if free:
+                        occ[free[int(rng.integers(len(free)))]] = item
+                        break
+                    b = int(cand[int(rng.integers(3))])
+                    item, occ[b] = occ[b], item
+                else:
+                    failed = True
+                    break
+            if not failed:
+                return occ
+        raise PlacementError(clusters, self.n_buckets, retries)

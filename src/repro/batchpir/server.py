@@ -1,0 +1,233 @@
+"""Batch-PIR server: per-bucket sub-DBs, hints, and the one-pass answer.
+
+Bucket b's sub-DB D_b holds a replica of every member cluster's column,
+row-truncated to the tallest member payload (rounded to the kernel row
+granule) — the global DB pads every column to the single largest cluster,
+so bucket-local truncation converts that padding into compute and downlink
+savings.  Columns beyond the member count are zero up to the partition's
+shared power-of-two width, so every bucket presents the same query width to
+the kernel.
+
+Per bucket there is an independent LWE instance: public matrix A_b from a
+bucket-specific seed and hint H_b = D_b·A_b.  A batched query is one
+uint32 vector per bucket; the answer is ONE `ops.bucketed_modmatmul`
+call — a streamed pass over the bucketed DB whose cost does not depend on
+how many probes κ the (hidden) placement carried.
+
+Live-index deltas route here through `update/routing.py`: a mutation that
+re-packs cluster columns J patches the owning buckets' sub-DBs and hints
+with the same exact sparse GEMM as `PIRServer.update_columns`, so the
+patched H_b stays bit-identical to `setup()` on the mutated sub-DB.  A
+payload that outgrows its bucket's row budget triggers a single-bucket
+rebuild (re-truncate + re-hint), never a full-system one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batchpir.partition import CuckooPartition
+from repro.core import lwe, pir
+from repro.kernels import ops
+
+U32 = jnp.uint32
+
+_ROW_GRANULE = 128          # bucket heights round up to this (kernel tiling)
+
+
+def _bucket_a_seed(a_seed: int, bucket: int) -> int:
+    """Distinct public-matrix seed per bucket, derived from the global one."""
+    return a_seed * 1_000_003 + bucket
+
+
+@functools.partial(jax.jit, static_argnames=("q_switch",))
+def _switch_jit(x: jax.Array, q_switch: int) -> jax.Array:
+    """One fused dispatch per bucket for the downlink modulus switch."""
+    return lwe.switch_modulus(x, q_switch)
+
+
+def _round_rows(used: int) -> int:
+    return max(_ROW_GRANULE, ((used + _ROW_GRANULE - 1) // _ROW_GRANULE)
+               * _ROW_GRANULE)
+
+
+@dataclasses.dataclass
+class BucketUpdate:
+    """One bucket's reaction to a live-index mutation batch."""
+    bucket: int
+    rebuilt: bool               # True: overflow forced a bucket re-hint
+    cols: np.ndarray            # local column positions patched (delta only)
+
+
+class BatchPIRServer:
+    """Holds the bucketed replica DBs and answers batched queries."""
+
+    def __init__(self, matrix: np.ndarray, used_bytes: np.ndarray,
+                 partition: CuckooPartition, params: lwe.LWEParams, *,
+                 a_seed: int = 7, impl: str = "auto"):
+        n = partition.n_clusters
+        assert matrix.shape[1] == n, (matrix.shape, n)
+        self.partition = partition
+        self.impl = impl
+        self.a_seed = a_seed
+        if not lwe.noise_budget_ok(params, partition.width):
+            params = lwe.choose_params(partition.width,
+                                       q_switch=params.q_switch)
+        self.params = params
+        self.cfgs: list[pir.PIRConfig] = []
+        self.sub_dbs: list[jax.Array] = []
+        self._a_mats: list[jax.Array | None] = []
+        used = np.asarray(used_bytes)
+        for b in range(partition.n_buckets):
+            mem = partition.members[b]
+            # granule-rounded, but never taller than the source matrix
+            # (m need not be a multiple of the granule)
+            rows = min(_round_rows(int(used[mem].max()) if len(mem) else 1),
+                       matrix.shape[0])
+            sub = np.zeros((rows, partition.width), np.uint8)
+            if len(mem):
+                sub[:, :len(mem)] = matrix[:rows, mem]
+            self.sub_dbs.append(jnp.asarray(sub))
+            self.cfgs.append(pir.PIRConfig(
+                m=rows, n=partition.width, params=self.params,
+                a_seed=_bucket_a_seed(a_seed, b), impl=impl))
+            self._a_mats.append(None)
+        self.hints: list[jax.Array] = []
+
+    # -- public matrices / hints --------------------------------------------
+
+    def a_matrix(self, bucket: int) -> jax.Array:
+        if self._a_mats[bucket] is None:
+            cfg = self.cfgs[bucket]
+            self._a_mats[bucket] = lwe.gen_public_matrix(
+                cfg.a_seed, cfg.n, cfg.params.k)
+        return self._a_mats[bucket]
+
+    def setup(self) -> list[jax.Array]:
+        """Recompute every bucket hint H_b = D_b·A_b from the current DBs."""
+        return [ops.hint_gemm(self.sub_dbs[b], self.a_matrix(b),
+                              impl=self.impl)
+                for b in range(self.partition.n_buckets)]
+
+    def install_hints(self) -> int:
+        """One-time offline hint build; returns total hint bytes."""
+        self.hints = [jax.block_until_ready(h) for h in self.setup()]
+        return self.hint_bytes
+
+    @property
+    def hint_bytes(self) -> int:
+        return sum(cfg.hint_bytes for cfg in self.cfgs)
+
+    @property
+    def downlink_bytes(self) -> int:
+        """Response bytes of one batched query (all buckets answer)."""
+        return sum(cfg.downlink_bytes for cfg in self.cfgs)
+
+    @property
+    def uplink_bytes(self) -> int:
+        return sum(cfg.uplink_bytes for cfg in self.cfgs)
+
+    @property
+    def stored_bytes(self) -> int:
+        """Total bucketed-DB bytes = what one batched answer streams."""
+        return sum(int(d.shape[0]) * int(d.shape[1]) for d in self.sub_dbs)
+
+    # -- online --------------------------------------------------------------
+
+    def answer_batch(self, qs: jax.Array) -> list[jax.Array]:
+        """qs: (B, W) or (B, W, C) uint32 → per-bucket (switched) answers."""
+        raw = ops.bucketed_modmatmul(self.sub_dbs, qs, impl=self.impl)
+        if self.params.q_switch is not None:
+            raw = [_switch_jit(a, self.params.q_switch) for a in raw]
+        return raw
+
+    # -- live-index deltas ---------------------------------------------------
+
+    def update_columns(self, cols: np.ndarray, new_cols: np.ndarray,
+                       new_used: dict[int, int]) -> list[BucketUpdate]:
+        """Patch every bucket owning a touched cluster; exact mod 2^32.
+
+        cols: (J,) global cluster ids (already re-packed), new_cols:
+        (m, J) u8 at the GLOBAL row height, new_used: payload bytes per
+        touched cluster.  Buckets whose row budget still fits every new
+        payload take a sparse ΔH_b = ΔD_b[:,P]·A_b[P,:] patch (bit-identical
+        to a from-scratch hint, as in `PIRServer.update_columns`); a bucket
+        that overflows is rebuilt and re-hinted alone.
+        """
+        cols = np.asarray(cols)
+        part = self.partition
+        by_bucket: dict[int, list[int]] = {}
+        for idx, j in enumerate(cols):
+            for b in part.buckets_of(int(j)):
+                by_bucket.setdefault(b, []).append(idx)
+        updates: list[BucketUpdate] = []
+        for b, idxs in sorted(by_bucket.items()):
+            rows = self.cfgs[b].m
+            need = max(new_used[int(cols[i])] for i in idxs)
+            if need > rows:
+                self._rebuild_bucket(b, cols, new_cols, new_used)
+                updates.append(BucketUpdate(bucket=b, rebuilt=True,
+                                            cols=np.zeros(0, np.int64)))
+                continue
+            pos = np.array([part.position(b, int(cols[i])) for i in idxs],
+                           np.int64)
+            new_sub = jnp.asarray(new_cols[:rows, idxs])
+            delta_h = self._delta(b, pos, new_sub)
+            self.sub_dbs[b] = self.sub_dbs[b].at[:, pos].set(new_sub)
+            if self.hints:
+                self.hints[b] = self.hints[b] + delta_h
+            updates.append(BucketUpdate(bucket=b, rebuilt=False, cols=pos))
+        return updates
+
+    def _delta(self, bucket: int, pos: np.ndarray, new_sub: jax.Array
+               ) -> jax.Array:
+        """ΔH_b for replacing local columns `pos`, pow-of-two bucketed like
+        `PIRServer.update_columns` so streamed batches reuse compiled shapes."""
+        db = self.sub_dbs[bucket]
+        old_sub = db[:, pos]
+        j = int(pos.shape[0])
+        bucket_w = 1 << max(0, (j - 1).bit_length())
+        pad = min(bucket_w, self.cfgs[bucket].n) - j
+        pos_g = jnp.asarray(pos)
+        if pad > 0:
+            # column 0 padded on both sides contributes exactly ΔH = 0
+            pos_g = jnp.concatenate([pos_g, jnp.zeros(pad, pos_g.dtype)])
+            unchanged = jnp.repeat(db[:, :1], pad, axis=1)
+            new_g = jnp.concatenate([new_sub, unchanged], axis=1)
+            old_g = jnp.concatenate([old_sub, unchanged], axis=1)
+        else:
+            new_g, old_g = new_sub, old_sub
+        a_p = self.a_matrix(bucket)[pos_g]
+        return ops.delta_gemm(new_g, old_g, a_p, impl=self.impl)
+
+    def _rebuild_bucket(self, bucket: int, cols: np.ndarray,
+                        new_cols: np.ndarray, new_used: dict[int, int]):
+        """Overflow path: re-truncate, re-pack and re-hint ONE bucket."""
+        part = self.partition
+        mem = part.members[bucket]
+        old = np.asarray(self.sub_dbs[bucket])
+        col_src: dict[int, np.ndarray] = {int(j): old[:, p]
+                                          for p, j in enumerate(mem)}
+        need = {int(j): (int(np.nonzero(c)[0][-1]) + 1 if c.any() else 1)
+                for j, c in col_src.items()}
+        for idx, j in enumerate(cols):
+            j = int(j)
+            if j in col_src:
+                col_src[j] = new_cols[:, idx]
+                need[j] = new_used[j]
+        rows = _round_rows(max(need.values(), default=1))
+        sub = np.zeros((rows, part.width), np.uint8)
+        for p, j in enumerate(mem):
+            src = col_src[int(j)]
+            take = min(rows, len(src))
+            sub[:take, p] = src[:take]
+        self.sub_dbs[bucket] = jnp.asarray(sub)
+        # A_b depends only on (n, k), so it survives the row-budget change.
+        self.cfgs[bucket] = dataclasses.replace(self.cfgs[bucket], m=rows)
+        if self.hints:
+            self.hints[bucket] = jax.block_until_ready(ops.hint_gemm(
+                self.sub_dbs[bucket], self.a_matrix(bucket), impl=self.impl))

@@ -11,6 +11,7 @@ results; its entire view is one pseudorandom uint32 vector per query.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Sequence
 
@@ -21,6 +22,11 @@ import numpy as np
 from repro.core import chunking, clustering, pir, rerank
 
 
+def _fresh_client_key() -> jax.Array:
+    """Root of a client-side key stream: one OS-entropy draw, then splits."""
+    return jax.random.PRNGKey(int.from_bytes(os.urandom(7), "little"))
+
+
 @dataclasses.dataclass
 class QueryStats:
     uplink_bytes: int
@@ -28,6 +34,10 @@ class QueryStats:
     client_ms: float
     server_ms: float
     cluster_index: int            # known to client only
+    mode: str = "legacy"          # "legacy" (P one-hots) | "batch" (cuckoo)
+    probes: int = 1               # clusters privately fetched
+    n_buckets: int = 0            # batch mode: bucket queries sent (incl dummies)
+    hint_bytes: int = 0           # one-time hint downlink of the path used
 
 
 @dataclasses.dataclass
@@ -42,6 +52,8 @@ class PirRagSystem:
     index_seconds: float = 0.0    # clustering + packing (no crypto)
     hint_seconds: float = 0.0     # hint GEMM (int8-roofline op on TPU)
     assignment: np.ndarray | None = None  # (N,) doc→cluster (live index)
+    batch: object | None = None           # batchpir.BatchPIR once enabled
+    _qkey: jax.Array | None = None        # split stream for keyless queries
 
     # -- offline ------------------------------------------------------------
 
@@ -73,30 +85,83 @@ class PirRagSystem:
         t_end = time.perf_counter()
         return cls(centroids=cents, db=db, cfg=cfg, server=server, hint=hint,
                    setup_seconds=t_end - t0, index_seconds=t_index - t0,
-                   hint_seconds=t_end - t_index, assignment=assign)
+                   hint_seconds=t_end - t_index, assignment=assign,
+                   _qkey=_fresh_client_key())
+
+    # -- key stream ----------------------------------------------------------
+
+    def next_query_key(self) -> jax.Array:
+        """Fresh LWE key material for one query, from ONE split stream.
+
+        The stream root is drawn from OS entropy ONCE (never from the
+        public build seed — LWE secrets must be unpredictable to the
+        server) and then split per query, the same discipline PIRServeLoop
+        uses per batch, so ad-hoc keyless callers can neither collide
+        secrets within a process nor share them across processes.
+        """
+        if self._qkey is None:                     # systems built pre-stream
+            self._qkey = _fresh_client_key()
+        self._qkey, key = jax.random.split(self._qkey)
+        return key
+
+    # -- batch-PIR (multi-probe amortization) --------------------------------
+
+    def enable_batch(self, *, kappa: int = 8, n_buckets: int | None = None,
+                     seed: int = 101) -> "object":
+        """Bucketize the DB for batch-PIR; multi_probe>1 then routes there."""
+        from repro import batchpir
+        self.batch = batchpir.build(
+            self.db.matrix, self.db.used_bytes, self.cfg.params,
+            kappa=kappa, n_buckets=n_buckets, seed=seed,
+            a_seed=self.cfg.a_seed, impl=self.cfg.impl)
+        return self.batch
 
     # -- online -------------------------------------------------------------
 
     def query(self, query_emb: np.ndarray, *, top_k: int = 10,
-              multi_probe: int = 1, key: jax.Array | None = None
+              multi_probe: int = 1, key: jax.Array | None = None,
+              mode: str = "auto"
               ) -> tuple[list[tuple[int, float, bytes]], QueryStats]:
         """One fully private retrieval; returns top-k docs + accounting.
 
-        multi_probe=P (beyond-paper): privately fetch the P nearest clusters
-        in ONE batched server GEMM round.  Recovers the boundary recall that
-        single-cluster pruning loses (the paper's quality gap vs Graph-PIR)
-        at P× downlink — the server still learns nothing, including P's
-        cluster identities.
+        multi_probe=P (beyond-paper): privately fetch the P nearest clusters.
+        Recovers the boundary recall that single-cluster pruning loses (the
+        paper's quality gap vs Graph-PIR); the server learns nothing either
+        way, including the P cluster identities.  Two server shapes:
+
+          legacy — P one-hot queries into ONE GEMM over the full DB: server
+                   work and uplink/downlink scale P×.
+          batch  — with `enable_batch()`: cuckoo-place the P clusters into
+                   buckets and send one (real or dummy) query per bucket;
+                   the server streams its bucketed DB once regardless of P.
+
+        mode="auto" routes multi_probe>1 through batch-PIR when enabled,
+        falling back to legacy on (negligible-probability) placement
+        failure; "legacy"/"batch" force a path.
         """
-        key = key if key is not None else jax.random.PRNGKey(
-            np.random.default_rng().integers(2**31))
-        client = pir.PIRClient(self.cfg, self.hint)
+        key = key if key is not None else self.next_query_key()
 
         t0 = time.perf_counter()
         d2 = clustering.pairwise_sqdist(
             jnp.asarray(query_emb, jnp.float32)[None, :],
             jnp.asarray(self.centroids))[0]
         order = np.argsort(np.asarray(d2))[:max(1, multi_probe)]
+
+        if mode not in ("auto", "legacy", "batch"):
+            raise ValueError(f"unknown query mode {mode!r}")
+        use_batch = self.batch is not None and (
+            mode == "batch" or (mode == "auto" and len(order) > 1))
+        if use_batch:
+            from repro.batchpir import PlacementError
+            try:
+                return self._query_via_batch(query_emb, order, top_k, key, t0)
+            except PlacementError:
+                if mode == "batch":
+                    raise
+        elif mode == "batch":
+            raise ValueError("enable_batch() before mode='batch' queries")
+
+        client = pir.PIRClient(self.cfg, self.hint)
         qs, states = [], []
         for j, cl in enumerate(order):
             qu, st = client.query(jax.random.fold_in(key, j), int(cl))
@@ -121,33 +186,141 @@ class PirRagSystem:
             downlink_bytes=p * self.cfg.downlink_bytes,
             client_ms=1e3 * ((t1 - t0) + (t3 - t2)),
             server_ms=1e3 * (t2 - t1),
-            cluster_index=int(order[0]))
+            cluster_index=int(order[0]),
+            mode="legacy", probes=p, hint_bytes=self.cfg.hint_bytes)
         return top, stats
 
-    def query_batch(self, query_embs: np.ndarray, *, top_k: int = 10,
-                    seed: int = 0, key: jax.Array | None = None
+    def _query_via_batch(self, query_emb: np.ndarray, order: np.ndarray,
+                         top_k: int, key: jax.Array, t0: float
+                         ) -> tuple[list[tuple[int, float, bytes]], QueryStats]:
+        """Batch-PIR leg of `query`: one bucketed pass for all probes."""
+        bp = self.batch
+        qs, state = bp.client.query(key, [int(c) for c in order])
+        batch = jax.block_until_ready(qs)
+        t1 = time.perf_counter()
+
+        ans = [jax.block_until_ready(a) for a in bp.server.answer_batch(batch)]
+        t2 = time.perf_counter()
+
+        cols = bp.client.recover(ans, state)
+        docs = []
+        for c in order:
+            docs.extend(chunking.deserialize_docs(cols[int(c)],
+                                                  self.db.emb_dim))
+        top = rerank.rerank(np.asarray(query_emb, np.float32), docs, top_k)
+        t3 = time.perf_counter()
+
+        acc = bp.client.accounting(state)
+        stats = QueryStats(
+            uplink_bytes=acc.uplink_bytes,
+            downlink_bytes=acc.downlink_bytes,
+            client_ms=1e3 * ((t1 - t0) + (t3 - t2)),
+            server_ms=1e3 * (t2 - t1),
+            cluster_index=int(order[0]),
+            mode="batch", probes=len(order),
+            n_buckets=acc.n_buckets, hint_bytes=acc.hint_bytes)
+        return top, stats
+
+    def query_batch(self, query_embs: np.ndarray, *,
+                    top_k: int | Sequence[int] = 10,
+                    multi_probe: int = 1,
+                    seed: int | None = None, key: jax.Array | None = None
                     ) -> list[list[tuple[int, float, bytes]]]:
-        """Batched serving: stack B encrypted queries into one server GEMM.
+        """Batched serving: stack B clients' encrypted queries into one GEMM.
+
+        top_k may be per-request (a sequence aligned with `query_embs`).
+        multi_probe>1 with `enable_batch()` routes every client through the
+        batch-PIR subsystem: all clients' per-bucket queries stack along the
+        column axis of the SAME bucketed GEMM, so the server still streams
+        its bucketed DB once per serving batch.
 
         Per-query LWE secrets are derived by `fold_in` from ONE caller key
-        (or, absent a key, from `seed` as a fallback); the serve loop threads
-        a split stream through here so secrets never collide across batches.
+        (or from `seed` if given; otherwise the system's split stream), so
+        secrets never collide across batches or ad-hoc callers.
         """
         if key is None:
-            key = jax.random.PRNGKey(seed)
+            key = (jax.random.PRNGKey(seed) if seed is not None
+                   else self.next_query_key())
+        n_req = len(query_embs)
+        top_ks = ([int(top_k)] * n_req if np.isscalar(top_k)
+                  else [int(t) for t in top_k])
+        assert len(top_ks) == n_req, (len(top_ks), n_req)
+
+        if multi_probe > 1 and self.batch is not None:
+            return self._query_batch_via_batchpir(query_embs, top_ks,
+                                                  multi_probe, key)
+
+        # Legacy path: P one-hot columns per request (P=1 is the classic
+        # one-column-per-client GEMM) — never silently fewer probes than
+        # asked for just because batch-PIR isn't enabled.
+        p = max(1, multi_probe)
         client = pir.PIRClient(self.cfg, self.hint)
-        clusters = np.asarray(clustering.assign_to_centroids(
-            jnp.asarray(query_embs, jnp.float32), jnp.asarray(self.centroids)))
+        d2 = np.asarray(clustering.pairwise_sqdist(
+            jnp.asarray(query_embs, jnp.float32),
+            jnp.asarray(self.centroids)))
+        orders = np.argsort(d2, axis=1)[:, :p]               # (B, P)
         qs, states = [], []
-        for b, c in enumerate(clusters):
-            qu, st = client.query(jax.random.fold_in(key, b), int(c))
-            qs.append(qu)
-            states.append(st)
-        ans = self.server.answer(jnp.stack(qs, axis=1))      # (m, B)
+        for b in range(len(query_embs)):
+            for j, c in enumerate(orders[b]):
+                qu, st = client.query(jax.random.fold_in(key, b * p + j),
+                                      int(c))
+                qs.append(qu)
+                states.append(st)
+        ans = self.server.answer(jnp.stack(qs, axis=1))      # (m, B·P)
         out = []
-        for b, st in enumerate(states):
-            col = np.asarray(client.recover(ans[:, b], st))
-            docs = chunking.deserialize_docs(col, self.db.emb_dim)
+        for b in range(len(query_embs)):
+            docs = []
+            for j in range(p):
+                col = np.asarray(client.recover(ans[:, b * p + j],
+                                                states[b * p + j]))
+                docs.extend(chunking.deserialize_docs(col, self.db.emb_dim))
             out.append(rerank.rerank(np.asarray(query_embs[b], np.float32),
-                                     docs, top_k))
+                                     docs, top_ks[b]))
+        return out
+
+    def _query_batch_via_batchpir(self, query_embs: np.ndarray,
+                                  top_ks: list[int], multi_probe: int,
+                                  key: jax.Array
+                                  ) -> list[list[tuple[int, float, bytes]]]:
+        """Multi-probe serving batch: C clients × B buckets, one GEMM call.
+
+        Per-client placement failures (negligible probability) fall back to
+        that client's legacy multi-probe query; everyone else still shares
+        the bucketed pass.
+        """
+        from repro.batchpir import PlacementError
+        bp = self.batch
+        d2 = np.asarray(clustering.pairwise_sqdist(
+            jnp.asarray(query_embs, jnp.float32),
+            jnp.asarray(self.centroids)))
+        orders = np.argsort(d2, axis=1)[:, :multi_probe]
+
+        per_client, fallback = [], {}
+        for i in range(len(query_embs)):
+            k_i = jax.random.fold_in(key, i)
+            try:
+                qs, st = bp.client.query(k_i, [int(c) for c in orders[i]])
+                per_client.append((qs, st))
+            except PlacementError:
+                fallback[i] = self.query(query_embs[i], top_k=top_ks[i],
+                                         multi_probe=multi_probe, key=k_i,
+                                         mode="legacy")[0]
+                per_client.append(None)
+
+        out: list[list | None] = [None] * len(query_embs)
+        live = [i for i, pc in enumerate(per_client) if pc is not None]
+        if live:
+            stacked = jnp.stack([per_client[i][0] for i in live], axis=2)
+            answers = bp.server.answer_batch(stacked)   # per bucket (m_b, C)
+            for c_idx, i in enumerate(live):
+                ans_i = [a[:, c_idx] for a in answers]
+                cols = bp.client.recover(ans_i, per_client[i][1])
+                docs = []
+                for cl in orders[i]:
+                    docs.extend(chunking.deserialize_docs(cols[int(cl)],
+                                                          self.db.emb_dim))
+                out[i] = rerank.rerank(np.asarray(query_embs[i], np.float32),
+                                       docs, top_ks[i])
+        for i, top in fallback.items():
+            out[i] = top
         return out

@@ -40,6 +40,8 @@ class Request:
     t_arrival: float
     epoch: int = 0                 # hint epoch the query was formed against
     retries: int = 0
+    top_k: int = 5                 # per-request result size
+    multi_probe: int = 1           # clusters to fetch (>1 → batch-PIR able)
 
 
 @dataclasses.dataclass
@@ -108,10 +110,12 @@ class PIRServeLoop:
     def epoch(self) -> int:
         return self.live.epoch if self.live is not None else 0
 
-    def submit(self, rid: int, query_emb: np.ndarray):
+    def submit(self, rid: int, query_emb: np.ndarray, *, top_k: int = 5,
+               multi_probe: int = 1):
         """A client submits a query formed against the CURRENT epoch's hint."""
         self.batcher.submit(Request(rid, query_emb, self.clock(),
-                                    epoch=self.epoch))
+                                    epoch=self.epoch, top_k=top_k,
+                                    multi_probe=multi_probe))
 
     def submit_mutation(self, mut):
         assert self.live is not None, "mutations need a LiveIndex"
@@ -151,13 +155,23 @@ class PIRServeLoop:
             return 0
 
         system = self.live.system if self.live is not None else self.system
-        embs = np.stack([r.query_emb for r in fresh])
-        self._key, kq = jax.random.split(self._key)
-        results = system.query_batch(embs, top_k=5, key=kq)
-        t = self.clock()
-        for req, top in zip(fresh, results):
-            self.responses.append(Response(req.rid, top, t, len(fresh),
-                                           epoch=cur, retries=req.retries))
+        # One GEMM per distinct multi_probe value: single-probe requests
+        # share the classic column-stacked GEMM; multi-probe requests share
+        # the bucketed batch-PIR GEMM (all clients in one streamed pass).
+        groups: dict[int, list[Request]] = {}
+        for r in fresh:
+            groups.setdefault(r.multi_probe, []).append(r)
+        for mp in sorted(groups):
+            reqs = groups[mp]
+            embs = np.stack([r.query_emb for r in reqs])
+            self._key, kq = jax.random.split(self._key)
+            results = system.query_batch(
+                embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
+            t = self.clock()
+            for req, top in zip(reqs, results):
+                # batch_size = this group's GEMM width, not the tick total
+                self.responses.append(Response(req.rid, top, t, len(reqs),
+                                               epoch=cur, retries=req.retries))
         return len(fresh)
 
     def drain(self):
@@ -175,6 +189,10 @@ def main():  # pragma: no cover - exercised by examples/tests
     ap.add_argument("--mutate-every", type=int, default=0,
                     help="if >0, replace a random doc every N requests "
                          "(exercises the live-index delta path)")
+    ap.add_argument("--multi-probe", type=int, default=1,
+                    help="clusters fetched per query; >1 routes through "
+                         "the batch-PIR subsystem (one bucketed pass)")
+    ap.add_argument("--top-k", type=int, default=5)
     args = ap.parse_args()
 
     from repro.core import pipeline
@@ -195,10 +213,13 @@ def main():  # pragma: no cover - exercised by examples/tests
         loop = PIRServeLoop(system, max_batch=args.max_batch,
                             deadline_ms=args.deadline_ms)
 
+    if args.multi_probe > 1:
+        loop.system.enable_batch(kappa=max(4, args.multi_probe))
+
     t0 = time.perf_counter()
     for rid in range(args.requests):
         q = corp.embeddings[rng.integers(0, args.docs)]
-        loop.submit(rid, q)
+        loop.submit(rid, q, top_k=args.top_k, multi_probe=args.multi_probe)
         if live is not None and args.mutate_every and rid % args.mutate_every == 0:
             d = int(rng.integers(0, args.docs))
             loop.submit_mutation(journal_lib.replace(

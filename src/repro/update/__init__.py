@@ -12,6 +12,8 @@ Layering:
     planner.py — mutations → touched clusters + overflow / pad-degradation
                  full-rebuild triggers (column-capacity accounting)
     epochs.py  — versioned HintPatch wire format + client-side HintCache
+    routing.py — cluster→bucket routing of deltas into batch-PIR's
+                 per-bucket replica hints (no-op when batch-PIR is off)
     live.py    — LiveIndex: orchestrates plan → column rebuild → delta GEMM
                  → epoch publish, with bit-exactness vs a from-scratch setup
 """
@@ -19,8 +21,10 @@ from repro.update.epochs import EpochLog, HintCache, HintPatch, StaleEpochError
 from repro.update.journal import Mutation, MutationJournal
 from repro.update.live import LiveIndex
 from repro.update.planner import UpdatePlan, plan_updates
+from repro.update.routing import patch_batch_hints, touched_buckets
 
 __all__ = [
     "EpochLog", "HintCache", "HintPatch", "StaleEpochError",
     "Mutation", "MutationJournal", "LiveIndex", "UpdatePlan", "plan_updates",
+    "patch_batch_hints", "touched_buckets",
 ]

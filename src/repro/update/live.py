@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core import chunking, pipeline
 from repro.update import journal as journal_lib
-from repro.update import planner
+from repro.update import planner, routing
 from repro.update.epochs import EpochLog, HintPatch
 
 U32 = jnp.uint32
@@ -163,6 +163,9 @@ class LiveIndex:
         delta_h = system.server.update_columns(jnp.asarray(cols),
                                                jnp.asarray(new_cols))
         system.hint = system.hint + delta_h             # u32 wraparound: exact
+        # Batch-PIR replicas (if enabled) take the same exact delta, routed
+        # to each touched cluster's owning buckets.
+        routing.patch_batch_hints(system, cols, new_cols, used)
 
         # Mirror the host-side ChunkedDB view (tests/tools read db.matrix).
         # Patched in place: copying the full (m, n) matrix per commit would
@@ -186,6 +189,7 @@ class LiveIndex:
         embs = np.stack([plan.new_docs[i][1] for i in ids])
         new_system = pipeline.PirRagSystem.build(
             texts, embs, doc_ids=ids, **self._rebuild_kwargs)
+        routing.rebuild_batch(self.system, new_system)
         self.system = new_system
         # Rebuild re-clusters, so the plan's incremental cluster map is stale.
         plan.new_cluster_of.clear()

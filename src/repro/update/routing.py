@@ -1,0 +1,53 @@
+"""Cluster → bucket routing for live-index deltas into batch-PIR state.
+
+The live index patches the flat system hint with ΔH = ΔD[:,J]·A[J,:].  When
+batch-PIR is enabled the same mutated columns ALSO live as replicas inside
+up to three cuckoo buckets each, every bucket carrying its own hint
+H_b = D_b·A_b.  This module is the thin bridge: given the re-packed columns
+of a committed mutation batch, route each touched cluster to its owning
+buckets and let `BatchPIRServer.update_columns` apply the exact per-bucket
+sub-DB swap + sparse hint patch (or a single-bucket rebuild on row-budget
+overflow).
+
+Kept in `update/` rather than `batchpir/` because the *decision* of when a
+delta flows is epoch/commit logic: `LiveIndex` calls here once per commit,
+after the flat-system patch, so both hint families advance in the same
+epoch and stay bit-identical to a from-scratch setup of the mutated DB.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def touched_buckets(partition, cols) -> list[int]:
+    """Sorted bucket ids owning a replica of any touched cluster."""
+    out: set[int] = set()
+    for j in cols:
+        out.update(partition.buckets_of(int(j)))
+    return sorted(out)
+
+
+def patch_batch_hints(system, cols: np.ndarray, new_cols: np.ndarray,
+                      new_used: dict[int, int]) -> list:
+    """Propagate one committed mutation batch into the batch-PIR subsystem.
+
+    No-op (empty list) when batch-PIR isn't enabled.  Otherwise returns the
+    per-bucket `BucketUpdate` records (delta-patched or rebuilt).
+    """
+    bp = getattr(system, "batch", None)
+    if bp is None:
+        return []
+    return bp.server.update_columns(np.asarray(cols), np.asarray(new_cols),
+                                    new_used)
+
+
+def rebuild_batch(old_system, new_system) -> None:
+    """Full-rebuild epochs re-bucketize: cluster contents and column
+    geometry may all have changed, so the subsystem is rebuilt on the fresh
+    system with the SAME (kappa, n_buckets, seed) knobs the old one used."""
+    bp = getattr(old_system, "batch", None)
+    if bp is None:
+        return
+    new_system.enable_batch(kappa=bp.kappa,
+                            n_buckets=bp.partition.n_buckets,
+                            seed=bp.seed)

@@ -1,0 +1,316 @@
+"""Batch-PIR subsystem: partition, placement, kernel, protocol, live deltas."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro import batchpir
+from repro.batchpir.partition import CuckooPartition, PlacementError
+from repro.core import pipeline
+from repro.data import corpus as corpus_lib
+from repro.data import metrics
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# partition + placement
+# ---------------------------------------------------------------------------
+
+def test_partition_balanced_and_deterministic():
+    p1 = CuckooPartition.build(64, 12, seed=3)
+    p2 = CuckooPartition.build(64, 12, seed=3)
+    assert (p1.candidates == p2.candidates).all()        # seed-deterministic
+    assert (np.sort(p1.candidates, axis=1)[:, :-1]
+            != np.sort(p1.candidates, axis=1)[:, 1:]).all()   # distinct rows
+    loads = np.bincount(p1.candidates.ravel(), minlength=12)
+    assert loads.max() - loads.min() <= 1                # balanced replicas
+    # members/width consistency: every cluster in exactly its 3 candidates
+    total = sum(len(m) for m in p1.members)
+    assert total == 3 * 64
+    assert p1.width == 16                                # next pow2 of 3n/B
+
+def test_position_roundtrip():
+    part = CuckooPartition.build(40, 9, seed=0)
+    for j in (0, 7, 39):
+        for b in part.buckets_of(j):
+            assert part.members[b][part.position(b, j)] == j
+    with pytest.raises(KeyError):
+        bad = next(b for b in range(9) if b not in part.buckets_of(0))
+        part.position(bad, 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(kappa=st.integers(min_value=1, max_value=8),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_placement_succeeds_or_retries_cleanly(kappa, seed):
+    """Cuckoo placement for random κ ≤ 8 at B = 3κ: a valid one-to-one
+    placement into candidate buckets, or a clean PlacementError."""
+    n = 48
+    part = CuckooPartition.build(n, 3 * kappa, seed=seed)
+    rng = np.random.default_rng(seed)
+    probes = rng.choice(n, size=kappa, replace=False)
+    try:
+        placement = part.place(probes, walk_seed=seed)
+    except PlacementError as e:                 # clean, typed failure
+        assert len(e.clusters) == kappa
+        return
+    assert sorted(placement.values()) == sorted(int(c) for c in probes)
+    for b, c in placement.items():
+        assert b in part.buckets_of(c)          # placed at a candidate
+    assert len(placement) == kappa              # one bucket per probe
+
+
+def test_placement_rejects_duplicates_and_overflow():
+    part = CuckooPartition.build(20, 6, seed=1)
+    with pytest.raises(ValueError):
+        part.place([3, 3])
+    with pytest.raises(PlacementError):
+        part.place(list(range(7)))              # κ > B can never place
+
+
+# ---------------------------------------------------------------------------
+# bucketed kernel
+# ---------------------------------------------------------------------------
+
+def test_bucketed_modmatmul_matches_ref():
+    rng = np.random.default_rng(0)
+    dbs = [jnp.asarray(rng.integers(0, 256, (m_b, 32), dtype=np.uint8))
+           for m_b in (64, 128, 96)]
+    qs = jnp.asarray(rng.integers(0, 2**32, (3, 32), dtype=np.uint32))
+    out = ops.bucketed_modmatmul(dbs, qs, impl="xla")
+    for b, d in enumerate(dbs):
+        exp = np.asarray(ref.modmatmul_ref(d, qs[b]))
+        assert (np.asarray(out[b]) == exp).all()
+
+
+def test_bucketed_modmatmul_pallas_bitwise():
+    """vmapped MXU kernel (interpret mode off-TPU) is bit-equal to XLA."""
+    rng = np.random.default_rng(1)
+    dbs = [jnp.asarray(rng.integers(0, 256, (m_b, 64), dtype=np.uint8))
+           for m_b in (128, 256)]
+    qs = jnp.asarray(rng.integers(0, 2**32, (2, 64, 3), dtype=np.uint32))
+    out_x = ops.bucketed_modmatmul(dbs, qs, impl="xla")
+    out_p = ops.bucketed_modmatmul(dbs, qs, impl="pallas",
+                                   block=(128, 64, 128))
+    for a, b in zip(out_x, out_p):
+        assert a.shape == b.shape
+        assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_bucketed_modmatmul_validates():
+    db = jnp.zeros((8, 4), jnp.uint8)
+    q = jnp.zeros((1, 4), jnp.uint32)
+    with pytest.raises(ValueError):
+        ops.bucketed_modmatmul([db, db], q)          # B mismatch
+    with pytest.raises(TypeError):
+        ops.bucketed_modmatmul([db], q.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end protocol
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_system():
+    corp = corpus_lib.make_corpus(0, 400, emb_dim=24, n_topics=12)
+    sysm = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                       n_clusters=12, impl="xla", seed=0)
+    sysm.enable_batch(kappa=4, seed=5)
+    return sysm, corp
+
+
+def test_batch_query_columns_byte_exact(small_system):
+    sysm, corp = small_system
+    bp = sysm.batch
+    probes = [0, 3, 7, 11]
+    qs, st = bp.client.query(jax.random.PRNGKey(3), probes)
+    assert qs.shape == (bp.partition.n_buckets, bp.partition.width)
+    cols = bp.client.recover(bp.server.answer_batch(qs), st)
+    for c in probes:
+        exp = sysm.db.matrix[:, c]
+        got = cols[c]
+        assert (got == exp[:len(got)]).all()         # truncated replica
+        assert not exp[len(got):].any()              # only padding dropped
+
+
+def test_batch_query_shape_hides_probe_count(small_system):
+    """κ=1 and κ=4 produce byte-identical wire shapes (dummies fill in)."""
+    sysm, _ = small_system
+    bp = sysm.batch
+    q1, _ = bp.client.query(jax.random.PRNGKey(0), [5])
+    q4, _ = bp.client.query(jax.random.PRNGKey(0), [5, 2, 9, 1])
+    assert q1.shape == q4.shape
+    assert q1.dtype == q4.dtype
+
+
+def test_batch_mode_matches_legacy_docs(small_system):
+    sysm, corp = small_system
+    q = corp.embeddings[17]
+    top_l, st_l = sysm.query(q, top_k=8, multi_probe=3, mode="legacy",
+                             key=jax.random.PRNGKey(1))
+    top_b, st_b = sysm.query(q, top_k=8, multi_probe=3, mode="batch",
+                             key=jax.random.PRNGKey(2))
+    assert [d for d, _, _ in top_l] == [d for d, _, _ in top_b]
+    assert st_l.mode == "legacy" and st_b.mode == "batch"
+
+
+def test_batch_accounting_exact(small_system):
+    sysm, corp = small_system
+    bp = sysm.batch
+    _, st = sysm.query(corp.embeddings[3], multi_probe=4, mode="batch",
+                       key=jax.random.PRNGKey(4))
+    assert st.probes == 4
+    assert st.n_buckets == bp.partition.n_buckets
+    assert st.uplink_bytes == sum(c.uplink_bytes for c in bp.server.cfgs)
+    assert st.downlink_bytes == sum(c.downlink_bytes for c in bp.server.cfgs)
+    assert st.hint_bytes == sum(c.hint_bytes for c in bp.server.cfgs)
+    # per-bucket wire atoms: uplink W u32 words, downlink m_b switched words
+    for cfg in bp.server.cfgs:
+        assert cfg.uplink_bytes == bp.partition.width * 4
+        assert cfg.downlink_bytes == cfg.m * 2
+
+
+def test_query_batch_multiprobe_without_batchpir_still_probes():
+    """No silent downgrade: multi_probe>1 without enable_batch() must fetch
+    P clusters per request via the legacy stacked GEMM."""
+    corp = corpus_lib.make_corpus(5, 300, emb_dim=24, n_topics=10)
+    sysm = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                       n_clusters=10, impl="xla", seed=0)
+    assert sysm.batch is None
+    key = jax.random.PRNGKey(3)
+    got = sysm.query_batch(corp.embeddings[:3], top_k=6, multi_probe=3,
+                           key=key)
+    for i in range(3):
+        exp, _ = sysm.query(corp.embeddings[i], top_k=6, multi_probe=3,
+                            mode="legacy", key=jax.random.PRNGKey(9))
+        assert [d for d, _, _ in got[i]] == [d for d, _, _ in exp]
+
+
+def test_single_probe_stays_legacy(small_system):
+    sysm, corp = small_system
+    _, st = sysm.query(corp.embeddings[0], multi_probe=1,
+                       key=jax.random.PRNGKey(0))
+    assert st.mode == "legacy"
+
+
+def test_keyless_queries_use_split_stream(small_system, monkeypatch):
+    """No OS-entropy fallback: keyless queries never touch np.random."""
+    sysm, corp = small_system
+
+    def boom(*a, **k):
+        raise AssertionError("np.random.default_rng used for LWE keying")
+    monkeypatch.setattr(np.random, "default_rng", boom)
+    top1, _ = sysm.query(corp.embeddings[11], top_k=5)
+    top2, _ = sysm.query(corp.embeddings[11], top_k=5)
+    assert [d for d, _, _ in top1] == [d for d, _, _ in top2]
+    k1, k2 = sysm.next_query_key(), sysm.next_query_key()
+    assert not np.array_equal(np.asarray(k1), np.asarray(k2))
+
+
+# ---------------------------------------------------------------------------
+# multi-probe quality on the boundary-recall fixture
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def boundary_batch_setup():
+    corp = corpus_lib.make_corpus(0, 600, emb_dim=96, n_topics=24,
+                                  topic_spread=1.0, encoder_noise=0.35)
+    qs = corpus_lib.make_queries(1, corp, 8, n_relevant=20, noise=0.5)
+    sysm = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                       n_clusters=40, impl="xla", seed=0)
+    sysm.enable_batch(kappa=4, seed=2)
+    return sysm, corp, qs
+
+
+def _mean_ndcg(sysm, qs, probe, mode):
+    vals = []
+    for i in range(len(qs.embeddings)):
+        top, st = sysm.query(qs.embeddings[i], top_k=10, multi_probe=probe,
+                             mode=mode, key=jax.random.PRNGKey(100 + i))
+        assert st.mode == mode
+        ids = np.array([d for d, _, _ in top])
+        vals.append(metrics.ndcg_at_k(ids, qs.relevant[i], qs.gains[i], 10))
+    return float(np.mean(vals))
+
+
+def test_batch_ndcg_matches_legacy_exactly(boundary_batch_setup):
+    """Same κ clusters fetched ⇒ identical rerank pool ⇒ identical nDCG@10."""
+    sysm, _, qs = boundary_batch_setup
+    n_legacy = _mean_ndcg(sysm, qs, 4, "legacy")
+    n_batch = _mean_ndcg(sysm, qs, 4, "batch")
+    assert n_batch == pytest.approx(n_legacy, abs=0.0)
+
+
+def test_batch_multi_probe_beats_single(boundary_batch_setup):
+    sysm, _, qs = boundary_batch_setup
+    n1 = _mean_ndcg(sysm, qs, 1, "legacy")
+    n4 = _mean_ndcg(sysm, qs, 4, "batch")
+    assert n4 > n1
+
+
+# ---------------------------------------------------------------------------
+# serving + live index integration
+# ---------------------------------------------------------------------------
+
+def test_serve_loop_plumbs_topk_and_multiprobe(small_system):
+    from repro.launch.serve import PIRServeLoop
+    sysm, corp = small_system
+    loop = PIRServeLoop(sysm, max_batch=4, deadline_ms=1e9)
+    for rid in range(4):
+        loop.submit(rid, corp.embeddings[rid * 11], top_k=3,
+                    multi_probe=2 if rid % 2 else 1)
+    loop.drain()
+    assert len(loop.responses) == 4
+    for r in loop.responses:
+        assert len(r.top) == 3                      # top_k honored, not 5
+        anchor = r.rid * 11
+        assert anchor in [d for d, _, _ in r.top]
+
+
+def test_live_mutation_patches_bucket_hints_bit_identical():
+    from repro.update import LiveIndex
+    corp = corpus_lib.make_corpus(2, 300, emb_dim=16, n_topics=8)
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=8,
+                           impl="xla", kmeans_iters=5)
+    live.system.enable_batch(kappa=3, n_buckets=9, seed=4)
+    bp = live.system.batch
+    before = [np.asarray(h).copy() for h in bp.server.hints]
+
+    live.replace(7, b"patched seven", corp.embeddings[7])
+    live.replace(211, b"patched two-eleven", corp.embeddings[211])
+    live.delete(100)
+    live.commit()
+
+    assert live.system.batch is bp                  # delta path, no rebuild
+    assert any((np.asarray(h) != b).any()
+               for h, b in zip(bp.server.hints, before))
+    fresh = bp.server.setup()                       # from-scratch bucket hints
+    for h, f in zip(bp.server.hints, fresh):
+        assert (np.asarray(h) == np.asarray(f)).all()
+    # and the batch query path serves the mutated content
+    top, st = live.system.query(corp.embeddings[7], top_k=5, multi_probe=2,
+                                key=jax.random.PRNGKey(0))
+    assert st.mode == "batch"
+    assert [t for d, _, t in top if d == 7] == [b"patched seven"]
+
+
+def test_batch_survives_full_rebuild_epoch():
+    """A full-rebuild commit re-bucketizes with the same geometry knobs."""
+    from repro.update import LiveIndex
+    corp = corpus_lib.make_corpus(3, 200, emb_dim=16, n_topics=6)
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=6,
+                           impl="xla", kmeans_iters=4)
+    live.system.enable_batch(kappa=2, n_buckets=6, seed=9)
+    old_bp = live.system.batch
+    # an insert too large for any column forces the overflow rebuild
+    live.insert(9999, b"x" * (live.system.db.m + 1), corp.embeddings[0])
+    live.commit()
+    assert live.commits[-1].full_rebuild
+    bp = live.system.batch
+    assert bp is not None and bp is not old_bp
+    assert bp.partition.n_buckets == 6 and bp.seed == 9
+    top, st = live.system.query(corp.embeddings[5], top_k=3, multi_probe=2,
+                                key=jax.random.PRNGKey(1))
+    assert st.mode == "batch" and len(top) == 3
