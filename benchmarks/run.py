@@ -75,8 +75,21 @@ def main() -> None:
     checks_b = bres["checks"]
     results["batchpir"] = bres
 
+    # ---- sharded serving: answer-GEMM scaling 1→8 fake devices --------------
+    from benchmarks import sharded_bench
+    sres = sharded_bench.run(fast=args.fast)
+    for r in sres["answer"]:
+        print(f"sharded_answer_d{r['n_devices']},{r['us_per_call']:.1f},"
+              f"db_per_dev={r['db_bytes_per_device']};"
+              f"qps={r['queries_per_s']:.0f}")
+    for r in sres["bucketed"]:
+        print(f"sharded_bucketed_d{r['n_devices']},{r['us_per_call']:.1f},"
+              f"stored_per_dev={r['stored_bytes_per_device']}")
+    checks_s = sres["checks"]
+    results["sharded"] = sres
+
     print("\n# paper-claim validation")
-    for c in checks2 + checks3 + checks_b:
+    for c in checks2 + checks3 + checks_b + checks_s:
         print("#", c)
 
     with open(os.path.join(args.out, "bench_results.json"), "w") as f:
@@ -89,8 +102,9 @@ def main() -> None:
         json.dump(dict(kernel=results["kernel"],
                        fig2=results["scalability"],
                        fig3=results["quality"],
-                       batchpir=bres), f, indent=1, default=float)
-    all_checks = checks2 + checks3 + checks_b
+                       batchpir=bres,
+                       sharded=sres), f, indent=1, default=float)
+    all_checks = checks2 + checks3 + checks_b + checks_s
     n_fail = sum(1 for c in all_checks if c.startswith("FAIL"))
     print(f"\n# {len(all_checks) - n_fail} claims PASS, {n_fail} FAIL")
 

@@ -43,13 +43,20 @@ class BatchPIR:
 
 def build(matrix: np.ndarray, used_bytes: np.ndarray, params, *,
           kappa: int = 8, n_buckets: int | None = None, seed: int = 101,
-          a_seed: int = 7, impl: str = "auto") -> BatchPIR:
-    """Bucketize a chunk-transposed DB and hint every bucket (offline)."""
+          a_seed: int = 7, impl: str = "auto",
+          mesh=None, mesh_axes=None) -> BatchPIR:
+    """Bucketize a chunk-transposed DB and hint every bucket (offline).
+
+    With ``mesh=`` the buckets spread over the device mesh on the answer
+    path (`BatchPIRServer` sharding) — cryptographic outputs are bit-
+    identical either way.
+    """
     t0 = time.perf_counter()
     n_buckets = n_buckets if n_buckets is not None else 3 * kappa
     part = CuckooPartition.build(matrix.shape[1], n_buckets, seed)
     server = BatchPIRServer(matrix, used_bytes, part, params,
-                            a_seed=a_seed, impl=impl)
+                            a_seed=a_seed, impl=impl,
+                            mesh=mesh, mesh_axes=mesh_axes)
     server.install_hints()
     client = BatchPIRClient.from_server(server)
     return BatchPIR(partition=part, server=server, client=client,

@@ -68,12 +68,22 @@ class BatchPIRServer:
 
     def __init__(self, matrix: np.ndarray, used_bytes: np.ndarray,
                  partition: CuckooPartition, params: lwe.LWEParams, *,
-                 a_seed: int = 7, impl: str = "auto"):
+                 a_seed: int = 7, impl: str = "auto",
+                 mesh=None, mesh_axes: tuple[str, ...] | None = None):
         n = partition.n_clusters
         assert matrix.shape[1] == n, (matrix.shape, n)
         self.partition = partition
         self.impl = impl
         self.a_seed = a_seed
+        self.mesh = mesh
+        self.mesh_axes: tuple[str, ...] | None = None
+        self.n_shards = 1
+        self._stack: jax.Array | None = None   # sharded bucket stack cache
+        if mesh is not None:
+            self.mesh_axes = (tuple(mesh_axes) if mesh_axes is not None
+                              else tuple(mesh.axis_names))
+            for a in self.mesh_axes:
+                self.n_shards *= mesh.shape[a]
         if not lwe.noise_budget_ok(params, partition.width):
             params = lwe.choose_params(partition.width,
                                        q_switch=params.q_switch)
@@ -91,7 +101,11 @@ class BatchPIRServer:
             sub = np.zeros((rows, partition.width), np.uint8)
             if len(mem):
                 sub[:, :len(mem)] = matrix[:rows, mem]
-            self.sub_dbs.append(jnp.asarray(sub))
+            # sharded servers answer from the mesh-resident stack, so the
+            # per-bucket views stay host-side (read for deltas/restacks
+            # only) — otherwise device 0 would hold a second full DB copy
+            self.sub_dbs.append(sub if mesh is not None
+                                else jnp.asarray(sub))
             self.cfgs.append(pir.PIRConfig(
                 m=rows, n=partition.width, params=self.params,
                 a_seed=_bucket_a_seed(a_seed, b), impl=impl))
@@ -139,11 +153,39 @@ class BatchPIRServer:
     # -- online --------------------------------------------------------------
 
     def answer_batch(self, qs: jax.Array) -> list[jax.Array]:
-        """qs: (B, W) or (B, W, C) uint32 → per-bucket (switched) answers."""
-        raw = ops.bucketed_modmatmul(self.sub_dbs, qs, impl=self.impl)
+        """qs: (B, W) or (B, W, C) uint32 → per-bucket (switched) answers.
+
+        On a sharded server the buckets spread over the mesh (each device
+        owns whole buckets, zero collectives); the stacked sub-DB layout is
+        cached across calls and invalidated by column updates/rebuilds.
+        """
+        if self.mesh is not None:
+            raw = self._answer_batch_sharded(qs)
+        else:
+            raw = ops.bucketed_modmatmul(self.sub_dbs, qs, impl=self.impl)
         if self.params.q_switch is not None:
             raw = [_switch_jit(a, self.params.q_switch) for a in raw]
         return raw
+
+    @property
+    def _stack_sharding(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return NamedSharding(self.mesh, P(self.mesh_axes, None, None))
+
+    def _answer_batch_sharded(self, qs: jax.Array) -> list[jax.Array]:
+        if self._stack is None:
+            self._stack = jax.device_put(
+                ops.stack_buckets(self.sub_dbs, self.n_shards),
+                self._stack_sharding)
+        was_vec = qs.ndim == 2
+        q3 = qs[:, :, None] if was_vec else qs
+        b_pad = self._stack.shape[0] - q3.shape[0]
+        if b_pad:
+            q3 = jnp.pad(q3, ((0, b_pad), (0, 0), (0, 0)))
+        full = ops.bucketed_modmatmul_sharded(self._stack, q3, self.mesh,
+                                              self.mesh_axes)
+        out = [full[b, :d.shape[0], :] for b, d in enumerate(self.sub_dbs)]
+        return [o[:, 0] for o in out] if was_vec else out
 
     # -- live-index deltas ---------------------------------------------------
 
@@ -177,7 +219,17 @@ class BatchPIRServer:
                            np.int64)
             new_sub = jnp.asarray(new_cols[:rows, idxs])
             delta_h = self._delta(b, pos, new_sub)
-            self.sub_dbs[b] = self.sub_dbs[b].at[:, pos].set(new_sub)
+            if self.mesh is not None:      # host-side view: in-place write
+                self.sub_dbs[b][:, pos] = new_cols[:rows, idxs]
+            else:
+                self.sub_dbs[b] = self.sub_dbs[b].at[:, pos].set(new_sub)
+            if self._stack is not None:
+                # patch the cached sharded layout with ONE fused scatter
+                # (scatter output keeps the operand's sharding); the value
+                # is transposed because jax moves the advanced-index dims
+                # (bucket scalar + column array) to the front
+                self._stack = self._stack.at[
+                    b, :rows, jnp.asarray(pos)].set(new_sub.T)
             if self.hints:
                 self.hints[b] = self.hints[b] + delta_h
             updates.append(BucketUpdate(bucket=b, rebuilt=False, cols=pos))
@@ -225,7 +277,9 @@ class BatchPIRServer:
             src = col_src[int(j)]
             take = min(rows, len(src))
             sub[:take, p] = src[:take]
-        self.sub_dbs[bucket] = jnp.asarray(sub)
+        self.sub_dbs[bucket] = sub if self.mesh is not None \
+            else jnp.asarray(sub)
+        self._stack = None
         # A_b depends only on (n, k), so it survives the row-budget change.
         self.cfgs[bucket] = dataclasses.replace(self.cfgs[bucket], m=rows)
         if self.hints:

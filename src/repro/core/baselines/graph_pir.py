@@ -2,10 +2,22 @@
 
 A k-NN similarity graph is built over the document embeddings; retrieval is a
 private best-first beam traversal.  At every hop the client PIR-fetches the
-*records* (quantized embedding + adjacency list) of the beam's unvisited
+*records* (quantized embedding + adjacency list) of its best unvisited
 candidates — batched into one server GEMM per hop — scores them locally, and
 expands.  The server sees only pseudorandom query vectors, never which nodes
 are walked.
+
+Candidate ranking is the crux of private traversal: a neighbour's embedding
+is unknown until fetched, so a naive walk ranks candidates by their parent's
+score — "blind greedy", which both dead-ends (when the current best beam's
+neighbourhoods are exhausted the walk stops with promising candidates still
+unvisited) and wastes its fetch budget circling the entry region.  Instead,
+each node record carries a compact SimHash *sketch* (64 sign bits of a
+public random projection) of every neighbour — the same trick DiskANN uses
+with PQ codes — so the client ranks the candidate pool by each candidate's
+OWN estimated similarity before spending a PIR fetch on it.  Sketches ride
+inside the PIR-fetched records and the projection is public, so the server's
+view is unchanged.
 
 Trade-off profile (reproduced in benchmarks/):
   + best search quality (fine-grained traversal, not confined to one cluster)
@@ -59,11 +71,30 @@ def build_nav_graph(embs: np.ndarray, k: int, n_random: int,
     return np.concatenate([knn, rand], axis=1)
 
 
-def _serialize_node(emb: np.ndarray, nbrs: np.ndarray) -> bytes:
+_SKETCH_BITS = 64               # SimHash sign bits per node (8 bytes)
+
+
+def sketch_matrix(seed: int, d: int) -> np.ndarray:
+    """Public random projection for the navigation sketches (client+server
+    derive it from a shared seed, like the LWE matrix A)."""
+    return np.random.default_rng(seed ^ 0x51E7C4).standard_normal(
+        (_SKETCH_BITS, d)).astype(np.float32)
+
+
+def embed_sketches(embs: np.ndarray, proj: np.ndarray) -> np.ndarray:
+    """(n, d) embeddings → (n, 8) uint8 packed sign bits of proj·emb."""
+    nn = embs / (np.linalg.norm(embs, axis=1, keepdims=True) + 1e-12)
+    bits = (nn @ proj.T) > 0
+    return np.packbits(bits, axis=1)
+
+
+def _serialize_node(emb: np.ndarray, nbrs: np.ndarray,
+                    nbr_sketches: np.ndarray) -> bytes:
     from repro.core.chunking import quantize_embedding
     q, scale, off = quantize_embedding(emb)
     return (np.float32(scale).tobytes() + np.float32(off).tobytes()
-            + q.tobytes() + nbrs.astype(np.uint32).tobytes())
+            + q.tobytes() + nbrs.astype(np.uint32).tobytes()
+            + nbr_sketches.astype(np.uint8).tobytes())
 
 
 @dataclasses.dataclass
@@ -78,6 +109,7 @@ class GraphPIRSystem:
     n_docs: int
     index_seconds: float = 0.0    # graph construction (no crypto)
     hint_seconds: float = 0.0
+    sketch_seed: int = 0          # public seed of the navigation projection
 
     @classmethod
     def build(cls, embeddings: np.ndarray, *, degree: int = 12,
@@ -87,7 +119,9 @@ class GraphPIRSystem:
         n, d = embeddings.shape
         graph = build_nav_graph(embeddings, degree, n_random, seed=seed)
         total_deg = degree + n_random
-        recs = [_serialize_node(embeddings[i], graph[i]) for i in range(n)]
+        sketches = embed_sketches(embeddings, sketch_matrix(seed, d))
+        recs = [_serialize_node(embeddings[i], graph[i], sketches[graph[i]])
+                for i in range(n)]
         m = len(recs[0])
         mat = np.zeros((m, n), np.uint8)
         for i, r in enumerate(recs):
@@ -110,34 +144,57 @@ class GraphPIRSystem:
                    graph_degree=total_deg,
                    setup_seconds=time.perf_counter() - t0, n_docs=n,
                    index_seconds=t_index - t0,
-                   hint_seconds=t_hint_done - t_index)
+                   hint_seconds=t_hint_done - t_index, sketch_seed=seed)
 
-    def _decode_node(self, col: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    def _decode_node(self, col: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """→ (embedding (d,), neighbour ids (deg,), sketches (deg, 8) u8)."""
         from repro.core.chunking import dequantize_embedding
         buf = col.tobytes()
         scale = float(np.frombuffer(buf[0:4], np.float32)[0])
         off = float(np.frombuffer(buf[4:8], np.float32)[0])
         q = np.frombuffer(buf[8:8 + self.emb_dim], np.uint8)
-        nbrs = np.frombuffer(
-            buf[8 + self.emb_dim:8 + self.emb_dim + 4 * self.graph_degree],
-            np.uint32)
-        return dequantize_embedding(q, scale, off), nbrs
+        ofs = 8 + self.emb_dim
+        nbrs = np.frombuffer(buf[ofs:ofs + 4 * self.graph_degree], np.uint32)
+        ofs += 4 * self.graph_degree
+        sk = np.frombuffer(
+            buf[ofs:ofs + (_SKETCH_BITS // 8) * self.graph_degree],
+            np.uint8).reshape(self.graph_degree, _SKETCH_BITS // 8)
+        return dequantize_embedding(q, scale, off), nbrs, sk
 
     def search(self, query_emb: np.ndarray, *, top_k: int = 10,
                beam: int = 8, max_hops: int = 6, seed: int = 0
                ) -> tuple[np.ndarray, GraphPIRStats]:
-        """Private best-first traversal; one batched PIR fetch per hop."""
+        """Private best-first traversal; one batched PIR fetch per hop.
+
+        The candidate pool persists across hops (no dead ends: a hop that
+        exhausts one region backtracks to the best unvisited candidate seen
+        anywhere), is deduplicated (a node never spends two fetch slots),
+        and is ranked by each candidate's own sketch similarity to the
+        query rather than its parent's score, so the walk crosses low-score
+        regions and long-range links whenever the sketches say the far side
+        looks better.
+        """
         client = pir.PIRClient(self.cfg, self.hint)
         qn = query_emb / (np.linalg.norm(query_emb) + 1e-12)
+        proj = sketch_matrix(self.sketch_seed, self.emb_dim)
+        qbits = np.unpackbits(embed_sketches(qn[None, :], proj)[0])
+
+        def sketch_sim(packed: np.ndarray) -> float:
+            """Fraction of agreeing sign bits ≈ 1 − angle/π (SimHash)."""
+            return float(
+                (np.unpackbits(packed) == qbits).mean())
 
         scored: dict[int, float] = {}
-        nbrs_of: dict[int, np.ndarray] = {}
-        frontier = list(dict.fromkeys(int(e) for e in self.entry_points))
+        # pool: candidate → own estimated similarity; entries are fetched
+        # first regardless (their sketches are unknown until decoded)
+        pool: dict[int, float] = {int(e): float("inf")
+                                  for e in self.entry_points}
         up = down = fetched = 0
         server_ms = 0.0
         hops = 0
         for hop in range(max_hops):
-            cand = [c for c in frontier if c not in scored][:beam]
+            cand = sorted(pool, key=lambda c: -pool[c])[:beam]
             if not cand:
                 break
             hops += 1
@@ -157,15 +214,14 @@ class GraphPIRSystem:
 
             for j, (node, st) in enumerate(zip(cand, states)):
                 col = np.asarray(client.recover(ans[:, j], st))
-                emb, nbrs = self._decode_node(col)
+                emb, nbrs, sketches = self._decode_node(col)
                 scored[node] = float(
                     emb @ qn / (np.linalg.norm(emb) + 1e-12))
-                nbrs_of[node] = nbrs
-            # best-first expansion: next frontier = unvisited neighbours of
-            # the best `beam` nodes scored so far, in score order
-            best = sorted(scored, key=lambda n: -scored[n])[:beam]
-            frontier = [int(x) for n in best for x in nbrs_of[n]
-                        if int(x) not in scored]
+                pool.pop(node, None)
+                for x, sk in zip(nbrs, sketches):
+                    x = int(x)
+                    if x not in scored and x not in pool:
+                        pool[x] = sketch_sim(sk)
         ids = np.array(sorted(scored, key=lambda n: -scored[n])[:top_k],
                        np.int64)
         return ids, GraphPIRStats(hops=hops, uplink_bytes=up,

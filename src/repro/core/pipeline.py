@@ -53,6 +53,8 @@ class PirRagSystem:
     hint_seconds: float = 0.0     # hint GEMM (int8-roofline op on TPU)
     assignment: np.ndarray | None = None  # (N,) doc→cluster (live index)
     batch: object | None = None           # batchpir.BatchPIR once enabled
+    mesh: object | None = None            # device mesh (sharded serving)
+    mesh_axes: tuple | None = None        # mesh axes the DB rows shard over
     _qkey: jax.Array | None = None        # split stream for keyless queries
 
     # -- offline ------------------------------------------------------------
@@ -63,7 +65,12 @@ class PirRagSystem:
               balance_factor: float | None = None, seed: int = 0,
               impl: str = "auto", q_switch: int | None = 1 << 16,
               doc_ids: Sequence[int] | None = None,
+              mesh=None, mesh_axes: tuple | None = None,
               ) -> "PirRagSystem":
+        """Offline setup.  ``mesh=`` row-shards the server DB over a device
+        mesh (zero-collective answer path; see `distributed.collectives.
+        row_shard_gemm`) — every online result stays bit-identical to the
+        single-device layout."""
         t0 = time.perf_counter()
         emb_j = jnp.asarray(embeddings, jnp.float32)
         km = clustering.kmeans_fit(jax.random.PRNGKey(seed), emb_j,
@@ -79,13 +86,19 @@ class PirRagSystem:
                                        assign, n_clusters, chunk_size,
                                        doc_ids=doc_ids)
         cfg = pir.make_config(db.m, db.n, impl=impl, q_switch=q_switch)
-        server = pir.PIRServer(cfg, jnp.asarray(db.matrix))
+        server = pir.PIRServer(cfg, jnp.asarray(db.matrix),
+                               mesh=mesh, mesh_axes=mesh_axes)
         t_index = time.perf_counter()
         hint = jax.block_until_ready(server.setup())
+        if mesh is not None:
+            # the client's one-time hint download: gathered off the mesh so
+            # all client-side decode math stays host-local
+            hint = jnp.asarray(np.asarray(hint))
         t_end = time.perf_counter()
         return cls(centroids=cents, db=db, cfg=cfg, server=server, hint=hint,
                    setup_seconds=t_end - t0, index_seconds=t_index - t0,
                    hint_seconds=t_end - t_index, assignment=assign,
+                   mesh=mesh, mesh_axes=server.mesh_axes,
                    _qkey=_fresh_client_key())
 
     # -- key stream ----------------------------------------------------------
@@ -108,12 +121,17 @@ class PirRagSystem:
 
     def enable_batch(self, *, kappa: int = 8, n_buckets: int | None = None,
                      seed: int = 101) -> "object":
-        """Bucketize the DB for batch-PIR; multi_probe>1 then routes there."""
+        """Bucketize the DB for batch-PIR; multi_probe>1 then routes there.
+
+        A sharded system passes its mesh through: buckets spread across the
+        same devices the flat DB row-shards over.
+        """
         from repro import batchpir
         self.batch = batchpir.build(
             self.db.matrix, self.db.used_bytes, self.cfg.params,
             kappa=kappa, n_buckets=n_buckets, seed=seed,
-            a_seed=self.cfg.a_seed, impl=self.cfg.impl)
+            a_seed=self.cfg.a_seed, impl=self.cfg.impl,
+            mesh=self.mesh, mesh_axes=self.mesh_axes)
         return self.batch
 
     # -- online -------------------------------------------------------------

@@ -14,6 +14,15 @@ many clients into the column dimension, turning the GEMV into a GEMM.
 
 Beyond-paper: modulus-switched responses (q → 2^16) halve the downlink at a
 rounding-noise cost accounted in `lwe.noise_budget_ok`.
+
+Sharded serving (beyond-paper, `distributed.sharding.pir_rules`): pass
+``mesh=`` to row-shard the packed DB over the device mesh.  Queries
+replicate; every shard computes its own hint rows H_s = D_s·A and answer
+slice ans_s = D_s·qu with ZERO collectives (the contraction dim — the
+cluster axis — is never split), and the client decodes the concatenation.
+All sharded arithmetic is the same exact mod-2^32 kernel path, so results
+are bit-identical to the single-device layout (property-tested under the
+8-fake-device harness in tests/test_sharded_pir.py).
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import lwe
 from repro.kernels import ops
@@ -62,14 +72,45 @@ class PIRConfig:
 # ---------------------------------------------------------------------------
 
 class PIRServer:
-    """Holds the plaintext DB (u8, entries < p) and answers encrypted queries."""
+    """Holds the plaintext DB (u8, entries < p) and answers encrypted queries.
 
-    def __init__(self, cfg: PIRConfig, db: jax.Array):
+    With ``mesh=`` the DB row-shards over the mesh (the ``chunks`` logical
+    axis of `sharding.pir_rules`); rows are zero-padded up to a multiple of
+    the shard count so `shard_map` sees equal slices.  The padding rows are
+    all-zero on both the DB and the hint, so answers/decodes are unaffected
+    — every public method still speaks global (m, ...) shapes.
+    """
+
+    def __init__(self, cfg: PIRConfig, db: jax.Array, *,
+                 mesh=None, mesh_axes: tuple[str, ...] | None = None):
         assert db.shape == (cfg.m, cfg.n), (db.shape, (cfg.m, cfg.n))
         assert db.dtype == jnp.uint8
         self.cfg = cfg
+        self.mesh = mesh
+        self.mesh_axes: tuple[str, ...] | None = None
+        self._row_pad = 0
+        if mesh is not None:
+            axes = (tuple(mesh_axes) if mesh_axes is not None
+                    else tuple(mesh.axis_names))
+            self.mesh_axes = axes
+            shards = 1
+            for a in axes:
+                shards *= mesh.shape[a]
+            self.n_shards = shards
+            self._row_pad = (-cfg.m) % shards
+            if self._row_pad:
+                db = jnp.pad(jnp.asarray(db), ((0, self._row_pad), (0, 0)))
+            self._db_sharding = NamedSharding(mesh,
+                                              PartitionSpec(axes, None))
+            self._replicated = NamedSharding(mesh, PartitionSpec())
+            db = jax.device_put(db, self._db_sharding)
+        else:
+            self.n_shards = 1
         self.db = db
         self._a_mat: jax.Array | None = None   # lazy; immutable per config
+        self._answer_fn = None                 # cached shard_map'd hot path
+        self._hint_fn = None
+        self._delta_fn = None
 
     @property
     def a_matrix(self) -> jax.Array:
@@ -80,15 +121,43 @@ class PIRServer:
         return self._a_mat
 
     def setup(self) -> jax.Array:
-        """Offline hint H = D·A ∈ Z_q^{m×k} (the heavy one-time GEMM)."""
-        return ops.hint_gemm(self.db, self.a_matrix, impl=self.cfg.impl)
+        """Offline hint H = D·A ∈ Z_q^{m×k} (the heavy one-time GEMM).
+
+        Sharded servers compute per-shard hint rows H_s = D_s·A in place
+        (zero collectives) and return the global (m, k) view; the client
+        downloads it once, exactly like the single-device hint.
+        """
+        if self.mesh is None:
+            return ops.hint_gemm(self.db, self.a_matrix, impl=self.cfg.impl)
+        if self._hint_fn is None:
+            from repro.distributed import collectives
+            self._hint_fn = collectives.row_shard_gemm(
+                self.mesh, self.mesh_axes, impl=self.cfg.impl)
+        a_rep = jax.device_put(self.a_matrix, self._replicated)
+        return self._hint_fn(self.db, a_rep)[:self.cfg.m]
 
     def answer(self, qu: jax.Array) -> jax.Array:
-        """Online answer: D·qu mod 2^32.  qu: (n,) or (n, batch) uint32."""
-        ans = ops.modmatmul(self.db, qu, impl=self.cfg.impl)
-        if self.cfg.params.q_switch is not None:
-            ans = lwe.switch_modulus(ans, self.cfg.params.q_switch)
-        return ans
+        """Online answer: D·qu mod 2^32.  qu: (n,) or (n, batch) uint32.
+
+        Sharded servers replicate qu and run the shard_map'd row GEMM —
+        each device answers its own row slice, no collectives.
+        """
+        if self.mesh is None:
+            ans = ops.modmatmul(self.db, qu, impl=self.cfg.impl)
+            if self.cfg.params.q_switch is not None:
+                ans = lwe.switch_modulus(ans, self.cfg.params.q_switch)
+            return ans
+        if self._answer_fn is None:
+            from repro.distributed import collectives
+            self._answer_fn = collectives.row_shard_gemm(
+                self.mesh, self.mesh_axes, impl=self.cfg.impl,
+                q_switch=self.cfg.params.q_switch)
+        was_vec = qu.ndim == 1
+        q2 = qu[:, None] if was_vec else qu
+        ans = self._answer_fn(self.db,
+                              jax.device_put(q2, self._replicated))
+        ans = ans[:self.cfg.m]
+        return ans[:, 0] if was_vec else ans
 
     def update_columns(self, cols: jax.Array, new_cols: jax.Array
                        ) -> jax.Array:
@@ -110,14 +179,24 @@ class PIRServer:
         whose "new" contents equal their current contents, so padding slots
         cancel exactly in ΔH while streamed mutation batches of varying size
         reuse a handful of compiled shapes instead of recompiling per batch.
+
+        Sharded servers scatter the new columns into the row-sharded DB and
+        run the delta GEMM shard_map'd: each shard patches only the hint
+        rows it owns, so the live-index commit is collective-free like the
+        answer path.
         """
         cols = jnp.asarray(cols)
         new_cols = jnp.asarray(new_cols)
         j = int(cols.shape[0])
         assert new_cols.shape == (self.cfg.m, j)
         assert new_cols.dtype == jnp.uint8
+        if self._row_pad:
+            # DB padding rows are zero and stay zero across mutations
+            new_cols = jnp.pad(new_cols, ((0, self._row_pad), (0, 0)))
         old_cols = self.db[:, cols]
-        self.db = self.db.at[:, cols].set(new_cols)  # true columns only
+        db = self.db.at[:, cols].set(new_cols)       # true columns only
+        self.db = (jax.device_put(db, self._db_sharding)
+                   if self.mesh is not None else db)
 
         bucket = 1 << max(0, (j - 1).bit_length())
         pad = min(bucket, self.cfg.n) - j
@@ -131,7 +210,16 @@ class PIRServer:
         else:
             cols_g, new_g, old_g = cols, new_cols, old_cols
         a_j = self.a_matrix[cols_g]                        # (J', k)
-        return ops.delta_gemm(new_g, old_g, a_j, impl=self.cfg.impl)
+        if self.mesh is None:
+            return ops.delta_gemm(new_g, old_g, a_j, impl=self.cfg.impl)
+        if self._delta_fn is None:
+            from repro.distributed import collectives
+            self._delta_fn = collectives.row_shard_delta_gemm(
+                self.mesh, self.mesh_axes, impl=self.cfg.impl)
+        return self._delta_fn(
+            jax.device_put(new_g, self._db_sharding),
+            jax.device_put(old_g, self._db_sharding),
+            jax.device_put(a_j, self._replicated))[:self.cfg.m]
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,7 @@
 """Explicit shard_map building blocks for the model-parallel hot paths.
 
-pjit+constraints handles most of the framework; these are the three places
-where we want the communication pattern pinned down rather than inferred:
+pjit+constraints handles most of the framework; these are the places where
+we want the communication pattern pinned down rather than inferred:
 
   * ``sharded_embedding_lookup`` — row-sharded tables: local masked gather +
     one psum (the classic model-parallel embedding; avoids XLA materializing
@@ -10,9 +10,15 @@ where we want the communication pattern pinned down rather than inferred:
     sequence; per-shard online-softmax partials combined with pmax/psum.
   * ``ring_psum`` — reduce via collective_permute ring, used by the gradient
     compression path so the wire format stays int8 end-to-end.
+  * ``row_shard_gemm`` / ``row_shard_delta_gemm`` — the PIR serving strategy
+    (`sharding.pir_rules`): the packed database row-shards over the mesh,
+    queries replicate, every shard answers its own row slice.  ZERO
+    collectives on the hot path — the modular GEMM's contraction dim (the
+    cluster axis) is never split, so per-shard answers are already final.
 
-Each has an 8-device subprocess test (tests/test_sharded.py) asserting
-bitwise/allclose equality with the single-device reference.
+Each has an 8-device subprocess test (tests/test_sharded.py /
+tests/test_sharded_pir.py) asserting bitwise/allclose equality with the
+single-device reference.
 """
 from __future__ import annotations
 
@@ -73,6 +79,82 @@ def split_s_decode_attention(mesh: Mesh, axis: str, *, scale: float):
     return shard_map(local, mesh=mesh,
                      in_specs=(P(), P(None, axis), P(None, axis), P()),
                      out_specs=P())
+
+
+@functools.lru_cache(maxsize=None)
+def row_shard_gemm(mesh: Mesh, axes: tuple[str, ...], *, impl: str = "auto",
+                   q_switch: int | None = None):
+    """Returns ans(db, q): the row-sharded modular GEMM  D·q  (mod 2^32).
+
+    db: (m, n) uint8 sharded P(axes, None) — each device holds a row slice
+    D_s.  q: (n, b) uint32 replicated.  Returns (m, b) sharded P(axes, None)
+    (uint16 when ``q_switch`` ≤ 2^16 — the modulus switch runs shard-local
+    too, so the downlink leaves each shard already compressed).
+
+    Row sharding never splits the contraction dim, so each shard's answer
+    slice  ans_s = D_s·q  is final: no psum, no all-gather — the compiled
+    HLO contains no collective ops at all (asserted in tests).  This is the
+    whole-system serving strategy argued in ``sharding.pir_rules``:
+    replicating the query batch (n·b·4 bytes) is a trivial broadcast next
+    to streaming the per-shard DB bytes, and it keeps per-device arithmetic
+    intensity at the full-batch 4·b ops/byte.
+    """
+    from repro.core import lwe
+    from repro.kernels import ops
+
+    def local(db_shard, q):
+        ans = ops.modmatmul(db_shard, q, impl=impl)
+        if q_switch is not None:
+            ans = lwe.switch_modulus(ans, q_switch)
+        return ans
+
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(axes, None), P()),
+                             out_specs=P(axes, None)))
+
+
+@functools.lru_cache(maxsize=None)
+def row_shard_delta_gemm(mesh: Mesh, axes: tuple[str, ...], *,
+                         impl: str = "auto"):
+    """Returns delta(new, old, a_j): row-sharded ΔH = (new−old)·A_J.
+
+    new/old: (m, J) uint8 sharded P(axes, None); a_j: (J, k) uint32
+    replicated.  Each shard patches only its own hint rows — the live-index
+    delta never leaves the shard that owns those DB rows, so mutation
+    commits are collective-free exactly like the answer path.
+    """
+    from repro.kernels import ops
+
+    def local(new_shard, old_shard, a_j):
+        return ops.delta_gemm(new_shard, old_shard, a_j, impl=impl)
+
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(axes, None), P(axes, None), P()),
+                             out_specs=P(axes, None)))
+
+
+@functools.lru_cache(maxsize=None)
+def bucket_shard_gemm(mesh: Mesh, axes: tuple[str, ...]):
+    """Returns ans(stack, qs): bucket-sharded batch-PIR GEMM (mod 2^32).
+
+    stack: (B, m, W) uint8 sharded P(axes, None, None) — buckets spread
+    across devices, each device owning B/shards whole sub-DBs.  qs:
+    (B, W, C) uint32 sharded the same way (a bucket's queries live with its
+    sub-DB).  Returns (B, m, C) uint32 sharded P(axes, None, None).
+
+    Bucket-parallel, not row-parallel: every bucket's GEMM is complete on
+    its owning device, so — like ``row_shard_gemm`` — there are zero
+    collectives.  The local op is the plain u32 batched matmul (XLA integer
+    matmul wraps mod 2^32, the same oracle `kernels.ref` uses), bitwise
+    equal to the per-bucket loop in ``ops.bucketed_modmatmul``.
+    """
+    def local(stack_shard, q_shard):
+        return jnp.einsum("bmw,bwc->bmc", stack_shard.astype(jnp.uint32),
+                          q_shard.astype(jnp.uint32))
+
+    spec = P(axes, None, None)
+    return jax.jit(shard_map(local, mesh=mesh, in_specs=(spec, spec),
+                             out_specs=spec))
 
 
 def ring_psum(mesh: Mesh, axis: str):

@@ -107,6 +107,40 @@ def _matvec_u32(d: jax.Array, q: jax.Array) -> jax.Array:
     return jnp.matmul(d.astype(U32), q)
 
 
+def stack_buckets(dbs: Sequence[jax.Array], n_shards: int = 1
+                  ) -> jax.Array:
+    """Zero-pad bucket sub-DBs to a common height and stack: (B', m', W).
+
+    The bucket count pads up to a multiple of ``n_shards`` with all-zero
+    buckets (their answers are zero and are never sliced out), so the stack
+    divides evenly over a mesh for the sharded batch-PIR path.
+    """
+    m_pad = max(d.shape[0] for d in dbs)
+    b_pad = (-len(dbs)) % n_shards
+    padded = [jnp.pad(d, ((0, m_pad - d.shape[0]), (0, 0))) for d in dbs]
+    if b_pad:
+        zero = jnp.zeros((m_pad, dbs[0].shape[1]), jnp.uint8)
+        padded += [zero] * b_pad
+    return jnp.stack(padded)
+
+
+def bucketed_modmatmul_sharded(stack: jax.Array, qs: jax.Array, mesh,
+                               mesh_axes: tuple[str, ...]) -> jax.Array:
+    """Bucket-sharded batch-PIR GEMM: buckets spread across the mesh.
+
+    stack: (B', m', W) uint8 from `stack_buckets` (B' a multiple of the
+    mesh's shard count); qs: (B', W, C) uint32.  Both shard on the bucket
+    axis — each device answers its own whole buckets, zero collectives —
+    and the result (B', m', C) uint32 is bit-identical to the per-bucket
+    loop (exact mod-2^32 arithmetic either way).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import collectives
+    spec = NamedSharding(mesh, P(tuple(mesh_axes), None, None))
+    fn = collectives.bucket_shard_gemm(mesh, tuple(mesh_axes))
+    return fn(jax.device_put(stack, spec), jax.device_put(qs, spec))
+
+
 def bucketed_modmatmul(dbs: Sequence[jax.Array], qs: jax.Array, *,
                        impl: str = "auto",
                        block: tuple[int, int, int] = (256, 512, 128)

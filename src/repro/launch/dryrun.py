@@ -90,6 +90,8 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):      # jax < 0.5 wraps it in a list
+            ca = ca[0] if ca else {}
         rec["xla_cost"] = {k: float(v) for k, v in ca.items()
                            if isinstance(v, (int, float))
                            and k in ("flops", "bytes accessed",

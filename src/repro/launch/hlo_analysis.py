@@ -106,12 +106,17 @@ def parse_hlo(text: str) -> dict[str, Computation]:
 
         if opcode == "dot":
             args_m = re.search(r"dot\(([^)]*)\)", rest)
-            operands = [a.strip().lstrip("%") for a in
-                        args_m.group(1).split(",")] if args_m else []
+            args = args_m.group(1) if args_m else ""
+            # newer HLO prints operand types inline with layout annotations
+            # ("u32[8192,4096]{1,0} %call") whose commas defeat naive
+            # splitting — pull names by sigil and shapes by pattern instead
+            operands = (re.findall(r"%([\w.\-]+)", args)
+                        or [a.strip() for a in args.split(",") if a.strip()])
+            inline = _parse_shapes(args)
             lhs_c = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
             cdims = [int(x) for x in lhs_c.group(1).split(",")] if (
                 lhs_c and lhs_c.group(1)) else []
-            cur.dots.append((shapes, operands, cdims))
+            cur.dots.append((shapes, operands, cdims, inline))
         elif opcode in _COLLECTIVES or any(
                 rest.startswith(c) or f" {c}(" in rest
                 for c in _COLLECTIVES):
@@ -119,10 +124,15 @@ def parse_hlo(text: str) -> dict[str, Computation]:
             if kind:
                 g = _group_size(rest)
                 args_m = re.search(re.escape(kind) + r"\(([^)]*)\)", rest)
-                operands = [a.strip().lstrip("%") for a in
-                            args_m.group(1).split(",")] if args_m else []
-                op_bytes = sum(_nbytes(cur.shapes.get(o, []))
-                               for o in operands)
+                args = args_m.group(1) if args_m else ""
+                inline = _parse_shapes(args)
+                if inline:
+                    op_bytes = _nbytes(inline)
+                else:
+                    operands = re.findall(r"%([\w.\-]+)", args) or [
+                        a.strip() for a in args.split(",") if a.strip()]
+                    op_bytes = sum(_nbytes(cur.shapes.get(o, []))
+                                   for o in operands)
                 cur.collectives.append((kind, _nbytes(shapes), op_bytes, g))
         if "while(" in rest:
             b = re.search(r"body=%?([\w.\-]+)", rest)
@@ -153,13 +163,17 @@ def _group_size(rest: str) -> int:
 def _dot_flops_bytes(comp: Computation) -> tuple[dict, int]:
     flops = defaultdict(float)
     traffic = 0
-    for shapes, operands, cdims in comp.dots:
+    for shapes, operands, cdims, inline in comp.dots:
         if not shapes:
             continue
         dtype, rshape = shapes[0]
         out_elems = math.prod(rshape) if rshape else 1
         k = 1
-        lhs = comp.shapes.get(operands[0], []) if operands else []
+        # contraction extent from the lhs shape — prefer the inline operand
+        # type (always local/post-SPMD); fall back to name lookup for HLO
+        # styles that print bare `%name` operands
+        lhs = inline[:1] or (comp.shapes.get(operands[0], [])
+                             if operands else [])
         if lhs and cdims:
             _, lshape = lhs[0]
             for cd in cdims:
@@ -168,8 +182,11 @@ def _dot_flops_bytes(comp: Computation) -> tuple[dict, int]:
         flops[dtype] += 2.0 * out_elems * k
         # HBM traffic floor: both operands + result stream at least once
         traffic += _nbytes(shapes)
-        for o in operands[:2]:
-            traffic += _nbytes(comp.shapes.get(o, []))
+        if inline:
+            traffic += _nbytes(inline[:2])
+        else:
+            for o in operands[:2]:
+                traffic += _nbytes(comp.shapes.get(o, []))
     return flops, traffic
 
 

@@ -88,7 +88,10 @@ class PIRServeLoop:
     """Deadline-batched serving; optionally wraps a LiveIndex for mutations.
 
     `system` may be a PirRagSystem (static corpus) or, with `live=...`, the
-    LiveIndex whose `.system` is queried at its current epoch.
+    LiveIndex whose `.system` is queried at its current epoch.  A system
+    built with ``mesh=`` serves every batch through the sharded
+    zero-collective answer path; the loop itself is layout-agnostic (its
+    batching, epoch admission and key-stream logic never look at the mesh).
     """
 
     def __init__(self, system, *, max_batch: int = 64,
@@ -193,23 +196,35 @@ def main():  # pragma: no cover - exercised by examples/tests
                     help="clusters fetched per query; >1 routes through "
                          "the batch-PIR subsystem (one bucketed pass)")
     ap.add_argument("--top-k", type=int, default=5)
+    ap.add_argument("--shard", type=int, default=0,
+                    help="row-shard the server DB over this many local "
+                         "devices (0 = single-device; zero-collective "
+                         "answer path, bit-identical results)")
     args = ap.parse_args()
 
     from repro.core import pipeline
     from repro.data import corpus as corpus_lib
     from repro.update import LiveIndex, journal as journal_lib
 
+    mesh = None
+    if args.shard > 1:
+        n_dev = len(jax.devices())
+        assert args.shard <= n_dev, (args.shard, n_dev)
+        mesh = jax.make_mesh((args.shard,), ("chunks",),
+                             devices=jax.devices()[:args.shard])
+
     corp = corpus_lib.make_corpus(0, args.docs, emb_dim=64, n_topics=24)
     rng = np.random.default_rng(0)
     if args.mutate_every > 0:
         live = LiveIndex.build(corp.texts, corp.embeddings,
-                               n_clusters=24, impl="xla")
+                               n_clusters=24, impl="xla", mesh=mesh)
         loop = PIRServeLoop(live, max_batch=args.max_batch,
                             deadline_ms=args.deadline_ms)
     else:
         live = None
         system = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
-                                             n_clusters=24, impl="xla")
+                                             n_clusters=24, impl="xla",
+                                             mesh=mesh)
         loop = PIRServeLoop(system, max_batch=args.max_batch,
                             deadline_ms=args.deadline_ms)
 

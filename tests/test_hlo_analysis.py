@@ -33,7 +33,10 @@ stats = ha.analyze(cc.as_text())
 want = 16 * 2 * 8 * 64 * 64            # 16 iterations of (8,64)@(64,64)
 got = stats.total_flops
 assert abs(got - want) / want < 0.01, (got, want)
-xla = cc.cost_analysis().get("flops", 0)
+ca = cc.cost_analysis()
+if isinstance(ca, (list, tuple)):      # jax < 0.5 wraps it in a list
+    ca = ca[0] if ca else {}
+xla = ca.get("flops", 0)
 assert xla < want / 2                   # demonstrates the undercount
 print("OK", got, xla)
 """)

@@ -1,30 +1,11 @@
 """Multi-device correctness on 8 fake CPU devices (subprocess-isolated).
 
-XLA pins the device count at first jax init, so every case here runs in a
-child interpreter with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+The subprocess pattern lives in tests/_mesh_harness.py (XLA pins the device
+count at first jax init, so every case runs in a child interpreter with
+XLA_FLAGS=--xla_force_host_platform_device_count=8); the sharded-PIR
+serving subsystem's equivalence suite (tests/test_sharded_pir.py) shares it.
 """
-import subprocess
-import sys
-
-import pytest
-
-ENV_PRELUDE = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-assert jax.device_count() == 8, jax.device_count()
-"""
-
-
-def run_sub(body: str):
-    proc = subprocess.run(
-        [sys.executable, "-c", ENV_PRELUDE + body],
-        capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root", "JAX_PLATFORMS": "cpu"})
-    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
-    return proc.stdout
+from _mesh_harness import run_sub
 
 
 def test_sharded_embedding_lookup_matches_take():
