@@ -88,8 +88,19 @@ def main() -> None:
     checks_s = sres["checks"]
     results["sharded"] = sres
 
+    # ---- pipelined serving engine: overlap win under mutation load ----------
+    from benchmarks import serve_bench
+    vres = serve_bench.run(fast=args.fast)
+    for r in vres["rows"]:
+        print(f"serve_{r['engine']}_mut{r['mutate_every']},"
+              f"{1e6 / r['throughput_qps']:.0f},"
+              f"qps={r['throughput_qps']:.1f};p50={r['p50_ms']:.0f}ms;"
+              f"p99={r['p99_ms']:.0f}ms;retries={r['retries']}")
+    checks_v = vres["checks"]
+    results["serve"] = vres
+
     print("\n# paper-claim validation")
-    for c in checks2 + checks3 + checks_b + checks_s:
+    for c in checks2 + checks3 + checks_b + checks_s + checks_v:
         print("#", c)
 
     with open(os.path.join(args.out, "bench_results.json"), "w") as f:
@@ -103,8 +114,9 @@ def main() -> None:
                        fig2=results["scalability"],
                        fig3=results["quality"],
                        batchpir=bres,
-                       sharded=sres), f, indent=1, default=float)
-    all_checks = checks2 + checks3 + checks_b + checks_s
+                       sharded=sres,
+                       serve=vres), f, indent=1, default=float)
+    all_checks = checks2 + checks3 + checks_b + checks_s + checks_v
     n_fail = sum(1 for c in all_checks if c.startswith("FAIL"))
     print(f"\n# {len(all_checks) - n_fail} claims PASS, {n_fail} FAIL")
 

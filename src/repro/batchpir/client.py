@@ -90,17 +90,27 @@ class BatchPIRClient:
 
     # -- decode --------------------------------------------------------------
 
-    def recover(self, answers: list[jax.Array], state: BatchQueryState
+    def recover(self, answers: list[jax.Array], state: BatchQueryState, *,
+                hints: list[jax.Array] | None = None,
+                cfgs: list[pir.PIRConfig] | None = None
                 ) -> dict[int, np.ndarray]:
-        """Decode REAL buckets only → {cluster: column bytes (m_b,) u8}."""
+        """Decode REAL buckets only → {cluster: column bytes (m_b,) u8}.
+
+        ``hints``/``cfgs`` override the live per-bucket state with a
+        plan-time snapshot: the pipelined engine decodes in-flight batches
+        AFTER an epoch commit may have patched `self.hints` in place, so it
+        passes the lists it captured when the query was formed.
+        """
+        hints = self.hints if hints is None else hints
+        cfgs = self.cfgs if cfgs is None else cfgs
         out: dict[int, np.ndarray] = {}
         for b, cluster in state.placement.items():
-            p = self.cfgs[b].params
+            p = cfgs[b].params
             s = state.secrets[b]
             if p.q_switch is not None:
-                vals = lwe.decode_switched(answers[b], self.hints[b], s, p)
+                vals = lwe.decode_switched(answers[b], hints[b], s, p)
             else:
-                vals = lwe.decode(lwe.hint_strip(answers[b], self.hints[b],
+                vals = lwe.decode(lwe.hint_strip(answers[b], hints[b],
                                                  s), p)
             out[cluster] = np.asarray(vals.astype(jnp.uint8))
         return out

@@ -63,6 +63,27 @@ class BucketUpdate:
     cols: np.ndarray            # local column positions patched (delta only)
 
 
+@dataclasses.dataclass
+class StagedBucketPatch:
+    """Shadow half of a bucketed mutation commit: computed, not yet live.
+
+    `stage_update_columns` builds every patched sub-DB, hint and config as
+    fresh buffers (the delta GEMMs are already dispatched — JAX async —
+    but nothing the serving path reads has moved); `publish()` is the
+    pointer swap.  In-flight answers keep decoding against the plan-time
+    snapshots they captured, so the stale window is the swap instant.
+    """
+    updates: list[BucketUpdate]
+    _apply: "callable"
+    published: bool = False
+
+    def publish(self) -> list[BucketUpdate]:
+        assert not self.published, "StagedBucketPatch published twice"
+        self._apply()
+        self.published = True
+        return self.updates
+
+
 class BatchPIRServer:
     """Holds the bucketed replica DBs and answers batched queries."""
 
@@ -190,7 +211,8 @@ class BatchPIRServer:
     # -- live-index deltas ---------------------------------------------------
 
     def update_columns(self, cols: np.ndarray, new_cols: np.ndarray,
-                       new_used: dict[int, int]) -> list[BucketUpdate]:
+                       new_used: dict[int, int], *, donate: bool = False
+                       ) -> list[BucketUpdate]:
         """Patch every bucket owning a touched cluster; exact mod 2^32.
 
         cols: (J,) global cluster ids (already re-packed), new_cols:
@@ -200,6 +222,21 @@ class BatchPIRServer:
         to a from-scratch hint, as in `PIRServer.update_columns`); a bucket
         that overflows is rebuilt and re-hinted alone.
         """
+        return self.stage_update_columns(cols, new_cols, new_used,
+                                         donate=donate).publish()
+
+    def stage_update_columns(self, cols: np.ndarray, new_cols: np.ndarray,
+                             new_used: dict[int, int], *,
+                             donate: bool = False) -> StagedBucketPatch:
+        """Compute every bucket's patch WITHOUT publishing (shadow commit).
+
+        All ΔH_b GEMMs and sub-DB scatters are dispatched against the
+        current epoch's buffers; the returned patch's `publish()` swaps the
+        pointers.  ``donate=True`` donates each touched sub-DB buffer into
+        its scatter (in-place column write instead of a full copy) — legal
+        only when, as in the serving engine, no new dispatch can touch the
+        old buffers between stage and publish.
+        """
         cols = np.asarray(cols)
         part = self.partition
         by_bucket: dict[int, list[int]] = {}
@@ -207,33 +244,62 @@ class BatchPIRServer:
             for b in part.buckets_of(int(j)):
                 by_bucket.setdefault(b, []).append(idx)
         updates: list[BucketUpdate] = []
+        new_sub_dbs: dict[int, object] = {}
+        host_writes: list[tuple[int, np.ndarray, np.ndarray]] = []
+        new_hints: dict[int, jax.Array] = {}
+        new_cfgs: dict[int, pir.PIRConfig] = {}
+        new_stack = self._stack
+        stack_invalidated = False
         for b, idxs in sorted(by_bucket.items()):
             rows = self.cfgs[b].m
             need = max(new_used[int(cols[i])] for i in idxs)
             if need > rows:
-                self._rebuild_bucket(b, cols, new_cols, new_used)
+                sub, cfg, hint = self._stage_rebuild_bucket(
+                    b, cols, new_cols, new_used)
+                new_sub_dbs[b] = sub
+                new_cfgs[b] = cfg
+                if hint is not None:
+                    new_hints[b] = hint
+                stack_invalidated = True
+                new_stack = None      # mirror the eager path: no more patches
                 updates.append(BucketUpdate(bucket=b, rebuilt=True,
                                             cols=np.zeros(0, np.int64)))
                 continue
             pos = np.array([part.position(b, int(cols[i])) for i in idxs],
                            np.int64)
             new_sub = jnp.asarray(new_cols[:rows, idxs])
-            delta_h = self._delta(b, pos, new_sub)
+            delta_h = self._delta(b, pos, new_sub)   # reads OLD sub-DB rows
             if self.mesh is not None:      # host-side view: in-place write
-                self.sub_dbs[b][:, pos] = new_cols[:rows, idxs]
+                host_writes.append((b, pos, new_cols[:rows, idxs]))
             else:
-                self.sub_dbs[b] = self.sub_dbs[b].at[:, pos].set(new_sub)
-            if self._stack is not None:
+                new_sub_dbs[b] = ops.scatter_columns(
+                    self.sub_dbs[b], jnp.asarray(pos), new_sub,
+                    donate=donate)
+            if new_stack is not None:
                 # patch the cached sharded layout with ONE fused scatter
                 # (scatter output keeps the operand's sharding); the value
                 # is transposed because jax moves the advanced-index dims
                 # (bucket scalar + column array) to the front
-                self._stack = self._stack.at[
+                new_stack = new_stack.at[
                     b, :rows, jnp.asarray(pos)].set(new_sub.T)
             if self.hints:
-                self.hints[b] = self.hints[b] + delta_h
+                # ΔH_b is transient, so the add donates ITS buffer — the
+                # live hint stays intact for in-flight decode snapshots
+                new_hints[b] = ops.add_delta(self.hints[b], delta_h)
             updates.append(BucketUpdate(bucket=b, rebuilt=False, cols=pos))
-        return updates
+
+        def apply():
+            for b, sub in new_sub_dbs.items():
+                self.sub_dbs[b] = sub
+            for b, pos, vals in host_writes:
+                self.sub_dbs[b][:, pos] = vals
+            for b, cfg in new_cfgs.items():
+                self.cfgs[b] = cfg
+            for b, hint in new_hints.items():
+                self.hints[b] = hint
+            self._stack = None if stack_invalidated else new_stack
+
+        return StagedBucketPatch(updates=updates, _apply=apply)
 
     def _delta(self, bucket: int, pos: np.ndarray, new_sub: jax.Array
                ) -> jax.Array:
@@ -256,9 +322,16 @@ class BatchPIRServer:
         a_p = self.a_matrix(bucket)[pos_g]
         return ops.delta_gemm(new_g, old_g, a_p, impl=self.impl)
 
-    def _rebuild_bucket(self, bucket: int, cols: np.ndarray,
-                        new_cols: np.ndarray, new_used: dict[int, int]):
-        """Overflow path: re-truncate, re-pack and re-hint ONE bucket."""
+    def _stage_rebuild_bucket(self, bucket: int, cols: np.ndarray,
+                              new_cols: np.ndarray, new_used: dict[int, int]
+                              ) -> tuple[object, pir.PIRConfig,
+                                         jax.Array | None]:
+        """Overflow path: re-truncate, re-pack and re-hint ONE bucket.
+
+        Returns the staged (sub_db, cfg, hint-or-None) triple; the caller
+        publishes.  The fresh hint GEMM is dispatched, not waited on — the
+        serving loop forces it the first time a query decodes against it.
+        """
         part = self.partition
         mem = part.members[bucket]
         old = np.asarray(self.sub_dbs[bucket])
@@ -277,11 +350,9 @@ class BatchPIRServer:
             src = col_src[int(j)]
             take = min(rows, len(src))
             sub[:take, p] = src[:take]
-        self.sub_dbs[bucket] = sub if self.mesh is not None \
-            else jnp.asarray(sub)
-        self._stack = None
+        sub_out = sub if self.mesh is not None else jnp.asarray(sub)
         # A_b depends only on (n, k), so it survives the row-budget change.
-        self.cfgs[bucket] = dataclasses.replace(self.cfgs[bucket], m=rows)
-        if self.hints:
-            self.hints[bucket] = jax.block_until_ready(ops.hint_gemm(
-                self.sub_dbs[bucket], self.a_matrix(bucket), impl=self.impl))
+        cfg = dataclasses.replace(self.cfgs[bucket], m=rows)
+        hint = (ops.hint_gemm(sub_out, self.a_matrix(bucket), impl=self.impl)
+                if self.hints else None)
+        return sub_out, cfg, hint

@@ -13,13 +13,41 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chunking, clustering, pir, rerank
+
+
+@dataclasses.dataclass
+class InflightBatch:
+    """A dispatched serving batch: answer GEMM(s) in flight, decode deferred.
+
+    Produced by `PirRagSystem.query_batch_async` — the plan stage has
+    encoded every client query and the dispatch stage has enqueued the
+    server GEMM(s); JAX async dispatch means the device crunches while the
+    Python caller goes on to cut/encode the next batch.  `complete()` does
+    the decode + re-rank (the first operation that forces the device
+    values) and returns exactly what `query_batch` would have.
+
+    Everything decode needs — client hint, per-bucket hints/configs, LWE
+    states — is captured at PLAN time, so the batch stays decodable (and
+    bit-identical to the synchronous path) even after a later epoch commit
+    swaps the live system's buffers: epoch snapshots, not live pointers.
+    """
+    _complete: Callable[[], list]
+    pending: tuple = ()            # device arrays the GEMM stage produced
+    done: bool = False
+
+    def complete(self) -> list:
+        """Decode + re-rank; same return value as `query_batch`."""
+        assert not self.done, "InflightBatch.complete() called twice"
+        out = self._complete()
+        self.done = True
+        return out
 
 
 def _fresh_client_key() -> jax.Array:
@@ -256,6 +284,25 @@ class PirRagSystem:
         (or from `seed` if given; otherwise the system's split stream), so
         secrets never collide across batches or ad-hoc callers.
         """
+        return self.query_batch_async(query_embs, top_k=top_k,
+                                      multi_probe=multi_probe, seed=seed,
+                                      key=key).complete()
+
+    def query_batch_async(self, query_embs: np.ndarray, *,
+                          top_k: int | Sequence[int] = 10,
+                          multi_probe: int = 1,
+                          seed: int | None = None,
+                          key: jax.Array | None = None) -> InflightBatch:
+        """Plan + dispatch a serving batch; decode deferred to `complete()`.
+
+        The pipelined serving engine's staged entry point: the returned
+        `InflightBatch` has the answer GEMM already enqueued on the device
+        and carries plan-time snapshots of everything decode needs, so the
+        caller can encode/cut further batches (or publish an epoch commit)
+        while this one computes.  `query_batch` is literally
+        ``query_batch_async(...).complete()`` — the two paths cannot
+        diverge.
+        """
         if key is None:
             key = (jax.random.PRNGKey(seed) if seed is not None
                    else self.next_query_key())
@@ -265,14 +312,16 @@ class PirRagSystem:
         assert len(top_ks) == n_req, (len(top_ks), n_req)
 
         if multi_probe > 1 and self.batch is not None:
-            return self._query_batch_via_batchpir(query_embs, top_ks,
-                                                  multi_probe, key)
+            return self._query_batch_via_batchpir_async(query_embs, top_ks,
+                                                        multi_probe, key)
 
         # Legacy path: P one-hot columns per request (P=1 is the classic
         # one-column-per-client GEMM) — never silently fewer probes than
         # asked for just because batch-PIR isn't enabled.
         p = max(1, multi_probe)
+        # plan: the client object snapshots cfg + hint at THIS epoch
         client = pir.PIRClient(self.cfg, self.hint)
+        emb_dim = self.db.emb_dim
         d2 = np.asarray(clustering.pairwise_sqdist(
             jnp.asarray(query_embs, jnp.float32),
             jnp.asarray(self.centroids)))
@@ -284,30 +333,37 @@ class PirRagSystem:
                                       int(c))
                 qs.append(qu)
                 states.append(st)
+        # dispatch: enqueue the GEMM; no block_until_ready anywhere
         ans = self.server.answer(jnp.stack(qs, axis=1))      # (m, B·P)
-        out = []
-        for b in range(len(query_embs)):
-            docs = []
-            for j in range(p):
-                col = np.asarray(client.recover(ans[:, b * p + j],
-                                                states[b * p + j]))
-                docs.extend(chunking.deserialize_docs(col, self.db.emb_dim))
-            out.append(rerank.rerank(np.asarray(query_embs[b], np.float32),
-                                     docs, top_ks[b]))
-        return out
 
-    def _query_batch_via_batchpir(self, query_embs: np.ndarray,
-                                  top_ks: list[int], multi_probe: int,
-                                  key: jax.Array
-                                  ) -> list[list[tuple[int, float, bytes]]]:
+        def complete():
+            out = []
+            for b in range(len(query_embs)):
+                docs = []
+                for j in range(p):
+                    col = np.asarray(client.recover(ans[:, b * p + j],
+                                                    states[b * p + j]))
+                    docs.extend(chunking.deserialize_docs(col, emb_dim))
+                out.append(rerank.rerank(
+                    np.asarray(query_embs[b], np.float32), docs, top_ks[b]))
+            return out
+
+        return InflightBatch(_complete=complete, pending=(ans,))
+
+    def _query_batch_via_batchpir_async(self, query_embs: np.ndarray,
+                                        top_ks: list[int], multi_probe: int,
+                                        key: jax.Array) -> InflightBatch:
         """Multi-probe serving batch: C clients × B buckets, one GEMM call.
 
         Per-client placement failures (negligible probability) fall back to
         that client's legacy multi-probe query; everyone else still shares
-        the bucketed pass.
+        the bucketed pass.  Decode state — the per-bucket hints and configs,
+        which a later commit patches IN the shared lists — is snapshotted at
+        plan time so `complete()` decodes against this batch's epoch.
         """
         from repro.batchpir import PlacementError
         bp = self.batch
+        emb_dim = self.db.emb_dim
         d2 = np.asarray(clustering.pairwise_sqdist(
             jnp.asarray(query_embs, jnp.float32),
             jnp.asarray(self.centroids)))
@@ -325,20 +381,30 @@ class PirRagSystem:
                                          mode="legacy")[0]
                 per_client.append(None)
 
-        out: list[list | None] = [None] * len(query_embs)
         live = [i for i, pc in enumerate(per_client) if pc is not None]
+        answers: list = []
         if live:
             stacked = jnp.stack([per_client[i][0] for i in live], axis=2)
             answers = bp.server.answer_batch(stacked)   # per bucket (m_b, C)
+        # plan-time decode snapshot (shallow list copies pin the epoch's
+        # hint/config ARRAYS; commits replace list elements, never mutate)
+        hints = list(bp.client.hints)
+        cfgs = list(bp.client.cfgs)
+
+        def complete():
+            out: list[list | None] = [None] * len(query_embs)
             for c_idx, i in enumerate(live):
                 ans_i = [a[:, c_idx] for a in answers]
-                cols = bp.client.recover(ans_i, per_client[i][1])
+                cols = bp.client.recover(ans_i, per_client[i][1],
+                                         hints=hints, cfgs=cfgs)
                 docs = []
                 for cl in orders[i]:
                     docs.extend(chunking.deserialize_docs(cols[int(cl)],
-                                                          self.db.emb_dim))
+                                                          emb_dim))
                 out[i] = rerank.rerank(np.asarray(query_embs[i], np.float32),
                                        docs, top_ks[i])
-        for i, top in fallback.items():
-            out[i] = top
-        return out
+            for i, top in fallback.items():
+                out[i] = top
+            return out
+
+        return InflightBatch(_complete=complete, pending=tuple(answers))

@@ -134,6 +134,32 @@ def row_shard_delta_gemm(mesh: Mesh, axes: tuple[str, ...], *,
 
 
 @functools.lru_cache(maxsize=None)
+def row_shard_scatter(mesh: Mesh, axes: tuple[str, ...], *,
+                      donate: bool = False):
+    """Returns scatter(db, cols, new_cols): row-sharded column replacement.
+
+    db: (m, n) uint8 sharded P(axes, None); cols: (J,) int replicated;
+    new_cols: (m, J) uint8 sharded P(axes, None).  Each shard swaps the
+    touched columns of its own row slice — the column axis is never split,
+    so, like every other op on the PIR serving path, there are zero
+    collectives and the result is bit-identical to the single-device
+    scatter.
+
+    ``donate=True`` donates the DB operand so XLA writes the J touched
+    columns into the live buffer instead of copying all m·n bytes per epoch
+    commit — the in-place half of the shadow-epoch commit path.  Callers
+    must treat the input array as consumed.
+    """
+    def local(db_shard, cols, new_shard):
+        return db_shard.at[:, cols].set(new_shard)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(axes, None), P(), P(axes, None)),
+                   out_specs=P(axes, None))
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
 def bucket_shard_gemm(mesh: Mesh, axes: tuple[str, ...]):
     """Returns ans(stack, qs): bucket-sharded batch-PIR GEMM (mod 2^32).
 

@@ -1,186 +1,29 @@
-"""PIR serving driver: deadline-batched private retrieval + live mutations.
+"""Thin CLI over the serving engines in `repro.serve`.
 
-Production posture: requests queue; a batch is cut when either `max_batch`
-accumulate or the oldest request reaches `deadline_ms` (p99-latency control —
-the serving-side straggler mitigation).  All queries in a batch become ONE
-modular GEMM (ans = D·[q_1 … q_B]), which is the regime where the TPU kernel
-is MXU-bound (EXPERIMENTS §Perf-A).
+The engines themselves live in `repro.serve.engine` (synchronous reference
+loop + pipelined plan/dispatch/complete engine with shadow-epoch commits);
+this module keeps the historical import surface alive and parses flags:
 
-Live-index mode (`live=LiveIndex(...)`): corpus mutations stream in via
-`submit_mutation` and are committed *between* query batches, so a GEMM never
-races a column swap.  Each request records the epoch of the hint it was
-encrypted against; a commit advances the epoch, so requests already queued
-become stale — the loop rejects them, the (simulated) client syncs its
-HintCache and re-encrypts, and the retry is served in the next batch.
-`stale_retries` counts these, the freshness/latency trade-off made visible.
+    PYTHONPATH=src python -m repro.launch.serve --docs 2000 --requests 64 \
+        --engine pipelined --mutate-every 8
 
-Per-query LWE secrets come from ONE `jax.random.split` stream threaded
-through the loop (`fold_in` per query inside `query_batch`) — wall-clock
-seeding could collide secrets across batches, which is a security bug, not
-just a testing nuisance.
-
-    PYTHONPATH=src python -m repro.launch.serve --docs 2000 --requests 64
+`--engine sync` serves through the blocking reference loop; `pipelined`
+(default) overlaps batch N's answer GEMM with decoding batch N−depth and
+encoding batch N+1, and commits mutations via shadow buffers + pointer
+swap.  Results are bit-identical either way — only the timeline changes.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from collections import deque
-from typing import Callable
 
 import jax
 import numpy as np
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    query_emb: np.ndarray
-    t_arrival: float
-    epoch: int = 0                 # hint epoch the query was formed against
-    retries: int = 0
-    top_k: int = 5                 # per-request result size
-    multi_probe: int = 1           # clusters to fetch (>1 → batch-PIR able)
-
-
-@dataclasses.dataclass
-class Response:
-    rid: int
-    top: list
-    t_done: float
-    batch_size: int
-    epoch: int = 0
-    retries: int = 0
-
-
-class DeadlineBatcher:
-    """Cut a batch at max_batch or when the head request ages past deadline."""
-
-    def __init__(self, *, max_batch: int = 64, deadline_ms: float = 20.0):
-        self.max_batch = max_batch
-        self.deadline_ms = deadline_ms
-        self.queue: deque[Request] = deque()
-
-    def submit(self, req: Request):
-        self.queue.append(req)
-
-    def requeue(self, req: Request):
-        """Put a rejected request back at the head (it keeps its arrival)."""
-        self.queue.appendleft(req)
-
-    def ready(self, now: float) -> bool:
-        if not self.queue:
-            return False
-        if len(self.queue) >= self.max_batch:
-            return True
-        age_ms = (now - self.queue[0].t_arrival) * 1e3
-        return age_ms >= self.deadline_ms
-
-    def cut(self) -> list[Request]:
-        batch = []
-        while self.queue and len(batch) < self.max_batch:
-            batch.append(self.queue.popleft())
-        return batch
-
-
-class PIRServeLoop:
-    """Deadline-batched serving; optionally wraps a LiveIndex for mutations.
-
-    `system` may be a PirRagSystem (static corpus) or, with `live=...`, the
-    LiveIndex whose `.system` is queried at its current epoch.  A system
-    built with ``mesh=`` serves every batch through the sharded
-    zero-collective answer path; the loop itself is layout-agnostic (its
-    batching, epoch admission and key-stream logic never look at the mesh).
-    """
-
-    def __init__(self, system, *, max_batch: int = 64,
-                 deadline_ms: float = 20.0,
-                 clock: Callable[[], float] = time.perf_counter,
-                 live=None, seed: int = 0):
-        self.live = live if live is not None else (
-            system if hasattr(system, "epochs") else None)
-        self.system = system if self.live is None else self.live.system
-        self.batcher = DeadlineBatcher(max_batch=max_batch,
-                                       deadline_ms=deadline_ms)
-        self.clock = clock
-        self.responses: list[Response] = []
-        self.mutations: deque = deque()
-        self.stale_retries = 0
-        self._key = jax.random.PRNGKey(seed)   # per-batch query-key stream
-
-    @property
-    def epoch(self) -> int:
-        return self.live.epoch if self.live is not None else 0
-
-    def submit(self, rid: int, query_emb: np.ndarray, *, top_k: int = 5,
-               multi_probe: int = 1):
-        """A client submits a query formed against the CURRENT epoch's hint."""
-        self.batcher.submit(Request(rid, query_emb, self.clock(),
-                                    epoch=self.epoch, top_k=top_k,
-                                    multi_probe=multi_probe))
-
-    def submit_mutation(self, mut):
-        assert self.live is not None, "mutations need a LiveIndex"
-        self.mutations.append(mut)
-
-    def _commit_mutations(self):
-        """Fold queued mutations into one epoch between query batches."""
-        if self.live is None or not self.mutations:
-            return None
-        while self.mutations:
-            self.live.journal.append(self.mutations.popleft())
-        return self.live.commit()
-
-    def tick(self, force: bool = False) -> int:
-        """Serve one batch if ready; returns number of requests served.
-
-        force=True flushes a partial batch regardless of the deadline
-        (used by drain) WITHOUT touching the configured deadline_ms.
-        """
-        self._commit_mutations()
-        now = self.clock()
-        if not self.batcher.ready(now) and not (force and self.batcher.queue):
-            return 0
-        batch = self.batcher.cut()
-
-        # Epoch admission control: a query encrypted against a superseded
-        # hint would decode garbage, so reject it; the client syncs its
-        # cached hint (HintCache.sync) and re-encrypts against the head.
-        cur = self.epoch
-        fresh = [r for r in batch if r.epoch == cur]
-        for r in reversed([r for r in batch if r.epoch != cur]):
-            self.stale_retries += 1
-            r.epoch = cur
-            r.retries += 1
-            self.batcher.requeue(r)
-        if not fresh:
-            return 0
-
-        system = self.live.system if self.live is not None else self.system
-        # One GEMM per distinct multi_probe value: single-probe requests
-        # share the classic column-stacked GEMM; multi-probe requests share
-        # the bucketed batch-PIR GEMM (all clients in one streamed pass).
-        groups: dict[int, list[Request]] = {}
-        for r in fresh:
-            groups.setdefault(r.multi_probe, []).append(r)
-        for mp in sorted(groups):
-            reqs = groups[mp]
-            embs = np.stack([r.query_emb for r in reqs])
-            self._key, kq = jax.random.split(self._key)
-            results = system.query_batch(
-                embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
-            t = self.clock()
-            for req, top in zip(reqs, results):
-                # batch_size = this group's GEMM width, not the tick total
-                self.responses.append(Response(req.rid, top, t, len(reqs),
-                                               epoch=cur, retries=req.retries))
-        return len(fresh)
-
-    def drain(self):
-        """Serve everything still queued, force-flushing partial batches."""
-        while self.batcher.queue or self.mutations:
-            self.tick(force=True)
+# Re-exported for backward compatibility: the serving classes began life in
+# this module and tests/examples import them from here.
+from repro.serve.engine import (DeadlineBatcher, PIRServeLoop,  # noqa: F401
+                                PipelinedServeLoop, Request, Response)
 
 
 def main():  # pragma: no cover - exercised by examples/tests
@@ -189,6 +32,12 @@ def main():  # pragma: no cover - exercised by examples/tests
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--deadline-ms", type=float, default=50.0)
+    ap.add_argument("--engine", choices=("sync", "pipelined"),
+                    default="pipelined",
+                    help="blocking reference loop vs plan/dispatch/complete "
+                         "pipeline (bit-identical responses)")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="pipelined engine: max batches in flight")
     ap.add_argument("--mutate-every", type=int, default=0,
                     help="if >0, replace a random doc every N requests "
                          "(exercises the live-index delta path)")
@@ -215,18 +64,21 @@ def main():  # pragma: no cover - exercised by examples/tests
 
     corp = corpus_lib.make_corpus(0, args.docs, emb_dim=64, n_topics=24)
     rng = np.random.default_rng(0)
+    loop_cls = (PipelinedServeLoop if args.engine == "pipelined"
+                else PIRServeLoop)
+    loop_kw = dict(max_batch=args.max_batch, deadline_ms=args.deadline_ms)
+    if args.engine == "pipelined":
+        loop_kw["depth"] = args.depth
     if args.mutate_every > 0:
         live = LiveIndex.build(corp.texts, corp.embeddings,
                                n_clusters=24, impl="xla", mesh=mesh)
-        loop = PIRServeLoop(live, max_batch=args.max_batch,
-                            deadline_ms=args.deadline_ms)
+        loop = loop_cls(live, **loop_kw)
     else:
         live = None
         system = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
                                              n_clusters=24, impl="xla",
                                              mesh=mesh)
-        loop = PIRServeLoop(system, max_batch=args.max_batch,
-                            deadline_ms=args.deadline_ms)
+        loop = loop_cls(system, **loop_kw)
 
     if args.multi_probe > 1:
         loop.system.enable_batch(kappa=max(4, args.multi_probe))
@@ -247,8 +99,8 @@ def main():  # pragma: no cover - exercised by examples/tests
         return
     lat = [r.t_done - t0 for r in loop.responses]
     sizes = [r.batch_size for r in loop.responses]
-    print(f"served {len(loop.responses)} requests in {dt:.2f}s; "
-          f"mean batch {np.mean(sizes):.1f}; "
+    print(f"[{args.engine}] served {len(loop.responses)} requests "
+          f"in {dt:.2f}s; mean batch {np.mean(sizes):.1f}; "
           f"p50/p99 completion {np.percentile(lat, 50):.2f}/"
           f"{np.percentile(lat, 99):.2f}s"
           + (f"; epoch {loop.epoch}; stale retries {loop.stale_retries}"

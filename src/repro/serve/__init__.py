@@ -1,0 +1,12 @@
+"""Serving engines for PIR-RAG: deadline batching, pipelining, shadow epochs.
+
+`engine` holds the two serve loops (synchronous reference + pipelined
+production engine) and the shared policy core; `epochs` holds the
+shadow-commit machinery.  `launch.serve` is the thin CLI over this package.
+"""
+from repro.serve.engine import (DeadlineBatcher, PIRServeLoop,
+                                PipelinedServeLoop, Request, Response)
+from repro.serve.epochs import ShadowCommitter
+
+__all__ = ["DeadlineBatcher", "PIRServeLoop", "PipelinedServeLoop",
+           "Request", "Response", "ShadowCommitter"]

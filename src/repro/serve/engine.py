@@ -1,0 +1,303 @@
+"""PIR serving engines: deadline batching, epoch admission, pipelining.
+
+Two engines share one policy core (batching, epoch admission control, the
+per-batch LWE key stream):
+
+`PIRServeLoop` — the synchronous reference.  Each tick commits pending
+mutations, cuts a batch, runs the answer GEMM and decodes it before
+returning: correct, simple, and the bit-exactness oracle for everything
+else — but the device sits idle while the host encodes, deserializes and
+re-ranks.
+
+`PipelinedServeLoop` — the production engine.  Each tick is split into
+plan → dispatch → complete stages and exploits JAX async dispatch so the
+three overlap across batches:
+
+    tick T:   publish shadow commit (pointer swap — `serve.epochs`)
+              plan batch N      (cut, admit, encode)        host
+              dispatch batch N  (answer GEMM enqueued)      device
+              complete batch N-depth (decode, re-rank)      host+device
+
+While batch N's GEMM streams the database on the device, the host is
+decoding batch N−depth and will cut/encode batch N+1 — the serve loop no
+longer blocks host-side on every answer before cutting the next batch.
+Mutation commits stage their patches into shadow buffers and publish with
+a pointer swap (`update.live.stage/publish`), so a commit never stops the
+world and in-flight batches keep decoding against their epoch's snapshot.
+
+Responses are BIT-IDENTICAL to the synchronous loop — same payloads,
+epochs, retry counts, in the same order (property-tested under random
+interleavings of submits/mutations/drains, single-device and sharded):
+pipelining moves work in time, never across an epoch boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+from repro.serve.epochs import ShadowCommitter
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    query_emb: np.ndarray
+    t_arrival: float
+    epoch: int = 0                 # hint epoch the query was formed against
+    retries: int = 0
+    top_k: int = 5                 # per-request result size
+    multi_probe: int = 1           # clusters to fetch (>1 → batch-PIR able)
+
+
+@dataclasses.dataclass
+class Response:
+    rid: int
+    top: list
+    t_done: float
+    batch_size: int
+    epoch: int = 0
+    retries: int = 0
+
+
+class DeadlineBatcher:
+    """Cut a batch at max_batch or when the head request ages past deadline."""
+
+    def __init__(self, *, max_batch: int = 64, deadline_ms: float = 20.0):
+        self.max_batch = max_batch
+        self.deadline_ms = deadline_ms
+        self.queue: deque[Request] = deque()
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def requeue(self, req: Request):
+        """Put ONE rejected request back at the head (it keeps its arrival)."""
+        self.queue.appendleft(req)
+
+    def requeue_front(self, reqs: Iterable[Request]):
+        """Put rejected requests back at the head, preserving THEIR order.
+
+        The batcher owns retry ordering: callers hand over the stale
+        requests in cut order and this re-queues them FIFO ahead of
+        everything younger.  (Naively calling `requeue` in iteration order
+        would reverse same-epoch retries relative to each other.)
+        """
+        self.queue.extendleft(reversed(list(reqs)))
+
+    def ready(self, now: float) -> bool:
+        if not self.queue:
+            return False
+        if len(self.queue) >= self.max_batch:
+            return True
+        age_ms = (now - self.queue[0].t_arrival) * 1e3
+        return age_ms >= self.deadline_ms
+
+    def cut(self) -> list[Request]:
+        batch = []
+        while self.queue and len(batch) < self.max_batch:
+            batch.append(self.queue.popleft())
+        return batch
+
+
+class PIRServeLoop:
+    """Synchronous deadline-batched serving; optionally wraps a LiveIndex.
+
+    `system` may be a PirRagSystem (static corpus) or, with `live=...`, the
+    LiveIndex whose `.system` is queried at its current epoch.  A system
+    built with ``mesh=`` serves every batch through the sharded
+    zero-collective answer path; the loop itself is layout-agnostic (its
+    batching, epoch admission and key-stream logic never look at the mesh).
+    """
+
+    def __init__(self, system, *, max_batch: int = 64,
+                 deadline_ms: float = 20.0,
+                 clock: Callable[[], float] = time.perf_counter,
+                 live=None, seed: int = 0):
+        self.live = live if live is not None else (
+            system if hasattr(system, "epochs") else None)
+        self.system = system if self.live is None else self.live.system
+        self.batcher = DeadlineBatcher(max_batch=max_batch,
+                                       deadline_ms=deadline_ms)
+        self.clock = clock
+        self.responses: list[Response] = []
+        self.mutations: deque = deque()
+        self.stale_retries = 0
+        self._key = jax.random.PRNGKey(seed)   # per-batch query-key stream
+
+    @property
+    def epoch(self) -> int:
+        return self.live.epoch if self.live is not None else 0
+
+    def submit(self, rid: int, query_emb: np.ndarray, *, top_k: int = 5,
+               multi_probe: int = 1):
+        """A client submits a query formed against the CURRENT epoch's hint."""
+        self.batcher.submit(Request(rid, query_emb, self.clock(),
+                                    epoch=self.epoch, top_k=top_k,
+                                    multi_probe=multi_probe))
+
+    def submit_mutation(self, mut):
+        assert self.live is not None, "mutations need a LiveIndex"
+        self.mutations.append(mut)
+
+    def _commit_mutations(self):
+        """Fold queued mutations into one epoch between query batches."""
+        if self.live is None or not self.mutations:
+            return None
+        while self.mutations:
+            self.live.journal.append(self.mutations.popleft())
+        return self.live.commit()
+
+    # -- policy core shared by both engines ----------------------------------
+
+    def _admit(self, batch: list[Request], cur: int) -> list[Request]:
+        """Epoch admission control: reject-and-requeue stale requests.
+
+        A query encrypted against a superseded hint would decode garbage,
+        so it is rejected; the client syncs its cached hint
+        (HintCache.sync) and re-encrypts against the head.  Retried
+        requests go back to the queue head in their original FIFO order.
+        """
+        fresh = [r for r in batch if r.epoch == cur]
+        stale = [r for r in batch if r.epoch != cur]
+        for r in stale:
+            self.stale_retries += 1
+            r.epoch = cur
+            r.retries += 1
+        self.batcher.requeue_front(stale)
+        return fresh
+
+    def _probe_groups(self, fresh: list[Request]
+                      ) -> list[tuple[int, list[Request]]]:
+        """One GEMM per distinct multi_probe value: single-probe requests
+        share the classic column-stacked GEMM; multi-probe requests share
+        the bucketed batch-PIR GEMM (all clients in one streamed pass)."""
+        groups: dict[int, list[Request]] = {}
+        for r in fresh:
+            groups.setdefault(r.multi_probe, []).append(r)
+        return [(mp, groups[mp]) for mp in sorted(groups)]
+
+    def _serving_system(self):
+        return self.live.system if self.live is not None else self.system
+
+    # -- the synchronous tick -------------------------------------------------
+
+    def tick(self, force: bool = False) -> int:
+        """Serve one batch if ready; returns number of requests served.
+
+        force=True flushes a partial batch regardless of the deadline
+        (used by drain) WITHOUT touching the configured deadline_ms.
+        """
+        self._commit_mutations()
+        now = self.clock()
+        if not self.batcher.ready(now) and not (force and self.batcher.queue):
+            return 0
+        cur = self.epoch
+        fresh = self._admit(self.batcher.cut(), cur)
+        if not fresh:
+            return 0
+
+        system = self._serving_system()
+        for mp, reqs in self._probe_groups(fresh):
+            embs = np.stack([r.query_emb for r in reqs])
+            self._key, kq = jax.random.split(self._key)
+            results = system.query_batch(
+                embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
+            t = self.clock()
+            for req, top in zip(reqs, results):
+                # batch_size = this group's GEMM width, not the tick total
+                self.responses.append(Response(req.rid, top, t, len(reqs),
+                                               epoch=cur,
+                                               retries=req.retries))
+        return len(fresh)
+
+    def drain(self):
+        """Serve everything still queued, force-flushing partial batches."""
+        while self.batcher.queue or self.mutations:
+            self.tick(force=True)
+
+
+class PipelinedServeLoop(PIRServeLoop):
+    """Plan/dispatch/complete pipelined serving over the same policy core.
+
+    ``depth`` bounds the number of dispatched-but-undecoded batches: the
+    tick that pushes batch N completes batch N−depth, so at steady state
+    the device always has a GEMM in flight while the host decodes an older
+    batch and encodes a younger one.  depth=1 still overlaps one GEMM with
+    host work; larger depths additionally ride out commit spikes.
+
+    Mutation commits go through `ShadowCommitter`: patches are computed
+    into shadow buffers (donated in place where the aliasing contract
+    allows) and published as a pointer swap at the exact tick boundary the
+    synchronous loop commits on — which is why responses, epochs and retry
+    counts stay bit-identical.
+    """
+
+    def __init__(self, system, *, depth: int = 2, donate: bool = True,
+                 **kwargs):
+        super().__init__(system, **kwargs)
+        self.depth = max(1, int(depth))
+        self._inflight: deque = deque()
+        self._shadow = (ShadowCommitter(self.live, donate=donate)
+                        if self.live is not None else None)
+
+    @property
+    def inflight(self) -> int:
+        """Batches dispatched on device but not yet decoded."""
+        return len(self._inflight)
+
+    def _commit_mutations(self):
+        if self._shadow is None or not self.mutations:
+            return None
+        return self._shadow.commit(self.mutations)
+
+    def tick(self, force: bool = False) -> int:
+        """Plan + dispatch one batch if ready; complete anything past depth.
+
+        Returns the number of requests DISPATCHED (their responses land
+        when the pipeline retires them — per-request completion timestamps
+        are taken at the complete stage).
+        """
+        self._commit_mutations()
+        now = self.clock()
+        if not self.batcher.ready(now) and not (force and self.batcher.queue):
+            # idle tick: nothing to dispatch, so retire EVERYTHING in
+            # flight — during a traffic lull responses must not sit decoded
+            # -but-unreported behind the depth bound
+            self._retire(0)
+            return 0
+        cur = self.epoch
+        fresh = self._admit(self.batcher.cut(), cur)
+        if not fresh:
+            return 0
+
+        system = self._serving_system()
+        for mp, reqs in self._probe_groups(fresh):
+            embs = np.stack([r.query_emb for r in reqs])
+            self._key, kq = jax.random.split(self._key)
+            infl = system.query_batch_async(
+                embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
+            self._inflight.append((reqs, cur, infl))
+        self._retire(self.depth)
+        return len(fresh)
+
+    def _retire(self, limit: int):
+        """Complete (decode + record) oldest in-flight batches beyond limit."""
+        while len(self._inflight) > limit:
+            reqs, epoch, infl = self._inflight.popleft()
+            results = infl.complete()
+            t = self.clock()
+            for req, top in zip(reqs, results):
+                self.responses.append(Response(req.rid, top, t, len(reqs),
+                                               epoch=epoch,
+                                               retries=req.retries))
+
+    def drain(self):
+        """Serve and complete everything: queue, mutations, and pipeline."""
+        while self.batcher.queue or self.mutations:
+            self.tick(force=True)
+        self._retire(0)

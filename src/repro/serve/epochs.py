@@ -1,0 +1,81 @@
+"""Shadow-epoch commit machinery: double-buffered hints, atomic publish.
+
+The synchronous loop's commit is stop-the-world: between two query batches
+it re-packs columns, runs the ΔH GEMMs, and swaps state piece by piece —
+nothing else can be in flight, because a half-patched hint or DB would
+decode garbage.
+
+The pipelined engine instead drives every commit through two phases that
+`update.live.LiveIndex` exposes as ``stage()`` / ``publish()``:
+
+stage (shadow)
+    The mutation batch is planned and every patch — flat-DB column
+    scatter, ΔH hint GEMM, per-bucket batch-PIR patches — is DISPATCHED
+    against a *shadow* copy of the per-shard hint + DB buffers.  JAX's
+    functional updates make the shadow cheap: the live arrays are operands,
+    the patched arrays are fresh outputs, and with buffer donation the
+    scatters alias the retiring buffer in place (the donated array is the
+    one being superseded; every already-dispatched answer GEMM keeps its
+    operand buffer alive at the runtime level).  Queries keep planning,
+    answering and decoding at the live epoch for the entire stage.
+
+publish (swap)
+    One Python-level pointer swap per buffer family plus the epoch-log
+    append.  This is the only instant at which a freshly formed query can
+    become stale — the stale-reject window shrinks from the whole
+    hint-patch computation to the swap itself.
+
+In-flight batches are unaffected by the swap because the plan stage of
+`PirRagSystem.query_batch_async` snapshots everything decode needs (client
+hint array, per-bucket hint/config lists); the buffers of epoch e stay
+alive exactly as long as some batch formed at epoch e still needs them.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+
+class ShadowCommitter:
+    """Runs LiveIndex commits in stage/publish form for a serving engine.
+
+    ``donate=True`` routes the flat-DB and bucket sub-DB scatters through
+    buffer donation (`PIRServer.stage_update` /
+    `BatchPIRServer.stage_update_columns`): the 16 MiB-class DB copy per
+    epoch becomes an in-place column write.  Hints are never donated — the
+    retiring hint array is exactly what in-flight decode snapshots still
+    read — but their ΔH adds donate the transient delta buffer instead, so
+    a delta commit allocates no third hint-sized array either.
+
+    Accounts stage vs swap wall-clock so the overlap win is measurable
+    (`benchmarks/serve_bench.py` reports both).
+    """
+
+    def __init__(self, live, *, donate: bool = True):
+        assert live is not None, "shadow commits need a LiveIndex"
+        self.live = live
+        self.donate = donate
+        self.commits = 0
+        self.stage_seconds = 0.0     # shadow-patch compute (overlappable)
+        self.swap_seconds = 0.0      # pointer swaps (the stale window)
+
+    def commit(self, mutations: deque):
+        """Drain `mutations` into the journal and commit them as one epoch.
+
+        Returns the published HintPatch, or None if nothing was pending.
+        """
+        if not mutations:
+            return None
+        while mutations:
+            self.live.journal.append(mutations.popleft())
+        t0 = time.perf_counter()
+        staged = self.live.stage(donate=self.donate)
+        if staged is None:
+            return None
+        t1 = time.perf_counter()
+        patch = self.live.publish(staged)
+        t2 = time.perf_counter()
+        self.commits += 1
+        self.stage_seconds += t1 - t0
+        self.swap_seconds += t2 - t1
+        return patch

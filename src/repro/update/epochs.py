@@ -21,6 +21,14 @@ full patch (rebuild epochs)
 All arithmetic is uint32 wraparound (mod 2^32), matching the server's
 `PIRServer.update_columns` path, so `patch(H)` equals `server.setup()` on
 the rebuilt DB bit-for-bit.
+
+Publication timing: under the pipelined serving engine a commit is staged
+into shadow buffers first (`LiveIndex.stage`) and `EpochLog.publish`
+happens inside the pointer swap (`LiveIndex.publish`) — i.e. the epoch
+counter, the server buffers and the patch log all advance at the same
+instant, which is what lets `check_fresh` remain a plain equality test
+with no read locks: a query either sees the old epoch everywhere or the
+new epoch everywhere.
 """
 from __future__ import annotations
 

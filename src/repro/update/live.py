@@ -22,11 +22,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Callable
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chunking, pipeline
+from repro.kernels import ops
 from repro.update import journal as journal_lib
 from repro.update import planner, routing
 from repro.update.epochs import EpochLog, HintPatch
@@ -43,6 +45,25 @@ class CommitStats:
     reason: str | None
     seconds: float
     patch_bytes: int
+
+
+@dataclasses.dataclass
+class StagedEpoch:
+    """One commit's shadow buffers: computed while the live epoch serves.
+
+    `LiveIndex.stage()` plans the mutation batch, re-packs the touched
+    columns and DISPATCHES every device-side patch (ΔH GEMMs, column
+    scatters, bucket patches) against shadow copies — the serving path's
+    pointers are untouched, so queries keep being planned, answered and
+    decoded at the old epoch throughout.  `LiveIndex.publish()` then flips
+    the pointers and advances the epoch log: the stale-reject window is the
+    swap, not the patch computation.
+    """
+    patch: HintPatch
+    plan: planner.UpdatePlan
+    n_mutations: int
+    t0: float
+    _apply: Callable[[], None]
 
 
 class LiveIndex:
@@ -118,8 +139,25 @@ class LiveIndex:
 
     # -- commit --------------------------------------------------------------
 
-    def commit(self) -> HintPatch | None:
-        """Fold all pending mutations into one published epoch."""
+    def commit(self, *, donate: bool = False) -> HintPatch | None:
+        """Fold all pending mutations into one published epoch.
+
+        Equivalent to ``publish(stage())`` — the synchronous path runs the
+        two halves back-to-back.  ``donate=True`` (engine-only) patches the
+        server-side DB buffers in place instead of copying them per epoch;
+        see `PIRServer.stage_update` for the aliasing contract.
+        """
+        staged = self.stage(donate=donate)
+        return self.publish(staged) if staged is not None else None
+
+    def stage(self, *, donate: bool = False) -> StagedEpoch | None:
+        """Compute one commit's shadow state without publishing it.
+
+        Everything device-side is dispatched (JAX async) against fresh —
+        or, with ``donate=True``, in-place aliased — buffers; nothing the
+        serving path reads has moved when this returns.  Returns None when
+        no mutations are pending.
+        """
         muts = self.journal.pending()
         if not muts:
             return None
@@ -131,76 +169,112 @@ class LiveIndex:
             used_bytes=self._used, n_clusters=db.n, emb_dim=db.emb_dim,
             max_pad_fraction=self.max_pad_fraction)
         if plan.full_rebuild:
-            patch = self._commit_full(plan)
+            patch, apply = self._stage_full(plan)
         else:
-            patch = self._commit_delta(plan)
+            patch, apply = self._stage_delta(plan, donate=donate)
+        return StagedEpoch(patch=patch, plan=plan, n_mutations=len(muts),
+                           t0=t0, _apply=apply)
+
+    def publish(self, staged: StagedEpoch) -> HintPatch:
+        """Flip the staged pointers and advance the epoch: the swap instant.
+
+        Queries planned before this call keep decoding against their
+        snapshot of the old epoch; queries planned after it are formed —
+        and admitted — at the new one.
+        """
+        staged._apply()
+        plan, patch = staged.plan, staged.patch
         self.epochs.publish(patch)
         self.journal.mark_committed(self.epochs.epoch)
         self._docs = plan.new_docs
         self._cluster_of = plan.new_cluster_of
         self.commits.append(CommitStats(
-            epoch=self.epochs.epoch, n_mutations=len(muts),
+            epoch=self.epochs.epoch, n_mutations=staged.n_mutations,
             touched_clusters=len(plan.touched),
             full_rebuild=plan.full_rebuild, reason=plan.reason,
-            seconds=time.perf_counter() - t0,
+            seconds=time.perf_counter() - staged.t0,
             patch_bytes=patch.wire_bytes))
         return patch
 
-    def _commit_delta(self, plan: planner.UpdatePlan) -> HintPatch:
+    def _stage_delta(self, plan: planner.UpdatePlan, *, donate: bool
+                     ) -> tuple[HintPatch, Callable[[], None]]:
         db, system = self.system.db, self.system
         cols, new_cols, used = chunking.rebuild_columns(
             db.m, plan.docs_by_cluster)
 
         # Row truncation for the patch: beyond the max used length of the
         # old and new touched columns both sides are zero padding, so ΔD
-        # there is identically zero and need not travel.
+        # there is identically zero and need not travel.  (Read BEFORE the
+        # column scatter below — with donation the old buffer is consumed.)
         old_used = max(self._used[int(j)] for j in cols)
         r = max(old_used, max(used.values()))
         old_rows = np.asarray(system.server.db[:, jnp.asarray(cols)])[:r]
         delta = (new_cols[:r].astype(np.int16)
                  - old_rows.astype(np.int16))           # entries ∈ [−255, 255]
 
-        delta_h = system.server.update_columns(jnp.asarray(cols),
-                                               jnp.asarray(new_cols))
-        system.hint = system.hint + delta_h             # u32 wraparound: exact
+        new_db_arr, delta_h = system.server.stage_update(
+            jnp.asarray(cols), jnp.asarray(new_cols), donate=donate)
+        # u32 wraparound: exact.  ΔH is transient, so the add donates ITS
+        # buffer; the old hint array survives for in-flight decode snapshots.
+        new_hint = (ops.add_delta(system.hint, delta_h)
+                    if system.mesh is None else system.hint + delta_h)
         # Batch-PIR replicas (if enabled) take the same exact delta, routed
         # to each touched cluster's owning buckets.
-        routing.patch_batch_hints(system, cols, new_cols, used)
+        staged_batch = routing.stage_batch_hints(system, cols, new_cols,
+                                                 used, donate=donate)
 
-        # Mirror the host-side ChunkedDB view (tests/tools read db.matrix).
-        # Patched in place: copying the full (m, n) matrix per commit would
-        # make host cost O(DB) and swamp the O(m·|J|) delta path at scale.
-        db.matrix[:, cols] = new_cols
-        for j in cols:
-            db.cluster_sizes[j] = len(plan.docs_by_cluster[int(j)])
-            self._used[int(j)] = used[int(j)]
-            db.used_bytes[j] = used[int(j)]
-        self.system.db = dataclasses.replace(
-            db, n_docs=len(plan.new_docs),
-            pad_fraction=1.0 - sum(self._used.values()) / float(db.m * db.n))
+        def apply():
+            system.server.db = new_db_arr
+            system.hint = new_hint
+            if staged_batch is not None:
+                staged_batch.publish()
+            # Mirror the host-side ChunkedDB view (tests/tools read
+            # db.matrix).  Patched in place: copying the full (m, n) matrix
+            # per commit would make host cost O(DB) and swamp the O(m·|J|)
+            # delta path at scale.
+            db.matrix[:, cols] = new_cols
+            for j in cols:
+                db.cluster_sizes[j] = len(plan.docs_by_cluster[int(j)])
+                self._used[int(j)] = used[int(j)]
+                db.used_bytes[j] = used[int(j)]
+            self.system.db = dataclasses.replace(
+                db, n_docs=len(plan.new_docs),
+                pad_fraction=1.0 - sum(self._used.values())
+                / float(db.m * db.n))
+
         return HintPatch(from_epoch=self.epochs.epoch,
                          to_epoch=self.epochs.epoch + 1,
-                         cols=np.asarray(cols), delta=delta)
+                         cols=np.asarray(cols), delta=delta), apply
 
-    def _commit_full(self, plan: planner.UpdatePlan) -> HintPatch:
-        """Overflow / pad-degradation: re-cluster, re-pack, re-hint."""
+    def _stage_full(self, plan: planner.UpdatePlan
+                    ) -> tuple[HintPatch, Callable[[], None]]:
+        """Overflow / pad-degradation: re-cluster, re-pack, re-hint.
+
+        Naturally shadowed: the rebuilt system is a fresh object graph, so
+        the whole build (clustering, packing, hint GEMM, re-bucketing)
+        happens while the old system keeps serving; publish is one pointer
+        swap.
+        """
         ids = sorted(plan.new_docs)
         texts = [plan.new_docs[i][0] for i in ids]
         embs = np.stack([plan.new_docs[i][1] for i in ids])
         new_system = pipeline.PirRagSystem.build(
             texts, embs, doc_ids=ids, **self._rebuild_kwargs)
         routing.rebuild_batch(self.system, new_system)
-        self.system = new_system
         # Rebuild re-clusters, so the plan's incremental cluster map is stale.
         plan.new_cluster_of.clear()
         plan.new_cluster_of.update(
             {i: int(new_system.assignment[p]) for p, i in enumerate(ids)})
-        self._used = {j: int(new_system.db.used_bytes[j])
-                      for j in range(new_system.db.n)}
+
+        def apply():
+            self.system = new_system
+            self._used = {j: int(new_system.db.used_bytes[j])
+                          for j in range(new_system.db.n)}
+
         return HintPatch(from_epoch=self.epochs.epoch,
                          to_epoch=self.epochs.epoch + 1,
                          full_hint=np.asarray(new_system.hint),
-                         cfg=new_system.cfg)
+                         cfg=new_system.cfg), apply
 
     # -- epoch-checked queries ----------------------------------------------
 

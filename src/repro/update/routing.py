@@ -34,11 +34,25 @@ def patch_batch_hints(system, cols: np.ndarray, new_cols: np.ndarray,
     No-op (empty list) when batch-PIR isn't enabled.  Otherwise returns the
     per-bucket `BucketUpdate` records (delta-patched or rebuilt).
     """
+    staged = stage_batch_hints(system, cols, new_cols, new_used)
+    return staged.publish() if staged is not None else []
+
+
+def stage_batch_hints(system, cols: np.ndarray, new_cols: np.ndarray,
+                      new_used: dict[int, int], *, donate: bool = False):
+    """Shadow-commit variant: compute the bucket patches, defer the swap.
+
+    Returns the `StagedBucketPatch` (or None when batch-PIR is off); the
+    live-index publish step calls its `.publish()` inside the same pointer
+    swap that flips the flat DB/hint, so both hint families advance
+    atomically from the serving path's point of view.
+    """
     bp = getattr(system, "batch", None)
     if bp is None:
-        return []
-    return bp.server.update_columns(np.asarray(cols), np.asarray(new_cols),
-                                    new_used)
+        return None
+    return bp.server.stage_update_columns(np.asarray(cols),
+                                          np.asarray(new_cols),
+                                          new_used, donate=donate)
 
 
 def rebuild_batch(old_system, new_system) -> None:

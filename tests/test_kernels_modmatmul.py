@@ -91,3 +91,89 @@ def test_dtype_guards():
         ops.modmatmul(db.astype(jnp.int32), q)
     with pytest.raises(TypeError):
         ops.modmatmul(db, q.astype(jnp.int64))
+
+
+def test_bucketed_xla_stacked_columns_bitwise():
+    """The xla bucketed path now sends all C client columns of a bucket
+    through ONE (m_b, W) @ (W, C) call — bitwise equal to the per-column
+    matvec loop it replaced and to the u64 numpy oracle."""
+    rng = np.random.default_rng(9)
+    dbs = [jnp.asarray(rng.integers(0, 256, (rows, 64), dtype=np.uint8))
+           for rows in (128, 384, 256)]
+    qs = jnp.asarray(rng.integers(0, 2**32, (3, 64, 5), dtype=np.uint32))
+    got = ops.bucketed_modmatmul(dbs, qs, impl="xla")
+    for b, d in enumerate(dbs):
+        d64 = np.asarray(d).astype(np.uint64)
+        for c in range(5):
+            want = (d64 @ np.asarray(qs[b, :, c]).astype(np.uint64)
+                    ) % (1 << 32)
+            np.testing.assert_array_equal(np.asarray(got[b][:, c]),
+                                          want.astype(np.uint32))
+    # (B, W) vector form still returns per-bucket vectors
+    got_vec = ops.bucketed_modmatmul(dbs, qs[:, :, 0], impl="xla")
+    for b in range(3):
+        np.testing.assert_array_equal(np.asarray(got_vec[b]),
+                                      np.asarray(got[b][:, 0]))
+
+
+def test_pallas_pad_cache_reuses_and_invalidates():
+    """Hot-loop calls with the SAME db array hit the padded-layout cache;
+    a functionally updated db (new array object) misses and recomputes."""
+    db, q = _rand_db_q(4, 100, 300, 2)
+    ops._db_pad_cache.clear()
+    h0, m0 = ops._db_pad_cache.hits, ops._db_pad_cache.misses
+    a1 = ops.modmatmul(db, q, impl="pallas")
+    a2 = ops.modmatmul(db, q, impl="pallas")
+    assert ops._db_pad_cache.misses == m0 + 1
+    assert ops._db_pad_cache.hits == h0 + 1
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    db2 = db.at[0, 0].set(7)          # new array object → cache miss
+    a3 = ops.modmatmul(db2, q, impl="pallas")
+    assert ops._db_pad_cache.misses == m0 + 2
+    np.testing.assert_array_equal(np.asarray(a3),
+                                  np.asarray(ref.modmatmul_ref(db2, q)))
+
+
+def test_bucket_stack_cache_keyed_on_identity():
+    """The pallas bucket stack is cached across calls and rebuilt when any
+    sub-DB is swapped (as an epoch commit does)."""
+    rng = np.random.default_rng(10)
+    dbs = [jnp.asarray(rng.integers(0, 256, (128, 64), dtype=np.uint8))
+           for _ in range(2)]
+    qs = jnp.asarray(rng.integers(0, 2**32, (2, 64), dtype=np.uint32))
+    ops._bucket_stack_cache.clear()
+    ops.bucketed_modmatmul(dbs, qs, impl="pallas")
+    ops.bucketed_modmatmul(dbs, qs, impl="pallas")
+    assert ops._bucket_stack_cache.hits >= 1
+    assert ops._bucket_stack_cache.misses == 1
+    dbs2 = [dbs[0], dbs[1].at[3, 3].set(1)]
+    got = ops.bucketed_modmatmul(dbs2, qs, impl="pallas")
+    assert ops._bucket_stack_cache.misses == 2
+    want = ops.bucketed_modmatmul(dbs2, qs, impl="xla")
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_scatter_and_add_helpers_exact():
+    """scatter_columns / add_delta (the donated commit primitives) match
+    their functional equivalents bitwise; donation consumes the operand."""
+    rng = np.random.default_rng(11)
+    db = jnp.asarray(rng.integers(0, 256, (64, 16), dtype=np.uint8))
+    cols = jnp.asarray([3, 9])
+    new = jnp.asarray(rng.integers(0, 256, (64, 2), dtype=np.uint8))
+    want = np.asarray(db.at[:, cols].set(new))
+    got = ops.scatter_columns(db, cols, new, donate=False)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    got_don = ops.scatter_columns(db, cols, new, donate=True)
+    np.testing.assert_array_equal(np.asarray(got_don), want)
+    with pytest.raises(RuntimeError):
+        np.asarray(db)                 # donated buffer is consumed
+
+    hint = jnp.asarray(rng.integers(0, 2**32, (64, 8), dtype=np.uint32))
+    delta = jnp.asarray(rng.integers(0, 2**32, (64, 8), dtype=np.uint32))
+    want_h = np.asarray(hint) + np.asarray(delta)      # u32 wraparound
+    got_h = ops.add_delta(hint, delta)
+    np.testing.assert_array_equal(np.asarray(got_h), want_h)
+    np.asarray(hint)                   # the HINT is never donated
+    with pytest.raises(RuntimeError):
+        np.asarray(delta)              # the transient delta is

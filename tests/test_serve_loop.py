@@ -29,6 +29,40 @@ def test_batcher_empty_never_ready():
     assert not b.ready(now=123.0)
 
 
+def test_requeue_front_preserves_fifo_among_retries():
+    """Regression: stale requests re-queued as a group must keep their cut
+    order — requeue'ing one-by-one in iteration order would reverse
+    same-epoch retries relative to each other."""
+    b = DeadlineBatcher(max_batch=8, deadline_ms=1e9)
+    for i in range(3):
+        b.submit(Request(100 + i, np.zeros(2), t_arrival=0.0))  # younger
+    stale = [Request(i, np.zeros(2), t_arrival=0.0) for i in range(4)]
+    b.requeue_front(stale)
+    assert [r.rid for r in b.cut()] == [0, 1, 2, 3, 100, 101, 102]
+    # the one-request form still exists for single rejects
+    b.submit(Request(200, np.zeros(2), t_arrival=0.0))
+    b.requeue(Request(7, np.zeros(2), t_arrival=0.0))
+    assert [r.rid for r in b.cut()] == [7, 200]
+
+
+def test_loop_retries_stay_fifo_across_epoch_reject():
+    """End-to-end: a commit that staleness-rejects a whole batch must serve
+    the retried requests in their original submission order."""
+    from repro.update import LiveIndex, journal as journal_lib
+
+    corp = corpus_lib.make_corpus(3, 150, emb_dim=16, n_topics=5)
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=5,
+                           impl="xla", kmeans_iters=5)
+    loop = PIRServeLoop(live, max_batch=8, deadline_ms=1e9)
+    for rid in range(5):                    # all formed against epoch 0
+        loop.submit(rid, corp.embeddings[rid])
+    loop.submit_mutation(journal_lib.replace(3, b"bump",
+                                             corp.embeddings[3]))
+    loop.drain()
+    retried = [r for r in loop.responses if r.retries == 1]
+    assert [r.rid for r in retried] == [0, 1, 2, 3, 4]
+
+
 @pytest.fixture(scope="module")
 def system():
     corp = corpus_lib.make_corpus(0, 250, emb_dim=24, n_topics=8)
