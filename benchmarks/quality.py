@@ -5,6 +5,15 @@ Fixed-size corpus (5k docs as in the paper, synthetic labels — DESIGN.md
 retrieval time, and the paper's headline metric: *RAG-Ready latency*, i.e.
 time until full document content is client-side — which charges Graph-PIR
 and Tiptoe their K extra private content fetches (DocContentPIR).
+
+Variance note: single-cluster retrieval quality is sensitive to the K-means
+draw — a single build's NDCG@10 swings ±0.05 with clustering luck, and at
+CI-sized corpora PIR-RAG and Tiptoe sit close enough that one draw flips
+the Fig-3a hierarchy sign.  The claim is about the systems' EXPECTED
+quality, so both cluster-seeded systems are averaged over ``n_builds``
+build seeds (measured: the averaged estimator orders them consistently
+across corpus seeds where single draws coin-flip).  Graph-PIR's margin is
+wide and its graph build is the expensive one, so it stays single-build.
 """
 from __future__ import annotations
 
@@ -19,8 +28,8 @@ from repro.data import corpus as corpus_lib
 from repro.data import metrics
 
 
-def run(n_docs=5000, emb_dim=384, n_queries=12, top_k=10, seed=0
-        ) -> list[dict]:
+def run(n_docs=5000, emb_dim=384, n_queries=12, top_k=10, seed=0,
+        n_builds=3) -> list[dict]:
     """Benchmark regime (why these numbers — see EXPERIMENTS.md):
 
     * emb_dim=384 (bge-small class): Tiptoe's homomorphic scoring must fit
@@ -38,11 +47,6 @@ def run(n_docs=5000, emb_dim=384, n_queries=12, top_k=10, seed=0
                                  noise=0.4, topical=False)
     n_clusters = max(8, n_docs // 15)
 
-    sysm = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
-                                       n_clusters=n_clusters, impl="xla",
-                                       seed=seed)
-    tsys = tiptoe.TiptoeSystem.build(corp.embeddings, n_clusters=n_clusters,
-                                     seed=seed)
     gsys = graph_pir.GraphPIRSystem.build(corp.embeddings, degree=24,
                                           n_entry=16, impl="xla", seed=seed)
     # the content store both baselines must hit for RAG (retrieve-THEN-fetch)
@@ -53,30 +57,41 @@ def run(n_docs=5000, emb_dim=384, n_queries=12, top_k=10, seed=0
                    t_rag_ready=[])
            for s in ("pir_rag", "tiptoe", "graph_pir")}
 
-    for qi in range(n_queries):
-        q = qs.embeddings[qi]
-        rel, gains = qs.relevant[qi], qs.gains[qi]
+    for bi in range(max(1, n_builds)):
+        bseed = seed + 100 * bi
+        sysm = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                           n_clusters=n_clusters, impl="xla",
+                                           seed=bseed)
+        tsys = tiptoe.TiptoeSystem.build(corp.embeddings,
+                                         n_clusters=n_clusters, seed=bseed)
+        for qi in range(n_queries):
+            q = qs.embeddings[qi]
+            rel, gains = qs.relevant[qi], qs.gains[qi]
 
-        t0 = time.perf_counter()
-        top, _ = sysm.query(q, top_k=top_k, key=jax.random.PRNGKey(qi))
-        t1 = time.perf_counter()
-        ids = np.array([d for d, _, _ in top])
-        _score(out["pir_rag"], ids, rel, gains, top_k, t1 - t0,
-               t1 - t0)                       # content already in hand
+            t0 = time.perf_counter()
+            top, _ = sysm.query(q, top_k=top_k, key=jax.random.PRNGKey(qi))
+            t1 = time.perf_counter()
+            ids = np.array([d for d, _, _ in top])
+            _score(out["pir_rag"], ids, rel, gains, top_k, t1 - t0,
+                   t1 - t0)                       # content already in hand
 
-        t0 = time.perf_counter()
-        ids, _ = tsys.search(q, top_k=top_k, key=jax.random.PRNGKey(qi))
-        t1 = time.perf_counter()
-        content.fetch_many(qi, ids[:top_k])   # K more private fetches
-        t2 = time.perf_counter()
-        _score(out["tiptoe"], ids, rel, gains, top_k, t1 - t0, t2 - t0)
+            t0 = time.perf_counter()
+            ids, _ = tsys.search(q, top_k=top_k, key=jax.random.PRNGKey(qi))
+            t1 = time.perf_counter()
+            content.fetch_many(qi, ids[:top_k])   # K more private fetches
+            t2 = time.perf_counter()
+            _score(out["tiptoe"], ids, rel, gains, top_k, t1 - t0, t2 - t0)
 
-        t0 = time.perf_counter()
-        ids, _ = gsys.search(q, top_k=top_k, beam=32, max_hops=12, seed=qi)
-        t1 = time.perf_counter()
-        content.fetch_many(1000 + qi, ids[:top_k])
-        t2 = time.perf_counter()
-        _score(out["graph_pir"], ids, rel, gains, top_k, t1 - t0, t2 - t0)
+            if bi > 0:
+                continue        # graph has no cluster seed; one pass suffices
+            t0 = time.perf_counter()
+            ids, _ = gsys.search(q, top_k=top_k, beam=32, max_hops=12,
+                                 seed=qi)
+            t1 = time.perf_counter()
+            content.fetch_many(1000 + qi, ids[:top_k])
+            t2 = time.perf_counter()
+            _score(out["graph_pir"], ids, rel, gains, top_k, t1 - t0,
+                   t2 - t0)
 
     rows = []
     for s, d in out.items():

@@ -56,8 +56,9 @@ def main() -> None:
     results["scalability"] = {"rows": rows, "checks": checks2}
 
     # ---- Fig 3: quality + RAG-Ready latency ---------------------------------
-    qrows = quality.run(n_docs=1500 if args.fast else 5000,
-                        n_queries=6 if args.fast else 12)
+    # 12 queries even in --fast: 6 is inside the per-query noise band of the
+    # Fig-3a near-tie (see quality.py's variance note)
+    qrows = quality.run(n_docs=1500 if args.fast else 5000, n_queries=12)
     for r in qrows:
         print(f"fig3_{r['system']},{r['t_retrieval_s'] * 1e6:.0f},"
               f"ndcg10={r['ndcg10']:.3f};p10={r['p10']:.3f};"
@@ -88,6 +89,17 @@ def main() -> None:
     checks_s = sres["checks"]
     results["sharded"] = sres
 
+    # ---- sharded offline build: full build 1→8 fake devices -----------------
+    from benchmarks import build_bench
+    bld = build_bench.run(fast=args.fast)
+    print(f"build_host,{bld['host_s'] * 1e6:.0f},reference")
+    for r in bld["rows"]:
+        print(f"build_d{r['n_devices']},{r['build_s'] * 1e6:.0f},"
+              f"index_s={r['index_s']:.2f};hint_s={r['hint_s']:.2f};"
+              f"db_per_dev={r['db_bytes_per_device']}")
+    checks_bld = bld["checks"]
+    results["build"] = bld
+
     # ---- pipelined serving engine: overlap win under mutation load ----------
     from benchmarks import serve_bench
     vres = serve_bench.run(fast=args.fast)
@@ -100,7 +112,7 @@ def main() -> None:
     results["serve"] = vres
 
     print("\n# paper-claim validation")
-    for c in checks2 + checks3 + checks_b + checks_s + checks_v:
+    for c in checks2 + checks3 + checks_b + checks_s + checks_bld + checks_v:
         print("#", c)
 
     with open(os.path.join(args.out, "bench_results.json"), "w") as f:
@@ -115,8 +127,9 @@ def main() -> None:
                        fig3=results["quality"],
                        batchpir=bres,
                        sharded=sres,
+                       build=bld,
                        serve=vres), f, indent=1, default=float)
-    all_checks = checks2 + checks3 + checks_b + checks_s + checks_v
+    all_checks = checks2 + checks3 + checks_b + checks_s + checks_bld + checks_v
     n_fail = sum(1 for c in all_checks if c.startswith("FAIL"))
     print(f"\n# {len(all_checks) - n_fail} claims PASS, {n_fail} FAIL")
 

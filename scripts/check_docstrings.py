@@ -1,0 +1,87 @@
+"""CI gate: the public API surface must be documented.
+
+Imports the `repro` packages that form the public serving/build surface and
+fails (exit 1) when any exported name — module, public class, public method
+defined in that module, or public function — is missing a docstring.  The
+convention this enforces (see docs/architecture.md): public docstrings state
+shapes, dtypes, and sharding expectations, because almost every object here
+is an array contract.
+
+    PYTHONPATH=src python scripts/check_docstrings.py
+"""
+from __future__ import annotations
+
+import importlib
+import inspect
+import sys
+
+#: The exported surface ISSUE 5 pins: system facade, both server roles, the
+#: live index, the pipelined engine, and the shard_map building blocks —
+#: plus the packing/clustering/kernel modules they are built from.
+MODULES = [
+    "repro.core.pipeline",
+    "repro.core.pir",
+    "repro.core.clustering",
+    "repro.core.chunking",
+    "repro.batchpir.partition",
+    "repro.batchpir.server",
+    "repro.batchpir.client",
+    "repro.update.live",
+    "repro.update.epochs",
+    "repro.serve.engine",
+    "repro.serve.epochs",
+    "repro.distributed.collectives",
+    "repro.kernels.ops",
+]
+
+
+def _public_names(mod) -> list[str]:
+    if hasattr(mod, "__all__"):
+        return list(mod.__all__)
+    return [n for n in vars(mod) if not n.startswith("_")]
+
+
+def _missing(mod) -> list[str]:
+    out = []
+    if not (mod.__doc__ or "").strip():
+        out.append(mod.__name__)
+    for name in _public_names(mod):
+        obj = getattr(mod, name)
+        if inspect.isclass(obj) or inspect.isfunction(obj):
+            if getattr(obj, "__module__", None) != mod.__name__:
+                continue  # re-export; charged to its home module
+            if not (inspect.getdoc(obj) or "").strip():
+                out.append(f"{mod.__name__}.{name}")
+            if inspect.isclass(obj):
+                for mname, meth in vars(obj).items():
+                    if mname.startswith("_") and mname != "__init__":
+                        continue
+                    fn = (meth.__func__ if isinstance(
+                        meth, (classmethod, staticmethod)) else meth)
+                    if not (inspect.isfunction(fn) or isinstance(
+                            fn, property)):
+                        continue
+                    target = fn.fget if isinstance(fn, property) else fn
+                    if target is None or mname == "__init__":
+                        # __init__ is documented at the class level here
+                        continue
+                    if not (inspect.getdoc(target) or "").strip():
+                        out.append(f"{mod.__name__}.{name}.{mname}")
+    return out
+
+
+def main() -> int:
+    missing: list[str] = []
+    for modname in MODULES:
+        missing += _missing(importlib.import_module(modname))
+    if missing:
+        print("missing docstrings on exported names:")
+        for m in missing:
+            print("  -", m)
+        return 1
+    print(f"docstrings OK across {len(MODULES)} public modules")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,6 +59,8 @@ class BatchPIRClient:
 
     @classmethod
     def from_server(cls, server: BatchPIRServer) -> "BatchPIRClient":
+        """Client sharing the server's partition/configs/hint list refs
+        (the in-process stand-in for the one-time hint download)."""
         if not server.hints:
             server.install_hints()
         return cls(server.partition, server.cfgs, server.hints)

@@ -75,6 +75,8 @@ class CuckooPartition:
     @classmethod
     def build(cls, n_clusters: int, n_buckets: int, seed: int
               ) -> "CuckooPartition":
+        """Draw the public 3-way candidate map from `seed` (balanced, so
+        every bucket width is ≈ 3n/B, padded to a shared power of two)."""
         if n_buckets < 3:
             raise ValueError("3-way cuckoo needs at least 3 buckets")
         rng = np.random.default_rng([0x5C0B, seed, n_clusters, n_buckets])

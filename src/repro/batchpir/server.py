@@ -78,6 +78,7 @@ class StagedBucketPatch:
     published: bool = False
 
     def publish(self) -> list[BucketUpdate]:
+        """Flip every staged bucket pointer; returns the per-bucket log."""
         assert not self.published, "StagedBucketPatch published twice"
         self._apply()
         self.published = True
@@ -101,10 +102,9 @@ class BatchPIRServer:
         self.n_shards = 1
         self._stack: jax.Array | None = None   # sharded bucket stack cache
         if mesh is not None:
-            self.mesh_axes = (tuple(mesh_axes) if mesh_axes is not None
-                              else tuple(mesh.axis_names))
-            for a in self.mesh_axes:
-                self.n_shards *= mesh.shape[a]
+            from repro.core import clustering
+            self.mesh_axes, self.n_shards = clustering.resolve_mesh_axes(
+                mesh, mesh_axes)
         if not lwe.noise_budget_ok(params, partition.width):
             params = lwe.choose_params(partition.width,
                                        q_switch=params.q_switch)
@@ -136,6 +136,7 @@ class BatchPIRServer:
     # -- public matrices / hints --------------------------------------------
 
     def a_matrix(self, bucket: int) -> jax.Array:
+        """Bucket b's public LWE matrix A_b: (W, k) u32, seed-derived."""
         if self._a_mats[bucket] is None:
             cfg = self.cfgs[bucket]
             self._a_mats[bucket] = lwe.gen_public_matrix(
@@ -155,6 +156,7 @@ class BatchPIRServer:
 
     @property
     def hint_bytes(self) -> int:
+        """One-time hint downlink: Σ_b 4·m_b·k bytes across buckets."""
         return sum(cfg.hint_bytes for cfg in self.cfgs)
 
     @property
@@ -164,6 +166,7 @@ class BatchPIRServer:
 
     @property
     def uplink_bytes(self) -> int:
+        """Query bytes of one batched query: B ciphertexts of 4·W bytes."""
         return sum(cfg.uplink_bytes for cfg in self.cfgs)
 
     @property

@@ -24,6 +24,7 @@ occupancy — the capacity accounting that decides when an insert overflows
 """
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 from typing import Mapping, Sequence
 
@@ -47,6 +48,15 @@ class ColumnOverflowError(ValueError):
 
 @dataclasses.dataclass(frozen=True)
 class ChunkedDB:
+    """The chunk-transposed corpus: one uint8 byte column per cluster.
+
+    ``matrix`` is the canonical (m, n) host view.  When the DB was packed
+    for a row-sharded server (``build_chunked_db(n_row_shards=S)``),
+    ``row_shards`` holds S equal-height row-slice VIEWS of one shared
+    allocation (padded up to a multiple of S rows), so per-shard device
+    transfers and the host mirror alias the same bytes — in-place column
+    patches stay visible through both.
+    """
     matrix: np.ndarray            # (m, n) uint8, chunk-transposed
     emb_dim: int
     chunk_size: int
@@ -54,13 +64,16 @@ class ChunkedDB:
     cluster_sizes: np.ndarray     # (n,) docs per cluster
     pad_fraction: float           # wasted bytes / total bytes (reported)
     used_bytes: np.ndarray | None = None   # (n,) serialized bytes per column
+    row_shards: tuple[np.ndarray, ...] | None = None  # S × (m_pad/S, n) views
 
     @property
     def m(self) -> int:
+        """Rows: bytes per column (max serialized cluster, chunk-rounded)."""
         return self.matrix.shape[0]
 
     @property
     def n(self) -> int:
+        """Columns: number of clusters."""
         return self.matrix.shape[1]
 
 
@@ -73,10 +86,12 @@ def quantize_embedding(emb: np.ndarray) -> tuple[np.ndarray, float, float]:
 
 
 def dequantize_embedding(q: np.ndarray, scale: float, off: float) -> np.ndarray:
+    """Inverse of `quantize_embedding`: u8 (d,) → f32 (d,)."""
     return q.astype(np.float32) * scale + off
 
 
 def serialize_doc(doc_id: int, emb: np.ndarray, text: bytes) -> bytes:
+    """One document's wire record (see module docstring for the layout)."""
     q, scale, off = quantize_embedding(emb)
     hdr = (np.uint32(doc_id).tobytes() + np.uint32(len(text)).tobytes()
            + np.float32(scale).tobytes() + np.float32(off).tobytes())
@@ -105,6 +120,7 @@ def deserialize_docs(col: np.ndarray, emb_dim: int
 
 
 def record_bytes(emb_dim: int, text_len: int) -> int:
+    """Serialized size of one record: 16-byte header + emb + text."""
     return _HDR + emb_dim + text_len
 
 
@@ -149,33 +165,73 @@ def rebuild_columns(m: int, docs_by_col: Mapping[int, Sequence[DocTriple]]
 def build_chunked_db(texts: Sequence[bytes], embeddings: np.ndarray,
                      assignment: np.ndarray, n_clusters: int,
                      chunk_size: int = 256,
-                     doc_ids: Sequence[int] | None = None) -> ChunkedDB:
+                     doc_ids: Sequence[int] | None = None, *,
+                     n_row_shards: int = 1,
+                     pack_workers: int | None = None) -> ChunkedDB:
     """Pack the corpus into the chunk-transposed uint8 matrix.
 
     `doc_ids` (default: positional 0..N-1) lets a live-index full rebuild
     preserve stable external document ids across a sparse id space.
+
+    ``n_row_shards=S`` packs for a row-sharded server: rows pad up to a
+    multiple of S and the fill runs one independent row-slice per shard (a
+    column's rows [lo, hi) are just ``payload[lo:hi]``, so shard slices need
+    no cross-shard state — on a multi-host build each host packs only its
+    slice).  The slices are views of one allocation, exposed as
+    ``ChunkedDB.row_shards`` for direct per-device placement
+    (`PIRServer` assembles them without a single-device materialize).
+    Packed bytes are identical for every S; ``matrix`` is always the
+    unpadded (m, n) view.
+
+    ``pack_workers`` sizes the thread pool for column serialization and
+    shard fills (default: one per shard, serial when S == 1).
     """
     n_docs, emb_dim = embeddings.shape
     assert len(texts) == n_docs
     ids = np.arange(n_docs) if doc_ids is None else np.asarray(doc_ids)
     assert len(ids) == n_docs
+    assert n_row_shards >= 1
 
-    columns: list[bytes] = []
-    sizes = np.zeros(n_clusters, np.int64)
-    for j in range(n_clusters):
+    def _pack(j: int) -> bytes:
         members = np.nonzero(assignment == j)[0]
-        sizes[j] = len(members)
-        columns.append(pack_column(
-            [(int(ids[i]), embeddings[i], texts[i]) for i in members]))
+        return pack_column(
+            [(int(ids[i]), embeddings[i], texts[i]) for i in members])
+
+    workers = pack_workers if pack_workers is not None else n_row_shards
+    if workers > 1:
+        with concurrent.futures.ThreadPoolExecutor(workers) as ex:
+            columns = list(ex.map(_pack, range(n_clusters)))
+    else:
+        columns = [_pack(j) for j in range(n_clusters)]
+    sizes = np.bincount(np.asarray(assignment), minlength=n_clusters
+                        ).astype(np.int64)
 
     raw = max(len(c) for c in columns)
     m = ((raw + chunk_size - 1) // chunk_size) * chunk_size
-    mat = np.zeros((m, n_clusters), np.uint8)
-    used = np.zeros(n_clusters, np.int64)
-    for j, c in enumerate(columns):
-        mat[:len(c), j] = np.frombuffer(c, np.uint8)
-        used[j] = len(c)
+    m_pad = m + (-m) % n_row_shards
+    full = np.zeros((m_pad, n_clusters), np.uint8)
+    rows_per = m_pad // n_row_shards
+    used = np.asarray([len(c) for c in columns], np.int64)
+
+    def _fill(s: int) -> None:
+        lo, hi = s * rows_per, (s + 1) * rows_per
+        block = full[lo:hi]
+        for j, c in enumerate(columns):
+            if len(c) > lo:
+                block[: min(hi, len(c)) - lo, j] = np.frombuffer(
+                    c, np.uint8, count=min(hi, len(c)) - lo, offset=lo)
+
+    if n_row_shards > 1:
+        with concurrent.futures.ThreadPoolExecutor(workers) as ex:
+            list(ex.map(_fill, range(n_row_shards)))
+    else:
+        _fill(0)
+
     pad_frac = 1.0 - int(used.sum()) / float(m * n_clusters)
-    return ChunkedDB(matrix=mat, emb_dim=emb_dim, chunk_size=chunk_size,
+    shards = (tuple(full[s * rows_per:(s + 1) * rows_per]
+                    for s in range(n_row_shards))
+              if n_row_shards > 1 else None)
+    return ChunkedDB(matrix=full[:m], emb_dim=emb_dim, chunk_size=chunk_size,
                      n_docs=n_docs, cluster_sizes=sizes,
-                     pad_fraction=pad_frac, used_bytes=used)
+                     pad_fraction=pad_frac, used_bytes=used,
+                     row_shards=shards)

@@ -11,6 +11,7 @@ results; its entire view is one pseudorandom uint32 vector per query.
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import time
 from typing import Callable, Sequence
@@ -55,6 +56,24 @@ def _fresh_client_key() -> jax.Array:
     return jax.random.PRNGKey(int.from_bytes(os.urandom(7), "little"))
 
 
+# Independent fold_in streams off the ONE public build seed.  Cluster seeding
+# and LWE setup (the public matrix A's seed) must never share a stream:
+# with a shared key, changing k-means knobs would silently re-derive A — and
+# with it every hint, query and cached client state.  (Regression-pinned in
+# tests/test_pipeline.py.)
+_STREAM_KMEANS = 0
+_STREAM_LWE = 1
+
+
+def _derive_build_streams(seed: int) -> tuple[jax.Array, int]:
+    """(kmeans key, a_seed) — two independent streams from one build seed."""
+    root = jax.random.PRNGKey(seed)
+    k_km = jax.random.fold_in(root, _STREAM_KMEANS)
+    a_seed = int(jax.random.randint(jax.random.fold_in(root, _STREAM_LWE),
+                                    (), 0, jnp.iinfo(jnp.int32).max))
+    return k_km, a_seed
+
+
 @dataclasses.dataclass
 class QueryStats:
     uplink_bytes: int
@@ -94,28 +113,61 @@ class PirRagSystem:
               impl: str = "auto", q_switch: int | None = 1 << 16,
               doc_ids: Sequence[int] | None = None,
               mesh=None, mesh_axes: tuple | None = None,
+              build_blocks: int | None = None,
               ) -> "PirRagSystem":
-        """Offline setup.  ``mesh=`` row-shards the server DB over a device
-        mesh (zero-collective answer path; see `distributed.collectives.
-        row_shard_gemm`) — every online result stays bit-identical to the
-        single-device layout."""
+        """Offline setup: embed → K-means → chunk-transposed DB → PIR hint.
+
+        texts: N byte strings; embeddings: (N, d) f32.  ``seed`` feeds two
+        independent `fold_in` streams — cluster seeding and the public LWE
+        matrix seed (`cfg.a_seed`) — so clustering knobs can never perturb
+        key material.
+
+        ``mesh=`` shards the ENTIRE build over the device mesh the server
+        uses: K-means fits with the corpus row-sharded
+        (`clustering.kmeans_fit_sharded`, one all-gather per Lloyd
+        iteration), the balanced-assign distance sweep runs per shard, and
+        column packing emits per-shard row slices that are placed directly
+        on their owning devices — the row-sharded DB is constructed in
+        place, never materialized on (or resharded through) one device.
+        Everything downstream — centroids, assignment, packed columns,
+        hint, answers, top-k — is bit-identical to the mesh=None build
+        (property-tested under the 8-fake-device harness) whenever the
+        shard count divides ``build_blocks`` (default
+        ``lcm(clustering.BUILD_BLOCKS, shards)``, i.e. any power-of-two
+        mesh up to 8 matches the unsharded build exactly).
+        """
         t0 = time.perf_counter()
-        emb_j = jnp.asarray(embeddings, jnp.float32)
-        km = clustering.kmeans_fit(jax.random.PRNGKey(seed), emb_j,
-                                   k=n_clusters, iters=kmeans_iters)
+        k_km, a_seed = _derive_build_streams(seed)
+        axes, shards = (clustering.resolve_mesh_axes(mesh, mesh_axes)
+                        if mesh is not None else (None, 1))
+        blocks = (build_blocks if build_blocks is not None
+                  else math.lcm(clustering.BUILD_BLOCKS, shards))
+        embf = np.asarray(embeddings, np.float32)
+        if mesh is None:
+            km = clustering.kmeans_fit(k_km, jnp.asarray(embf),
+                                       k=n_clusters, iters=kmeans_iters,
+                                       n_blocks=blocks, impl=impl)
+        else:
+            km = clustering.kmeans_fit_sharded(
+                k_km, embf, k=n_clusters, iters=kmeans_iters, mesh=mesh,
+                mesh_axes=axes, n_blocks=blocks, impl=impl)
         cents = np.asarray(km.centroids)
         if balance_factor is not None:
             cap = int(np.ceil(len(texts) / n_clusters * balance_factor))
-            assign = clustering.balanced_assign(
-                np.asarray(embeddings, np.float32), cents, cap)
+            d2 = clustering.blocked_sqdist(embf, cents, n_blocks=blocks,
+                                           mesh=mesh, mesh_axes=axes)
+            assign = clustering.balanced_assign(embf, cents, cap,
+                                                d2=np.asarray(d2))
         else:
             assign = np.asarray(km.assignment)
-        db = chunking.build_chunked_db(texts, np.asarray(embeddings, np.float32),
-                                       assign, n_clusters, chunk_size,
-                                       doc_ids=doc_ids)
-        cfg = pir.make_config(db.m, db.n, impl=impl, q_switch=q_switch)
-        server = pir.PIRServer(cfg, jnp.asarray(db.matrix),
-                               mesh=mesh, mesh_axes=mesh_axes)
+        db = chunking.build_chunked_db(texts, embf, assign, n_clusters,
+                                       chunk_size, doc_ids=doc_ids,
+                                       n_row_shards=shards)
+        cfg = pir.make_config(db.m, db.n, impl=impl, q_switch=q_switch,
+                              a_seed=a_seed)
+        server = pir.PIRServer(
+            cfg, db.row_shards if db.row_shards is not None
+            else jnp.asarray(db.matrix), mesh=mesh, mesh_axes=axes)
         t_index = time.perf_counter()
         hint = jax.block_until_ready(server.setup())
         if mesh is not None:

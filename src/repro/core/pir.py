@@ -31,6 +31,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core import lwe
@@ -54,16 +55,19 @@ class PIRConfig:
 
     @property
     def uplink_bytes(self) -> int:
+        """Query size: one u32 ciphertext entry per DB column (n·4)."""
         return self.n * 4
 
     @property
     def downlink_bytes(self) -> int:
+        """Response size: m words — 2 B each when modulus-switched ≤ 2^16."""
         qs = self.params.q_switch
         per = 2 if (qs is not None and qs <= 1 << 16) else 4
         return self.m * per
 
     @property
     def hint_bytes(self) -> int:
+        """One-time client download: the (m, k) u32 hint H = D·A."""
         return self.m * self.params.k * 4
 
 
@@ -79,38 +83,89 @@ class PIRServer:
     the shard count so `shard_map` sees equal slices.  The padding rows are
     all-zero on both the DB and the hint, so answers/decodes are unaffected
     — every public method still speaks global (m, ...) shapes.
+
+    ``db`` accepts three layouts (all (m, n) uint8 semantics):
+
+      * a jax array — committed/resharded as before;
+      * a host numpy array — padded host-side and transferred straight into
+        the sharded layout (no device-0 commit);
+      * a list/tuple of S per-shard host row slices ((m_pad/S, n) each,
+        e.g. ``ChunkedDB.row_shards``) — each slice is placed directly on
+        its owning device and assembled with
+        `jax.make_array_from_single_device_arrays`, so the full DB is never
+        materialized on (or resharded through) a single device.  This is
+        the sharded offline build's in-place construction path.
     """
 
-    def __init__(self, cfg: PIRConfig, db: jax.Array, *,
+    def __init__(self, cfg: PIRConfig, db, *,
                  mesh=None, mesh_axes: tuple[str, ...] | None = None):
-        assert db.shape == (cfg.m, cfg.n), (db.shape, (cfg.m, cfg.n))
-        assert db.dtype == jnp.uint8
         self.cfg = cfg
         self.mesh = mesh
         self.mesh_axes: tuple[str, ...] | None = None
         self._row_pad = 0
         if mesh is not None:
-            axes = (tuple(mesh_axes) if mesh_axes is not None
-                    else tuple(mesh.axis_names))
+            from repro.core import clustering
+            axes, shards = clustering.resolve_mesh_axes(mesh, mesh_axes)
             self.mesh_axes = axes
-            shards = 1
-            for a in axes:
-                shards *= mesh.shape[a]
             self.n_shards = shards
             self._row_pad = (-cfg.m) % shards
-            if self._row_pad:
-                db = jnp.pad(jnp.asarray(db), ((0, self._row_pad), (0, 0)))
             self._db_sharding = NamedSharding(mesh,
                                               PartitionSpec(axes, None))
             self._replicated = NamedSharding(mesh, PartitionSpec())
-            db = jax.device_put(db, self._db_sharding)
+            if isinstance(db, (list, tuple)):
+                db = self._assemble_row_shards(db)
+            elif isinstance(db, np.ndarray):
+                assert db.shape == (cfg.m, cfg.n), (db.shape, (cfg.m, cfg.n))
+                assert db.dtype == np.uint8
+                if self._row_pad:
+                    padded = np.zeros((cfg.m + self._row_pad, cfg.n),
+                                      np.uint8)
+                    padded[:cfg.m] = db
+                    db = padded
+                db = jax.device_put(db, self._db_sharding)
+            else:
+                assert db.shape == (cfg.m, cfg.n), (db.shape, (cfg.m, cfg.n))
+                assert db.dtype == jnp.uint8
+                if self._row_pad:
+                    db = jnp.pad(jnp.asarray(db),
+                                 ((0, self._row_pad), (0, 0)))
+                db = jax.device_put(db, self._db_sharding)
         else:
             self.n_shards = 1
+            if isinstance(db, np.ndarray):
+                db = jnp.asarray(db)
+            assert db.shape == (cfg.m, cfg.n), (db.shape, (cfg.m, cfg.n))
+            assert db.dtype == jnp.uint8
         self.db = db
         self._a_mat: jax.Array | None = None   # lazy; immutable per config
         self._answer_fn = None                 # cached shard_map'd hot path
         self._hint_fn = None
         self._delta_fn = None
+
+    def _assemble_row_shards(self, shards) -> jax.Array:
+        """Place per-shard host row slices device-by-device and assemble.
+
+        shards: S host arrays of shape (m_pad/S, n) u8 in row order (row
+        padding, if any, lives in the last slice).  Each slice transfers to
+        exactly the device that owns its rows under the P(axes, None)
+        sharding — the global array exists only as the assembled sharded
+        view, never on one device.
+        """
+        m_pad = self.cfg.m + self._row_pad
+        rows_per = m_pad // self.n_shards
+        assert len(shards) == self.n_shards, (len(shards), self.n_shards)
+        shape = (m_pad, self.cfg.n)
+        arrays = []
+        dmap = self._db_sharding.addressable_devices_indices_map(shape)
+        for dev, idx in dmap.items():
+            lo = idx[0].start or 0
+            block = np.ascontiguousarray(shards[lo // rows_per])
+            assert block.shape == (rows_per, self.cfg.n), (
+                block.shape, (rows_per, self.cfg.n))
+            assert block.dtype == np.uint8
+            arrays.append(jax.device_put(block, dev))
+        return jax.make_array_from_single_device_arrays(
+            shape, self._db_sharding, arrays)
 
     @property
     def a_matrix(self) -> jax.Array:
@@ -301,9 +356,16 @@ class PIRClient:
 # ---------------------------------------------------------------------------
 
 def make_config(m: int, n: int, *, impl: str = "auto",
-                q_switch: int | None = 1 << 16) -> PIRConfig:
+                q_switch: int | None = 1 << 16,
+                a_seed: int = 7) -> PIRConfig:
+    """PIRConfig for an (m, n) database with auto-chosen LWE parameters.
+
+    ``a_seed`` seeds the public LWE matrix A (shared by server and every
+    client; `PirRagSystem.build` derives it from its build seed on a stream
+    independent of cluster seeding).
+    """
     params = lwe.choose_params(n, want_p=256, q_switch=q_switch)
-    return PIRConfig(m=m, n=n, params=params, impl=impl)
+    return PIRConfig(m=m, n=n, params=params, impl=impl, a_seed=a_seed)
 
 
 def server_flops(cfg: PIRConfig, batch: int = 1) -> int:

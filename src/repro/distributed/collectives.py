@@ -15,6 +15,14 @@ we want the communication pattern pinned down rather than inferred:
     queries replicate, every shard answers its own row slice.  ZERO
     collectives on the hot path — the modular GEMM's contraction dim (the
     cluster axis) is never split, so per-shard answers are already final.
+  * ``corpus_shard_kmeans`` / ``row_shard_assign`` / ``row_shard_sqdist`` —
+    the sharded OFFLINE build: the corpus row-shards over the same mesh the
+    serving DB uses.  K-means runs the block-canonical core from
+    `core.clustering` per shard with one tiled all-gather of the per-block
+    partial sums per Lloyd iteration (gather + fixed-order local reduce, not
+    psum, so the float combine order is pinned and the fit is bit-identical
+    to the single-device build); assignment/distance sweeps are row-local
+    and collective-free like the serving GEMM.
 
 Each has an 8-device subprocess test (tests/test_sharded.py /
 tests/test_sharded_pir.py) asserting bitwise/allclose equality with the
@@ -181,6 +189,99 @@ def bucket_shard_gemm(mesh: Mesh, axes: tuple[str, ...]):
     spec = P(axes, None, None)
     return jax.jit(shard_map(local, mesh=mesh, in_specs=(spec, spec),
                              out_specs=spec))
+
+
+def _shard_count(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    """Shard count via the one shared axis rule (`resolve_mesh_axes`)."""
+    from repro.core import clustering
+    return clustering.resolve_mesh_axes(mesh, axes)[1]
+
+
+@functools.lru_cache(maxsize=None)
+def corpus_shard_kmeans(mesh: Mesh, axes: tuple[str, ...], *, k: int,
+                        iters: int, n_blocks: int, n: int,
+                        impl: str = "xla"):
+    """Returns fit(key, x, valid): the corpus-sharded K-means fit.
+
+    x: (N_pad, d) f32 sharded P(axes, None) — N_pad a multiple of
+    ``n_blocks``, which is a multiple of the shard count, so every device
+    owns a contiguous run of canonical blocks.  valid: (N_pad,) bool sharded
+    P(axes) masks padding rows; ``n`` is the true corpus size.  key is
+    replicated.  Returns (centroids (k, d) replicated, assignment (N_pad,)
+    i32 sharded P(axes), inertia () replicated).
+
+    Each device runs `clustering._kmeans_core` on its row slice: kmeans++
+    draws sample from the all-gathered global D² vector with the replicated
+    key (every shard picks the identical index; the chosen row travels via
+    an exact masked-gather psum), and each Lloyd iteration all-gathers the
+    per-block partial sums/counts and reduces them locally in canonical
+    block order — the bit-identity contract with the single-device
+    `clustering.kmeans_fit(..., n_blocks=n_blocks)`.
+    """
+    from repro.core import clustering
+
+    shards = _shard_count(mesh, axes)
+    assert n_blocks % shards == 0, (n_blocks, shards)
+
+    def local(key, x_shard, valid_shard):
+        return clustering._kmeans_core(
+            key, x_shard, valid_shard, k=k, iters=iters,
+            blocks=n_blocks // shards, n=n, impl=impl, axis=axes)
+
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(), P(axes, None), P(axes)),
+                             out_specs=(P(), P(axes), P()),
+                             check_rep=False))
+
+
+@functools.lru_cache(maxsize=None)
+def row_shard_assign(mesh: Mesh, axes: tuple[str, ...], *,
+                     impl: str = "xla"):
+    """Returns assign(x, cents): the row-sharded nearest-centroid sweep.
+
+    x: (N_pad, d) f32 sharded P(axes, None); cents: (k, d) f32 replicated.
+    Returns (assignment (N_pad,) i32, min-d² (N_pad,) f32) sharded P(axes).
+    Assignment is row-local, so there are zero collectives, and each shard
+    dispatches `kernels.ops.kmeans_assign` — the fused Pallas distance+
+    argmin kernel when ``impl`` routes to it — over its own slice.
+    """
+    from repro.kernels import ops
+
+    def local(x_shard, cents):
+        return ops.kmeans_assign(x_shard, cents, impl=impl)
+
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(axes, None), P()),
+                             out_specs=(P(axes), P(axes))))
+
+
+@functools.lru_cache(maxsize=None)
+def row_shard_sqdist(mesh: Mesh, axes: tuple[str, ...], *, n_blocks: int):
+    """Returns d2(x, cents): row-sharded block-canonical squared distances.
+
+    x: (N_pad, d) f32 sharded P(axes, None), N_pad a multiple of
+    ``n_blocks``; cents: (k, d) f32 replicated.  Returns (N_pad, k) f32
+    sharded P(axes, None).  Each shard runs the same per-block GEMM the
+    host path uses (`clustering._blocked_sqdist_host` body), zero
+    collectives — the distances `balanced_assign` consumes are bit-stable
+    across mesh layouts.
+    """
+    from repro.core import clustering
+
+    shards = _shard_count(mesh, axes)
+    assert n_blocks % shards == 0, (n_blocks, shards)
+
+    def local(x_shard, cents):
+        rows, d = x_shard.shape
+        blocks = n_blocks // shards
+        xb = x_shard.reshape(blocks, rows // blocks, d)
+        return jax.lax.map(
+            lambda b: clustering.pairwise_sqdist(b, cents), xb
+        ).reshape(rows, cents.shape[0])
+
+    return jax.jit(shard_map(local, mesh=mesh,
+                             in_specs=(P(axes, None), P()),
+                             out_specs=P(axes, None)))
 
 
 def ring_psum(mesh: Mesh, axis: str):

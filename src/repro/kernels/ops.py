@@ -319,7 +319,19 @@ def bucketed_modmatmul(dbs: Sequence[jax.Array], qs: jax.Array, *,
 
 def kmeans_assign(x: jax.Array, c: jax.Array, *, impl: str = "auto",
                   block: tuple[int, int] = (256, 512)):
-    """Fused nearest-centroid assignment: (assign (N,) i32, min_d2 (N,))."""
+    """Fused nearest-centroid assignment: (assign (N,) i32, min_d2 (N,)).
+
+    x: (N, d) f32 points; c: (k, d) f32 centroids.  impl="pallas" fuses
+    distance + argmin on the MXU without materializing the (N, k) distance
+    matrix in HBM; "xla" is the unfused oracle (identical results).
+
+    This is the assignment kernel of the offline build's K-means: the
+    block-canonical Lloyd core (`core.clustering._block_stats`) calls it
+    per corpus block, both on the host path and inside the `shard_map`'d
+    sharded build (`collectives.corpus_shard_kmeans` /
+    `row_shard_assign`), so the same fused kernel serves every layout —
+    one call sees only its (rows_local/blocks, d) slice either way.
+    """
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "xla":

@@ -46,9 +46,12 @@ def main():  # pragma: no cover - exercised by examples/tests
                          "the batch-PIR subsystem (one bucketed pass)")
     ap.add_argument("--top-k", type=int, default=5)
     ap.add_argument("--shard", type=int, default=0,
-                    help="row-shard the server DB over this many local "
-                         "devices (0 = single-device; zero-collective "
-                         "answer path, bit-identical results)")
+                    help="shard over this many local devices (0 = single-"
+                         "device).  Covers the OFFLINE build too: K-means "
+                         "fits mesh-parallel and the DB is packed and "
+                         "placed shard-by-shard (docs/architecture.md), "
+                         "then served through the zero-collective answer "
+                         "path — results bit-identical either way")
     args = ap.parse_args()
 
     from repro.core import pipeline

@@ -73,6 +73,7 @@ class DeadlineBatcher:
         self.queue: deque[Request] = deque()
 
     def submit(self, req: Request):
+        """Append an arriving request (FIFO tail)."""
         self.queue.append(req)
 
     def requeue(self, req: Request):
@@ -90,6 +91,7 @@ class DeadlineBatcher:
         self.queue.extendleft(reversed(list(reqs)))
 
     def ready(self, now: float) -> bool:
+        """True when a batch should be cut: size or head-age trigger."""
         if not self.queue:
             return False
         if len(self.queue) >= self.max_batch:
@@ -98,6 +100,7 @@ class DeadlineBatcher:
         return age_ms >= self.deadline_ms
 
     def cut(self) -> list[Request]:
+        """Dequeue up to max_batch requests in arrival order."""
         batch = []
         while self.queue and len(batch) < self.max_batch:
             batch.append(self.queue.popleft())
@@ -131,6 +134,7 @@ class PIRServeLoop:
 
     @property
     def epoch(self) -> int:
+        """Published epoch requests are admitted at (0 for static corpora)."""
         return self.live.epoch if self.live is not None else 0
 
     def submit(self, rid: int, query_emb: np.ndarray, *, top_k: int = 5,
@@ -141,6 +145,7 @@ class PIRServeLoop:
                                     multi_probe=multi_probe))
 
     def submit_mutation(self, mut):
+        """Queue a journal record; folded into an epoch at the next tick."""
         assert self.live is not None, "mutations need a LiveIndex"
         self.mutations.append(mut)
 

@@ -65,6 +65,7 @@ class HintPatch:
 
     @property
     def is_full(self) -> bool:
+        """True for rebuild epochs: the patch carries a whole (m, k) hint."""
         return self.full_hint is not None
 
     @property
@@ -98,6 +99,7 @@ class EpochLog:
         self._patches: list[HintPatch] = []
 
     def publish(self, patch: HintPatch) -> int:
+        """Append the next epoch's patch; returns the new head epoch."""
         assert patch.from_epoch == self.epoch, (patch.from_epoch, self.epoch)
         assert patch.to_epoch == self.epoch + 1
         self._patches.append(patch)
@@ -119,6 +121,7 @@ class EpochLog:
         return chain
 
     def check_fresh(self, epoch: int):
+        """Raise StaleEpochError unless `epoch` is the published head."""
         if epoch != self.epoch:
             raise StaleEpochError(epoch, self.epoch)
 
@@ -138,6 +141,7 @@ class HintCache:
         self._a_mat = lwe.gen_public_matrix(cfg.a_seed, cfg.n, cfg.params.k)
 
     def apply(self, patch: HintPatch):
+        """Patch the cached (m, k) u32 hint one epoch forward (exact)."""
         if patch.from_epoch != self.epoch:
             raise StaleEpochError(self.epoch, patch.from_epoch)
         if patch.is_full and patch.cfg is not None and patch.cfg != self.cfg:
@@ -158,4 +162,5 @@ class HintCache:
         return self.bytes_downloaded - before
 
     def client(self) -> pir.PIRClient:
+        """A PIRClient snapshotting this cache's current cfg + hint."""
         return pir.PIRClient(self.cfg, self.hint)

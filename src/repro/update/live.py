@@ -84,6 +84,13 @@ class LiveIndex:
         # _commit_full supplies the then-current id set itself
         self._rebuild_kwargs.pop("doc_ids", None)
         self._rebuild_kwargs.setdefault("n_clusters", system.db.n)
+        # Full rebuilds re-run the ENTIRE offline build; a sharded system
+        # must rebuild through the same sharded path (mesh-parallel K-means,
+        # per-shard packing) rather than fall back to a host-side build that
+        # would then reshard — at scale the rebuild epoch is exactly where
+        # the single-host path stops fitting.
+        self._rebuild_kwargs.setdefault("mesh", system.mesh)
+        self._rebuild_kwargs.setdefault("mesh_axes", system.mesh_axes)
         self.commits: list[CommitStats] = []
 
         ids = (np.arange(len(texts)) if doc_ids is None
@@ -102,6 +109,13 @@ class LiveIndex:
     def build(cls, texts, embeddings, *, n_clusters: int,
               max_pad_fraction: float = 0.95, doc_ids=None,
               **build_kwargs) -> "LiveIndex":
+        """Offline-build a PirRagSystem and wrap it as a live index.
+
+        texts: N byte strings; embeddings: (N, d) f32; extra kwargs
+        (incl. ``mesh=`` for a sharded build) forward to
+        `PirRagSystem.build` AND are replayed on every full rebuild, so a
+        sharded index rebuilds through the sharded path.
+        """
         system = pipeline.PirRagSystem.build(
             texts, embeddings, n_clusters=n_clusters, doc_ids=doc_ids,
             **build_kwargs)
@@ -113,28 +127,35 @@ class LiveIndex:
 
     @property
     def epoch(self) -> int:
+        """The published epoch number (0 before any commit)."""
         return self.epochs.epoch
 
     @property
     def n_docs(self) -> int:
+        """Documents in the PUBLISHED epoch (pending mutations excluded)."""
         return len(self._docs)
 
     def pad_fraction(self) -> float:
+        """Current zero-padding share of the (m, n) matrix (rebuild gauge)."""
         db = self.system.db
         return 1.0 - sum(self._used.values()) / float(db.m * db.n)
 
     def doc_ids(self) -> list[int]:
+        """Sorted external doc ids of the published epoch."""
         return sorted(self._docs)
 
     # -- mutation intake -----------------------------------------------------
 
     def insert(self, doc_id: int, text: bytes, emb: np.ndarray):
+        """Journal an insert (emb: (d,) f32); visible at the next commit."""
         self.journal.append(journal_lib.insert(doc_id, text, emb))
 
     def delete(self, doc_id: int):
+        """Journal a delete; visible at the next commit."""
         self.journal.append(journal_lib.delete(doc_id))
 
     def replace(self, doc_id: int, text: bytes, emb: np.ndarray):
+        """Journal a replace (emb: (d,) f32); visible at the next commit."""
         self.journal.append(journal_lib.replace(doc_id, text, emb))
 
     # -- commit --------------------------------------------------------------
@@ -293,5 +314,6 @@ class LiveIndex:
         return self.system.query(query_emb, **kwargs)
 
     def query_batch(self, query_embs: np.ndarray, *, epoch: int, **kwargs):
+        """Epoch-checked batched query ((B, d) f32; kwargs to the system)."""
         self.check_epoch(epoch)
         return self.system.query_batch(query_embs, **kwargs)

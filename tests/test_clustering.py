@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import given, settings, st
 from repro.core import clustering
 
 
@@ -65,6 +66,78 @@ def test_balanced_assign_infeasible_cap_raises():
     x, _, _ = _blob_data(k=2, per=10)
     with pytest.raises(ValueError):
         clustering.balanced_assign(x, x[:2], cap=5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 12),
+       slack=st.integers(0, 40))
+def test_balanced_assign_cap_property(seed, k, slack):
+    """Cap is respected and every doc lands somewhere, for any feasible cap."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(k, 160))
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    cents = rng.standard_normal((k, 8)).astype(np.float32)
+    cap = -(-n // k) + slack                     # ceil(n/k) is always feasible
+    out = clustering.balanced_assign(x, cents, cap)
+    counts = np.bincount(out, minlength=k)
+    assert counts.max() <= cap
+    assert counts.sum() == n
+    assert out.min() >= 0 and out.max() < k
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_balanced_assign_permutation_stable(seed):
+    """The assignment is a function of the doc SET, not of input order.
+
+    Shuffling the rows and un-shuffling the output must reproduce the
+    original assignment: the greedy walk orders docs by their distances
+    (continuous random data → no ties), never by input position.
+    """
+    rng = np.random.default_rng(seed)
+    n, k = int(rng.integers(30, 120)), 6
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    cents = rng.standard_normal((k, 8)).astype(np.float32)
+    cap = -(-n // k) + 2
+    base = clustering.balanced_assign(x, cents, cap)
+    perm = rng.permutation(n)
+    shuffled = clustering.balanced_assign(x[perm], cents, cap)
+    assert np.array_equal(shuffled, base[perm])
+
+
+def test_balanced_build_bounds_downlink_bytes():
+    """`max_cluster_bytes` — the PIR downlink driver — never exceeds the
+    capped bound: a full cluster of cap docs at the longest text length."""
+    from repro.core import chunking, pipeline
+    from repro.data import corpus as corpus_lib
+    corp = corpus_lib.make_corpus(7, 240, emb_dim=16, n_topics=6)
+    bf, k = 1.25, 8
+    sys_b = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                        n_clusters=k, impl="xla", seed=0,
+                                        balance_factor=bf)
+    cap = int(np.ceil(len(corp.texts) / k * bf))
+    assert np.bincount(sys_b.assignment, minlength=k).max() <= cap
+    bound = 4 + cap * chunking.record_bytes(
+        corp.embeddings.shape[1], max(len(t) for t in corp.texts))
+    assert int(sys_b.db.used_bytes.max()) <= bound
+    # m (the per-query downlink row count) is the capped bound rounded up
+    # to the chunk granule, so downlink_bytes is bounded too
+    chunk = sys_b.db.chunk_size
+    assert sys_b.db.m <= -(-bound // chunk) * chunk
+    assert sys_b.cfg.downlink_bytes <= 2 * (-(-bound // chunk) * chunk)
+
+
+def test_balanced_assign_d2_override_matches_internal():
+    """The build-path d2= override reproduces the internal distance pass."""
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((80, 8)).astype(np.float32)
+    cents = rng.standard_normal((5, 8)).astype(np.float32)
+    d2 = ((x * x).sum(1, keepdims=True) - 2 * x @ cents.T
+          + (cents * cents).sum(1)[None, :])
+    a = clustering.balanced_assign(x, cents, cap=20)
+    b = clustering.balanced_assign(x, cents, cap=20, d2=d2)
+    # same distances in -> the greedy walk is deterministic -> same out
+    assert np.array_equal(a, b)
 
 
 def test_empty_cluster_keeps_centroid():

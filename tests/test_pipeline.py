@@ -71,6 +71,47 @@ def test_batched_matches_sequential(system_and_corpus):
         assert [d for d, _, _ in res] == [d for d, _, _ in solo]
 
 
+def test_build_seed_streams_are_independent():
+    """One build seed, TWO independent fold_in streams (regression pin).
+
+    kmeans++ seeding and LWE setup (the public matrix A's seed) must not
+    share a PRNG stream: a shared key would let a clustering-knob change
+    silently re-derive A — and with it every hint, query and cached client
+    state.  Pins both stream values for seed 0/1 and asserts clustering
+    knobs cannot move `a_seed`.
+    """
+    k_km, a_seed = pipeline._derive_build_streams(0)
+    assert np.asarray(k_km).tolist() == [1797259609, 2579123966]
+    assert a_seed == 1404501984
+    assert pipeline._derive_build_streams(1)[1] == 879036028
+
+    corp = corpus_lib.make_corpus(5, 150, emb_dim=16, n_topics=4)
+    base = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                       n_clusters=4, impl="xla", seed=0)
+    assert base.cfg.a_seed == 1404501984
+    # changing cluster seeding inputs must leave key material untouched
+    for kw in (dict(n_clusters=6), dict(kmeans_iters=3),
+               dict(n_clusters=4, balance_factor=1.5)):
+        other = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                            impl="xla", seed=0,
+                                            **{"n_clusters": 4, **kw})
+        assert other.cfg.a_seed == base.cfg.a_seed
+        if other.cfg.n == base.cfg.n:      # A's shape is (n_clusters, k)
+            assert np.array_equal(np.asarray(other.server.a_matrix),
+                                  np.asarray(base.server.a_matrix))
+    # ... and a different build seed moves BOTH streams
+    moved = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
+                                        n_clusters=4, impl="xla", seed=1)
+    assert moved.cfg.a_seed == 879036028
+    assert not np.array_equal(moved.centroids, base.centroids)
+    # the kmeans stream is exactly the pinned fold_in stream
+    from repro.core import clustering
+    km = clustering.kmeans_fit(k_km, corp.embeddings.astype(np.float32),
+                               k=4, iters=25,
+                               n_blocks=clustering.BUILD_BLOCKS)
+    assert np.array_equal(np.asarray(km.centroids), base.centroids)
+
+
 def test_balanced_build_reduces_downlink():
     corp = corpus_lib.make_corpus(3, 200, emb_dim=16, n_topics=4)
     plain = pipeline.PirRagSystem.build(corp.texts, corp.embeddings,
