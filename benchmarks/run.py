@@ -107,12 +107,38 @@ def main() -> None:
         print(f"serve_{r['engine']}_mut{r['mutate_every']},"
               f"{1e6 / r['throughput_qps']:.0f},"
               f"qps={r['throughput_qps']:.1f};p50={r['p50_ms']:.0f}ms;"
-              f"p99={r['p99_ms']:.0f}ms;retries={r['retries']}")
+              f"p99={r['p99_ms']:.0f}ms;retries={r['retries']};"
+              f"qdepth={r['queue_depth_peak']}")
     checks_v = vres["checks"]
     results["serve"] = vres
 
+    # ---- open-loop traffic: SLO attainment, hint chains, admission ----------
+    from benchmarks import traffic_bench
+    tres = traffic_bench.run(fast=args.fast)
+    for r in tres["rows"]:
+        print(f"traffic_load{r['load_factor']},"
+              f"{1e6 / max(r['served_qps'], 1e-9):.0f},"
+              f"attain={r['attainment']:.3f};p50={r['p50_ms']:.0f}ms;"
+              f"served_p99={r['served_p99_ms']:.0f}ms;shed={r['shed']}")
+    ch = tres["chain"]
+    print(f"traffic_hint_chain,{ch['sync_bytes']},"
+          f"frac_of_full={ch['frac_of_full']:.4f};"
+          f"chain={ch['chain_patches']};raw={ch['raw_patches']}")
+    checks_t = tres["checks"]
+    results["traffic"] = tres
+
+    # ---- Graph-PIR sketch tuning sweep --------------------------------------
+    from benchmarks import graph_bench
+    gres = graph_bench.run(fast=args.fast)
+    for r in gres["rows"]:
+        print(f"graph_sketch{r['sketch_bits']},{r['query_s'] * 1e6:.0f},"
+              f"recall10={r['recall10']:.3f};rec_bytes={r['record_bytes']}")
+    checks_g = gres["checks"]
+    results["graph"] = gres
+
     print("\n# paper-claim validation")
-    for c in checks2 + checks3 + checks_b + checks_s + checks_bld + checks_v:
+    for c in (checks2 + checks3 + checks_b + checks_s + checks_bld
+              + checks_v + checks_t + checks_g):
         print("#", c)
 
     with open(os.path.join(args.out, "bench_results.json"), "w") as f:
@@ -128,8 +154,11 @@ def main() -> None:
                        batchpir=bres,
                        sharded=sres,
                        build=bld,
-                       serve=vres), f, indent=1, default=float)
-    all_checks = checks2 + checks3 + checks_b + checks_s + checks_bld + checks_v
+                       serve=vres,
+                       traffic=tres,
+                       graph=gres), f, indent=1, default=float)
+    all_checks = (checks2 + checks3 + checks_b + checks_s + checks_bld
+                  + checks_v + checks_t + checks_g)
     n_fail = sum(1 for c in all_checks if c.startswith("FAIL"))
     print(f"\n# {len(all_checks) - n_fail} claims PASS, {n_fail} FAIL")
 

@@ -49,6 +49,7 @@ def _drive(loop, corp, *, n_req: int, mutate_every: int, max_batch: int,
     retries_warm = loop.stale_retries
 
     arrivals: dict[int, float] = {}
+    depth_peak, age_peak_ms = 0, 0.0
     t0 = time.perf_counter()
     for rid in range(n_req):
         arrivals[rid] = time.perf_counter()
@@ -57,6 +58,11 @@ def _drive(loop, corp, *, n_req: int, mutate_every: int, max_batch: int,
             d = int(rng.integers(0, n_docs))
             loop.submit_mutation(journal_lib.replace(
                 d, f"refreshed {d}@{rid}".encode(), corp.embeddings[d]))
+        # backlog observability (ISSUE 6): peak queue depth and peak head
+        # age, sampled at the worst instant — just before the tick serves
+        depth_peak = max(depth_peak, loop.batcher.depth)
+        age_peak_ms = max(age_peak_ms,
+                          loop.batcher.oldest_age_ms(time.perf_counter()))
         loop.tick()
     loop.drain()
     wall = time.perf_counter() - t0
@@ -71,6 +77,8 @@ def _drive(loop, corp, *, n_req: int, mutate_every: int, max_batch: int,
                 p99_ms=float(np.percentile(lat_ms, 99)),
                 retries=loop.stale_retries - retries_warm,
                 epochs=loop.epoch,
+                queue_depth_peak=depth_peak,
+                oldest_age_peak_ms=round(age_peak_ms, 3),
                 _sig=sig)
 
 
@@ -155,7 +163,9 @@ def main() -> None:
         print(f"serve_{r['engine']}_mut{r['mutate_every']},"
               f"{1e6 / r['throughput_qps']:.0f},"
               f"qps={r['throughput_qps']:.1f};p50={r['p50_ms']:.0f}ms;"
-              f"p99={r['p99_ms']:.0f}ms;retries={r['retries']}")
+              f"p99={r['p99_ms']:.0f}ms;retries={r['retries']};"
+              f"qdepth={r['queue_depth_peak']};"
+              f"qage={r['oldest_age_peak_ms']:.1f}ms")
     for c in res["checks"]:
         print("#", c)
 

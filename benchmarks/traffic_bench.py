@@ -1,0 +1,274 @@
+"""Open-loop traffic benchmark: SLO attainment, hint delivery, admission.
+
+Three experiments over the live-index + pipelined-engine stack (ISSUE 6):
+
+load sweep      Calibrate the engine's sustainable closed-loop throughput,
+                then offer open-loop Poisson traffic at 0.5×/0.8×/1.2× of
+                it (mutations riding along) and report SLO summaries —
+                attainment at the deadline, p50/p99, and the per-request
+                component breakdown (queue/encode/gemm/decode/hint-sync).
+
+hint delivery   A client stranded 8 epochs behind a log compacted at
+                ``compact_every=4`` downloads the compacted chain — two
+                segments instead of eight patches — decodes bit-identically
+                to the live hint, and pays ≤10% of a full hint re-download.
+
+admission       At 1.2× sustainable the queue cannot drain: the controller
+                sheds the tail, defers commits under backlog and deepens
+                the pipeline.  The checks are structural (exact
+                accounting: served + shed == offered; served-tail finite)
+                rather than wall-clock thresholds.
+
+    PYTHONPATH=src python -m benchmarks.traffic_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+LOAD_FACTORS = (0.5, 0.8, 1.2)
+
+
+def _mutator_for(corp):
+    """Same-embedding replaces: steady patch traffic, stable clustering."""
+    from repro.update import journal as journal_lib
+    n = len(corp.texts)
+
+    def mutator(rng):
+        d = int(rng.integers(n))
+        return journal_lib.replace(d, f"refresh {d}".encode(),
+                                   corp.embeddings[d])
+    return mutator
+
+
+def _make_loop(live, shape):
+    from repro.serve import PipelinedServeLoop
+    return PipelinedServeLoop(live, max_batch=shape["max_batch"],
+                              deadline_ms=shape["loop_deadline_ms"],
+                              depth=2, donate=True, seed=0)
+
+
+def _warmup(live, corp, shape, mutator):
+    """Compile every GEMM shape the sweep will hit before any timing.
+
+    The answer GEMM's width is the batch width, and XLA compiles per
+    width: deadline cuts produce every width from 1 to max_batch (for
+    both probe groups), so an unwarmed sweep measures the compiler, not
+    the engine.  One commit warms the delta-staging shapes too.
+    """
+    loop = _make_loop(live, shape)
+    rid = 10_000_000
+    for mp in (1, 4):
+        for width in range(1, shape["max_batch"] + 1):
+            for _ in range(width):
+                loop.submit(rid, corp.embeddings[rid % len(corp.texts)],
+                            multi_probe=mp)
+                rid += 1
+            loop.drain()
+    loop.submit_mutation(mutator(np.random.default_rng(99)))
+    loop.drain()
+
+
+def _calibrate(live, corp, shape, mutator) -> tuple[float, float]:
+    """Sustainable open-loop qps for THIS workload mix; and commit cost.
+
+    Closed-loop service rate over the sweep's own 75/25 single/multi-probe
+    mix, derated by the fraction of each second the configured mutation
+    rate spends inside epoch commits (measured, not assumed — a commit
+    stages delta GEMMs and batch-PIR patches, which is serving downtime).
+    """
+    loop = _make_loop(live, shape)
+    rng = np.random.default_rng(0)
+    n_docs = len(corp.texts)
+    n = shape["calibrate_n"]
+    t0 = time.perf_counter()
+    for rid in range(n):
+        loop.submit(rid, corp.embeddings[int(rng.integers(n_docs))],
+                    multi_probe=4 if rid % 4 == 0 else 1)
+        loop.tick()
+    loop.drain()
+    mixed_qps = n / (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    loop.submit_mutation(mutator(rng))
+    loop.drain()
+    commit_s = time.perf_counter() - t0
+    # raw mixed rate EXCLUDES commit downtime, so it upper-bounds what the
+    # mutation-carrying sweep can actually sustain: offering 1.2× of it is
+    # overload by construction, while the derated estimate below is the
+    # honest "sustainable with commits" number the report carries
+    frac_serving = max(0.2, 1.0 - shape["mutation_qps"] * commit_s)
+    return mixed_qps, mixed_qps * frac_serving, commit_s
+
+
+def _run_point(live, corp, shape, qps: float, factor: float,
+               mutator) -> dict:
+    from repro.traffic import AdmissionController, OpenLoopDriver, TrafficSpec
+    loop = _make_loop(live, shape)
+    ctl = AdmissionController(max_queue=shape["max_queue"],
+                              max_depth=4)
+    # same seed at every factor: independent arrival streams mean the
+    # mutation schedule is IDENTICAL across load points (same commit
+    # pressure), only the query rate changes
+    spec = TrafficSpec(qps=qps, duration_s=shape["duration_s"],
+                       n_sessions=shape["n_sessions"],
+                       probe_mix=((1, 0.75), (4, 0.25)),
+                       staleness_tolerance=shape["staleness_tolerance"],
+                       mutation_qps=shape["mutation_qps"],
+                       seed=7)
+    res = OpenLoopDriver(loop, corp.embeddings, spec, mutator=mutator,
+                         controller=ctl).run()
+    s = res.summary(deadline_ms=shape["deadline_ms"])
+    s["load_factor"] = factor
+    served = [r for r in res.records if r.outcome == "served"]
+    lat = sorted(r.latency_ms for r in served)
+    s["served_p99_ms"] = (round(lat[int(np.ceil(0.99 * len(lat))) - 1], 3)
+                          if lat else 0.0)
+    return s
+
+
+def _chain_demo(fast: bool) -> dict:
+    """8 commits, compact_every=4: the stranded client's downlink."""
+    from repro.data import corpus as corpus_lib
+    from repro.update import HintCache, LiveIndex
+    import jax.numpy as jnp
+
+    n_docs = 800 if fast else 2000
+    n_clusters = 64 if fast else 128
+    corp = corpus_lib.make_corpus(1, n_docs, emb_dim=32,
+                                  n_topics=n_clusters)
+    live = LiveIndex.build(corp.texts, corp.embeddings,
+                           n_clusters=n_clusters, impl="xla",
+                           kmeans_iters=6, compact_every=4)
+    h0, cfg0 = np.asarray(live.system.hint), live.system.cfg
+    rng = np.random.default_rng(2)
+    commits = 0
+    while commits < 8:
+        for _ in range(2):
+            d = int(rng.integers(n_docs))
+            live.replace(d, f"v{commits} {d}".encode(), corp.embeddings[d])
+        if live.commit() is not None:
+            commits += 1
+    log = live.epochs
+    chain = log.chain_since(0)
+    raw = log.patches_since(0)
+    cache = HintCache(h0, cfg0, epoch=0)
+    sync_bytes = cache.sync(log)
+    identical = bool(jnp.array_equal(jnp.asarray(cache.hint),
+                                     live.system.hint))
+    return dict(epochs_behind=log.epoch,
+                chain_patches=len(chain),
+                raw_patches=len(raw),
+                chain_bytes=log.chain_bytes(0),
+                raw_bytes=sum(p.wire_bytes for p in raw),
+                sync_bytes=sync_bytes,
+                full_hint_bytes=cfg0.hint_bytes,
+                frac_of_full=round(sync_bytes / cfg0.hint_bytes, 4),
+                bit_identical=identical,
+                stored_bytes=log.stored_bytes)
+
+
+def run(*, fast: bool = False) -> dict:
+    from repro.data import corpus as corpus_lib
+    from repro.update import LiveIndex
+
+    if fast:
+        shape = dict(n_docs=1500, n_clusters=96, emb_dim=48, max_batch=16,
+                     calibrate_n=96, duration_s=2.0, n_sessions=16,
+                     mutation_qps=1.0, staleness_tolerance=2, max_queue=24,
+                     loop_deadline_ms=10.0, deadline_ms=400.0,
+                     kmeans_iters=8)
+    else:
+        shape = dict(n_docs=4000, n_clusters=256, emb_dim=48, max_batch=32,
+                     calibrate_n=160, duration_s=3.0, n_sessions=32,
+                     mutation_qps=1.0, staleness_tolerance=2, max_queue=48,
+                     loop_deadline_ms=10.0, deadline_ms=400.0,
+                     kmeans_iters=8)
+    corp = corpus_lib.make_corpus(0, shape["n_docs"],
+                                  emb_dim=shape["emb_dim"],
+                                  n_topics=shape["n_clusters"])
+    live = LiveIndex.build(corp.texts, corp.embeddings,
+                           n_clusters=shape["n_clusters"], impl="xla",
+                           kmeans_iters=shape["kmeans_iters"],
+                           compact_every=4)
+    live.system.enable_batch(kappa=4)
+    mutator = _mutator_for(corp)
+
+    _warmup(live, corp, shape, mutator)
+    mixed_qps, sustainable, commit_s = _calibrate(live, corp, shape, mutator)
+    # sub-capacity points are scaled from the derated (with-commits)
+    # sustainable rate; the overload point from the RAW mixed rate, which
+    # commit downtime makes unsustainable by construction
+    rows = [_run_point(live, corp, shape,
+                       (sustainable if f < 1.0 else mixed_qps) * f,
+                       f, mutator)
+            for f in LOAD_FACTORS]
+    chain = _chain_demo(fast)
+
+    low, over = rows[0], rows[-1]
+    accounted = all(r["served"] + r["shed"] == r["offered"] for r in rows)
+    checks = [
+        ("PASS" if low["attainment"] >= 0.9 else "FAIL")
+        + ": open-loop SLO attainment >=0.9 at 0.5x sustainable load "
+        + "(measured %.3f at %.0f qps offered, deadline %dms)"
+        % (low["attainment"], low["offered_qps"], int(low["deadline_ms"])),
+        ("PASS" if chain["frac_of_full"] <= 0.10 and chain["bit_identical"]
+         else "FAIL")
+        + ": client 8 epochs stale syncs a compacted chain (%d segments vs "
+          "%d raw patches) costing %.1f%% of a full hint re-download, "
+          "decoding bit-identically"
+        % (chain["chain_patches"], chain["raw_patches"],
+           100 * chain["frac_of_full"]),
+        ("PASS" if over["shed"] > 0 and accounted else "FAIL")
+        + ": at 1.2x sustainable the admission controller sheds load "
+          "(%d shed, %d deferred commits) and every offered request is "
+          "accounted served or shed"
+        % (over["shed"], over["admission"]["deferred_commits"]),
+        ("PASS" if over["served_p99_ms"] < float("inf")
+         and over["served_p99_ms"] > 0 else "FAIL")
+        + ": served-request p99 stays finite under overload "
+          "(%.0f ms with the queue capped at %d)"
+        % (over["served_p99_ms"], shape["max_queue"]),
+    ]
+    return dict(rows=rows, chain=chain, checks=checks, shape=shape,
+                mixed_qps=round(mixed_qps, 1),
+                sustainable_qps=round(sustainable, 1),
+                commit_s=round(commit_s, 4))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    res = run(fast=args.fast)
+    print("name,us_per_call,derived")
+    print(f"traffic_sustainable,{1e6 / res['sustainable_qps']:.0f},"
+          f"sustainable_qps={res['sustainable_qps']:.1f};"
+          f"mixed_qps={res['mixed_qps']:.1f};"
+          f"commit_s={res['commit_s']:.3f}")
+    for r in res["rows"]:
+        c = r["components"]
+        print(f"traffic_load{r['load_factor']},"
+              f"{1e6 / max(r['served_qps'], 1e-9):.0f},"
+              f"attain={r['attainment']:.3f};p50={r['p50_ms']:.0f}ms;"
+              f"served_p99={r['served_p99_ms']:.0f}ms;"
+              f"shed={r['shed']};retries={r['stale_retries']};"
+              f"queue={c['queue_ms']['mean']:.1f}ms;"
+              f"gemm={c['gemm_ms']['mean']:.2f}ms;"
+              f"hint={c['hint_sync_ms']['mean']:.3f}ms")
+    ch = res["chain"]
+    print(f"traffic_hint_chain,{ch['sync_bytes']},"
+          f"frac_of_full={ch['frac_of_full']:.4f};"
+          f"chain={ch['chain_patches']};raw={ch['raw_patches']};"
+          f"bit_identical={ch['bit_identical']}")
+    for c in res["checks"]:
+        print("#", c)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,9 @@ MODULES = [
     "repro.update.epochs",
     "repro.serve.engine",
     "repro.serve.epochs",
+    "repro.traffic.workload",
+    "repro.traffic.slo",
+    "repro.traffic.admission",
     "repro.distributed.collectives",
     "repro.kernels.ops",
 ]

@@ -236,9 +236,11 @@ class BatchPIRServer:
         All ΔH_b GEMMs and sub-DB scatters are dispatched against the
         current epoch's buffers; the returned patch's `publish()` swaps the
         pointers.  ``donate=True`` donates each touched sub-DB buffer into
-        its scatter (in-place column write instead of a full copy) — legal
-        only when, as in the serving engine, no new dispatch can touch the
-        old buffers between stage and publish.
+        its scatter (in-place column write instead of a full copy); the
+        donating scatters are deferred to `publish()` so an abandoned or
+        aborted staged patch never strands `sub_dbs` on consumed buffers —
+        legal because, as in the serving engine, no new dispatch touches
+        the old buffers between stage and publish.
         """
         cols = np.asarray(cols)
         part = self.partition
@@ -248,6 +250,7 @@ class BatchPIRServer:
                 by_bucket.setdefault(b, []).append(idx)
         updates: list[BucketUpdate] = []
         new_sub_dbs: dict[int, object] = {}
+        deferred_scatters: list[tuple[int, jax.Array, jax.Array]] = []
         host_writes: list[tuple[int, np.ndarray, np.ndarray]] = []
         new_hints: dict[int, jax.Array] = {}
         new_cfgs: dict[int, pir.PIRConfig] = {}
@@ -274,10 +277,13 @@ class BatchPIRServer:
             delta_h = self._delta(b, pos, new_sub)   # reads OLD sub-DB rows
             if self.mesh is not None:      # host-side view: in-place write
                 host_writes.append((b, pos, new_cols[:rows, idxs]))
+            elif donate:
+                # deferred to apply(): the donating scatter must not consume
+                # the live sub-DB while the patch can still be abandoned
+                deferred_scatters.append((b, jnp.asarray(pos), new_sub))
             else:
                 new_sub_dbs[b] = ops.scatter_columns(
-                    self.sub_dbs[b], jnp.asarray(pos), new_sub,
-                    donate=donate)
+                    self.sub_dbs[b], jnp.asarray(pos), new_sub)
             if new_stack is not None:
                 # patch the cached sharded layout with ONE fused scatter
                 # (scatter output keeps the operand's sharding); the value
@@ -294,6 +300,9 @@ class BatchPIRServer:
         def apply():
             for b, sub in new_sub_dbs.items():
                 self.sub_dbs[b] = sub
+            for b, pos, new_sub in deferred_scatters:
+                self.sub_dbs[b] = ops.scatter_columns(
+                    self.sub_dbs[b], pos, new_sub, donate=True)
             for b, pos, vals in host_writes:
                 self.sub_dbs[b][:, pos] = vals
             for b, cfg in new_cfgs.items():

@@ -71,14 +71,18 @@ def build_nav_graph(embs: np.ndarray, k: int, n_random: int,
     return np.concatenate([knn, rand], axis=1)
 
 
-_SKETCH_BITS = 64               # SimHash sign bits per node (8 bytes)
+_SKETCH_BITS = 64               # default SimHash sign bits per node (8 B)
 
 
-def sketch_matrix(seed: int, d: int) -> np.ndarray:
+def sketch_matrix(seed: int, d: int, bits: int = _SKETCH_BITS) -> np.ndarray:
     """Public random projection for the navigation sketches (client+server
-    derive it from a shared seed, like the LWE matrix A)."""
+    derive it from a shared seed, like the LWE matrix A).  `bits` sets the
+    sketch width: wider sketches estimate cosine similarity more tightly
+    but inflate every node record by `degree · bits/8` bytes — the tuning
+    surface benchmarks/graph_bench.py sweeps."""
+    assert bits % 8 == 0 and bits > 0, bits
     return np.random.default_rng(seed ^ 0x51E7C4).standard_normal(
-        (_SKETCH_BITS, d)).astype(np.float32)
+        (bits, d)).astype(np.float32)
 
 
 def embed_sketches(embs: np.ndarray, proj: np.ndarray) -> np.ndarray:
@@ -110,16 +114,19 @@ class GraphPIRSystem:
     index_seconds: float = 0.0    # graph construction (no crypto)
     hint_seconds: float = 0.0
     sketch_seed: int = 0          # public seed of the navigation projection
+    sketch_bits: int = _SKETCH_BITS   # SimHash width carried per neighbour
 
     @classmethod
     def build(cls, embeddings: np.ndarray, *, degree: int = 12,
               n_random: int = 4, n_entry: int = 8, impl: str = "xla",
-              seed: int = 0) -> "GraphPIRSystem":
+              seed: int = 0, sketch_bits: int = _SKETCH_BITS
+              ) -> "GraphPIRSystem":
         t0 = time.perf_counter()
         n, d = embeddings.shape
         graph = build_nav_graph(embeddings, degree, n_random, seed=seed)
         total_deg = degree + n_random
-        sketches = embed_sketches(embeddings, sketch_matrix(seed, d))
+        sketches = embed_sketches(embeddings,
+                                  sketch_matrix(seed, d, sketch_bits))
         recs = [_serialize_node(embeddings[i], graph[i], sketches[graph[i]])
                 for i in range(n)]
         m = len(recs[0])
@@ -144,7 +151,8 @@ class GraphPIRSystem:
                    graph_degree=total_deg,
                    setup_seconds=time.perf_counter() - t0, n_docs=n,
                    index_seconds=t_index - t0,
-                   hint_seconds=t_hint_done - t_index, sketch_seed=seed)
+                   hint_seconds=t_hint_done - t_index, sketch_seed=seed,
+                   sketch_bits=sketch_bits)
 
     def _decode_node(self, col: np.ndarray
                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -158,8 +166,8 @@ class GraphPIRSystem:
         nbrs = np.frombuffer(buf[ofs:ofs + 4 * self.graph_degree], np.uint32)
         ofs += 4 * self.graph_degree
         sk = np.frombuffer(
-            buf[ofs:ofs + (_SKETCH_BITS // 8) * self.graph_degree],
-            np.uint8).reshape(self.graph_degree, _SKETCH_BITS // 8)
+            buf[ofs:ofs + (self.sketch_bits // 8) * self.graph_degree],
+            np.uint8).reshape(self.graph_degree, self.sketch_bits // 8)
         return dequantize_embedding(q, scale, off), nbrs, sk
 
     def search(self, query_emb: np.ndarray, *, top_k: int = 10,
@@ -177,7 +185,8 @@ class GraphPIRSystem:
         """
         client = pir.PIRClient(self.cfg, self.hint)
         qn = query_emb / (np.linalg.norm(query_emb) + 1e-12)
-        proj = sketch_matrix(self.sketch_seed, self.emb_dim)
+        proj = sketch_matrix(self.sketch_seed, self.emb_dim,
+                             self.sketch_bits)
         qbits = np.unpackbits(embed_sketches(qn[None, :], proj)[0])
 
         def sketch_sim(packed: np.ndarray) -> float:

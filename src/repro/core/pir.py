@@ -214,68 +214,91 @@ class PIRServer:
         ans = ans[:self.cfg.m]
         return ans[:, 0] if was_vec else ans
 
-    def stage_update(self, cols: jax.Array, new_cols: jax.Array, *,
-                     donate: bool = False
-                     ) -> tuple[jax.Array, jax.Array]:
-        """Compute (new_db, ΔH) for a column swap WITHOUT publishing it.
-
-        The shadow-epoch half of `update_columns`: the patched database and
-        the hint delta are built as fresh (or, with ``donate=True``, in-place
-        aliased) buffers while ``self.db`` keeps serving already-dispatched
-        answers; the caller publishes by assigning ``self.db = new_db`` at
-        its epoch boundary.  ``donate=True`` donates the live DB buffer into
-        the scatter — only the pipelined engine does this, after every use of
-        the old buffer (answer GEMMs, the old-column gather below) has been
-        dispatched; computations already enqueued keep the buffer alive at
-        the runtime level, but no NEW Python-side use of the old array may
-        follow.
-        """
+    def _pad_new_cols(self, cols: jax.Array, new_cols: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+        """Validate shapes and extend new columns with the shard-pad rows."""
         cols = jnp.asarray(cols)
         new_cols = jnp.asarray(new_cols)
-        j = int(cols.shape[0])
-        assert new_cols.shape == (self.cfg.m, j)
+        assert new_cols.shape == (self.cfg.m, int(cols.shape[0]))
         assert new_cols.dtype == jnp.uint8
         if self._row_pad:
             # DB padding rows are zero and stay zero across mutations
             new_cols = jnp.pad(new_cols, ((0, self._row_pad), (0, 0)))
-        old_cols = self.db[:, cols]            # dispatched before any donate
-        if self.mesh is None:
-            new_db = ops.scatter_columns(self.db, cols, new_cols,
-                                         donate=donate)
-        elif donate:
-            from repro.distributed import collectives
-            scatter = collectives.row_shard_scatter(
-                self.mesh, self.mesh_axes, donate=True)
-            new_db = scatter(self.db, cols,
-                             jax.device_put(new_cols, self._db_sharding))
-        else:
-            new_db = jax.device_put(self.db.at[:, cols].set(new_cols),
-                                    self._db_sharding)
+        return cols, new_cols
 
+    def stage_delta(self, cols: jax.Array, new_cols: jax.Array) -> jax.Array:
+        """Dispatch the hint delta ΔH = (D_new−D_old)[:,J]·A[J,:] for a
+        column swap WITHOUT touching ``self.db``.
+
+        Reads the old columns from the live DB (so it must run before any
+        donating scatter of the same swap) and returns the (m, k) u32 ΔH
+        as an in-flight device value.  Pow-of-two bucketed like
+        `update_columns` so streamed batches reuse compiled shapes; pad
+        slots carry the live DB's column 0 on BOTH sides of the
+        subtraction, contributing exactly ΔH = 0.
+        """
+        cols, new_cols = self._pad_new_cols(cols, new_cols)
+        j = int(cols.shape[0])
+        old_cols = self.db[:, cols]
         bucket = 1 << max(0, (j - 1).bit_length())
         pad = min(bucket, self.cfg.n) - j
         if pad > 0:
-            # pad with column 0 on BOTH sides of the subtraction: its new
-            # and old contents are identical, so it contributes ΔH = 0
             cols_g = jnp.concatenate([cols, jnp.zeros(pad, cols.dtype)])
-            unchanged = jnp.repeat(new_db[:, :1], pad, axis=1)
+            unchanged = jnp.repeat(self.db[:, :1], pad, axis=1)
             new_g = jnp.concatenate([new_cols, unchanged], axis=1)
             old_g = jnp.concatenate([old_cols, unchanged], axis=1)
         else:
             cols_g, new_g, old_g = cols, new_cols, old_cols
         a_j = self.a_matrix[cols_g]                        # (J', k)
         if self.mesh is None:
-            return new_db, ops.delta_gemm(new_g, old_g, a_j,
-                                          impl=self.cfg.impl)
+            return ops.delta_gemm(new_g, old_g, a_j, impl=self.cfg.impl)
         if self._delta_fn is None:
             from repro.distributed import collectives
             self._delta_fn = collectives.row_shard_delta_gemm(
                 self.mesh, self.mesh_axes, impl=self.cfg.impl)
-        delta_h = self._delta_fn(
+        return self._delta_fn(
             jax.device_put(new_g, self._db_sharding),
             jax.device_put(old_g, self._db_sharding),
             jax.device_put(a_j, self._replicated))[:self.cfg.m]
-        return new_db, delta_h
+
+    def stage_scatter(self, cols: jax.Array, new_cols: jax.Array, *,
+                      donate: bool = False) -> jax.Array:
+        """The patched DB array for a column swap; ``self.db`` unassigned.
+
+        ``donate=True`` donates the live DB buffer into the scatter — the
+        caller must assign the result to ``self.db`` immediately (the
+        live-index publish step does) and no NEW Python-side use of the old
+        array may follow; computations already enqueued keep the buffer
+        alive at the runtime level.
+        """
+        cols, new_cols = self._pad_new_cols(cols, new_cols)
+        if self.mesh is None:
+            return ops.scatter_columns(self.db, cols, new_cols,
+                                       donate=donate)
+        if donate:
+            from repro.distributed import collectives
+            scatter = collectives.row_shard_scatter(
+                self.mesh, self.mesh_axes, donate=True)
+            return scatter(self.db, cols,
+                           jax.device_put(new_cols, self._db_sharding))
+        return jax.device_put(self.db.at[:, cols].set(new_cols),
+                              self._db_sharding)
+
+    def stage_update(self, cols: jax.Array, new_cols: jax.Array, *,
+                     donate: bool = False
+                     ) -> tuple[jax.Array, jax.Array]:
+        """Compute (new_db, ΔH) for a column swap WITHOUT publishing it.
+
+        The shadow-epoch half of `update_columns`: `stage_delta` (which
+        reads the old columns first) then `stage_scatter`.  With
+        ``donate=True`` the live buffer is consumed HERE, so only callers
+        that assign ``self.db`` unconditionally afterwards may pass it —
+        `update_columns` does; the live-index stage path instead defers the
+        donating scatter to its publish step so an aborted or dropped
+        staged epoch never strands ``self.db`` on a deleted buffer.
+        """
+        delta_h = self.stage_delta(cols, new_cols)
+        return self.stage_scatter(cols, new_cols, donate=donate), delta_h
 
     def update_columns(self, cols: jax.Array, new_cols: jax.Array, *,
                        donate: bool = False) -> jax.Array:

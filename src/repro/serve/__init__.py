@@ -2,11 +2,15 @@
 
 `engine` holds the two serve loops (synchronous reference + pipelined
 production engine) and the shared policy core; `epochs` holds the
-shadow-commit machinery.  `launch.serve` is the thin CLI over this package.
+shadow-commit machinery.  Every response carries its batch's latency
+components (`BatchTiming`: queue/encode/gemm/decode) and the engines expose
+backlog observability (`DeadlineBatcher.depth` / `oldest_age_ms`) plus
+control hooks (`commit_gate`, `PipelinedServeLoop.set_depth`) that
+`repro.traffic` drives.  `launch.serve` is the thin CLI over this package.
 """
-from repro.serve.engine import (DeadlineBatcher, PIRServeLoop,
+from repro.serve.engine import (BatchTiming, DeadlineBatcher, PIRServeLoop,
                                 PipelinedServeLoop, Request, Response)
 from repro.serve.epochs import ShadowCommitter
 
-__all__ = ["DeadlineBatcher", "PIRServeLoop", "PipelinedServeLoop",
-           "Request", "Response", "ShadowCommitter"]
+__all__ = ["BatchTiming", "DeadlineBatcher", "PIRServeLoop",
+           "PipelinedServeLoop", "Request", "Response", "ShadowCommitter"]

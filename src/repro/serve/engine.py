@@ -54,6 +54,22 @@ class Request:
     multi_probe: int = 1           # clusters to fetch (>1 → batch-PIR able)
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchTiming:
+    """Per-batch latency components, shared by every response in the batch.
+
+    ``t_plan`` is when the batch's encode began — a request's queue time is
+    ``t_plan − t_arrival``.  ``encode_s`` is host-side query formulation +
+    GEMM enqueue; ``gemm_s`` is the complete-stage wait for device results
+    (under the pipelined engine this is the RESIDUAL wait after overlap,
+    often ~0); ``decode_s`` is host-side decode + re-rank.
+    """
+    t_plan: float
+    encode_s: float
+    gemm_s: float
+    decode_s: float
+
+
 @dataclasses.dataclass
 class Response:
     rid: int
@@ -62,6 +78,8 @@ class Response:
     batch_size: int
     epoch: int = 0
     retries: int = 0
+    t_arrival: float = 0.0               # copied from the request
+    timing: BatchTiming | None = None    # its batch's latency components
 
 
 class DeadlineBatcher:
@@ -71,6 +89,36 @@ class DeadlineBatcher:
         self.max_batch = max_batch
         self.deadline_ms = deadline_ms
         self.queue: deque[Request] = deque()
+
+    @property
+    def depth(self) -> int:
+        """Requests currently queued (admission-controller observable)."""
+        return len(self.queue)
+
+    def oldest_age_ms(self, now: float) -> float:
+        """Age of the head request in ms (0.0 when the queue is empty).
+
+        The backlog gauge: under open-loop overload the head age grows
+        without bound unless something sheds or defers load — operators
+        and the admission controller both watch this.
+        """
+        if not self.queue:
+            return 0.0
+        return (now - self.queue[0].t_arrival) * 1e3
+
+    def shed_tail(self, n: int) -> list[Request]:
+        """Remove up to `n` requests from the TAIL and return them.
+
+        Load shedding drops the youngest requests: the head of the queue
+        has waited longest and is closest to its deadline, so it keeps its
+        place.  The caller (admission controller) owns accounting shed
+        requests into the SLO summary.
+        """
+        shed = []
+        while self.queue and len(shed) < n:
+            shed.append(self.queue.pop())
+        shed.reverse()                   # back in arrival order
+        return shed
 
     def submit(self, req: Request):
         """Append an arriving request (FIFO tail)."""
@@ -130,6 +178,11 @@ class PIRServeLoop:
         self.responses: list[Response] = []
         self.mutations: deque = deque()
         self.stale_retries = 0
+        # Admission hook: when set, pending mutations fold into an epoch
+        # only on ticks where commit_gate() is True — the controller defers
+        # commits under backlog so queued requests don't go stale mid-wait
+        # (freshness degrades instead of latency; see traffic.admission).
+        self.commit_gate: Callable[[], bool] | None = None
         self._key = jax.random.PRNGKey(seed)   # per-batch query-key stream
 
     @property
@@ -138,10 +191,17 @@ class PIRServeLoop:
         return self.live.epoch if self.live is not None else 0
 
     def submit(self, rid: int, query_emb: np.ndarray, *, top_k: int = 5,
-               multi_probe: int = 1):
-        """A client submits a query formed against the CURRENT epoch's hint."""
+               multi_probe: int = 1, epoch: int | None = None):
+        """A client submits a query formed against its cached hint's epoch.
+
+        ``epoch=None`` (the default) models a freshly synced client and
+        stamps the published head; the traffic generator passes each
+        session's actual cached epoch, so lazily syncing clients hit the
+        stale-reject/retry path exactly as they would in production.
+        """
         self.batcher.submit(Request(rid, query_emb, self.clock(),
-                                    epoch=self.epoch, top_k=top_k,
+                                    epoch=self.epoch if epoch is None
+                                    else epoch, top_k=top_k,
                                     multi_probe=multi_probe))
 
     def submit_mutation(self, mut):
@@ -153,6 +213,8 @@ class PIRServeLoop:
         """Fold queued mutations into one epoch between query batches."""
         if self.live is None or not self.mutations:
             return None
+        if self.commit_gate is not None and not self.commit_gate():
+            return None                  # deferred: serve stale-epoch answers
         while self.mutations:
             self.live.journal.append(self.mutations.popleft())
         return self.live.commit()
@@ -210,20 +272,43 @@ class PIRServeLoop:
         for mp, reqs in self._probe_groups(fresh):
             embs = np.stack([r.query_emb for r in reqs])
             self._key, kq = jax.random.split(self._key)
-            results = system.query_batch(
+            t_plan = self.clock()
+            infl = system.query_batch_async(
                 embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
+            t_disp = self.clock()
+            # query_batch ≡ query_batch_async().complete(); going through
+            # the async form here only adds the component timestamps —
+            # responses stay bit-identical to the one-call path
+            jax.block_until_ready(infl.pending)
+            t_gemm = self.clock()
+            results = infl.complete()
             t = self.clock()
-            for req, top in zip(reqs, results):
-                # batch_size = this group's GEMM width, not the tick total
-                self.responses.append(Response(req.rid, top, t, len(reqs),
-                                               epoch=cur,
-                                               retries=req.retries))
+            self._record(reqs, results, cur, t, BatchTiming(
+                t_plan=t_plan, encode_s=t_disp - t_plan,
+                gemm_s=t_gemm - t_disp, decode_s=t - t_gemm))
         return len(fresh)
 
+    def _record(self, reqs: list[Request], results: list, epoch: int,
+                t_done: float, timing: BatchTiming):
+        """Append one served group's responses (shared batch timing)."""
+        for req, top in zip(reqs, results):
+            # batch_size = this group's GEMM width, not the tick total
+            self.responses.append(Response(
+                req.rid, top, t_done, len(reqs), epoch=epoch,
+                retries=req.retries, t_arrival=req.t_arrival, timing=timing))
+
     def drain(self):
-        """Serve everything still queued, force-flushing partial batches."""
-        while self.batcher.queue or self.mutations:
-            self.tick(force=True)
+        """Serve everything still queued, force-flushing partial batches.
+
+        Bypasses the commit gate: drain means "finish ALL the work", so a
+        controller deferring commits must not keep it spinning forever.
+        """
+        gate, self.commit_gate = self.commit_gate, None
+        try:
+            while self.batcher.queue or self.mutations:
+                self.tick(force=True)
+        finally:
+            self.commit_gate = gate
 
 
 class PipelinedServeLoop(PIRServeLoop):
@@ -255,9 +340,22 @@ class PipelinedServeLoop(PIRServeLoop):
         """Batches dispatched on device but not yet decoded."""
         return len(self._inflight)
 
+    def set_depth(self, depth: int):
+        """Adjust the in-flight bound (admission-controller depth hook).
+
+        Takes effect at the next tick/retire: a shrink retires the excess
+        batches then, a grow simply lets more dispatches accumulate.
+        Dynamic depth trades completion latency (responses wait behind up
+        to `depth` batches) against overlap headroom (commit spikes and
+        slow decodes ride out without stalling dispatch).
+        """
+        self.depth = max(1, int(depth))
+
     def _commit_mutations(self):
         if self._shadow is None or not self.mutations:
             return None
+        if self.commit_gate is not None and not self.commit_gate():
+            return None                  # deferred: serve stale-epoch answers
         return self._shadow.commit(self.mutations)
 
     def tick(self, force: bool = False) -> int:
@@ -284,25 +382,43 @@ class PipelinedServeLoop(PIRServeLoop):
         for mp, reqs in self._probe_groups(fresh):
             embs = np.stack([r.query_emb for r in reqs])
             self._key, kq = jax.random.split(self._key)
+            t_plan = self.clock()
             infl = system.query_batch_async(
                 embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
-            self._inflight.append((reqs, cur, infl))
+            t_disp = self.clock()
+            self._inflight.append((reqs, cur, infl, t_plan,
+                                   t_disp - t_plan))
         self._retire(self.depth)
         return len(fresh)
 
     def _retire(self, limit: int):
-        """Complete (decode + record) oldest in-flight batches beyond limit."""
+        """Complete (decode + record) oldest in-flight batches beyond limit.
+
+        The gemm component recorded here is the RESIDUAL device wait at
+        retire time: at steady state the GEMM overlapped host work for
+        `depth` ticks already, so near-zero gemm_s is the pipeline doing
+        its job (the sync engine reports the full device time instead).
+        """
         while len(self._inflight) > limit:
-            reqs, epoch, infl = self._inflight.popleft()
+            reqs, epoch, infl, t_plan, encode_s = self._inflight.popleft()
+            t0 = self.clock()
+            jax.block_until_ready(infl.pending)
+            t1 = self.clock()
             results = infl.complete()
             t = self.clock()
-            for req, top in zip(reqs, results):
-                self.responses.append(Response(req.rid, top, t, len(reqs),
-                                               epoch=epoch,
-                                               retries=req.retries))
+            self._record(reqs, results, epoch, t, BatchTiming(
+                t_plan=t_plan, encode_s=encode_s, gemm_s=t1 - t0,
+                decode_s=t - t1))
 
     def drain(self):
-        """Serve and complete everything: queue, mutations, and pipeline."""
-        while self.batcher.queue or self.mutations:
-            self.tick(force=True)
+        """Serve and complete everything: queue, mutations, and pipeline.
+
+        Bypasses the commit gate like the synchronous drain.
+        """
+        gate, self.commit_gate = self.commit_gate, None
+        try:
+            while self.batcher.queue or self.mutations:
+                self.tick(force=True)
+        finally:
+            self.commit_gate = gate
         self._retire(0)

@@ -1,0 +1,30 @@
+"""Traffic & hint-delivery subsystem: load generation, SLOs, admission.
+
+Three layers, one per module:
+
+`workload`   open-loop Poisson traffic (`OpenLoopDriver`) over long-lived
+             `ClientSession`s with lazily synced hints — arrivals are
+             scheduled up front and land on time regardless of backlog.
+`slo`        per-request ground truth (`RequestRecord`) and the SLO fold
+             (`summarize`): percentiles and deadline attainment over every
+             offered request, with queue/encode/gemm/decode/hint-sync
+             latency components.
+`admission`  `AdmissionController` driving the engine's control hooks:
+             shed the queue tail past `max_queue`, gate mutation commits
+             under backlog (freshness degrades instead of latency), adapt
+             pipeline depth to the standing backlog.
+
+The hint-delivery cost model rides on `repro.update.epochs`: sessions
+download compacted patch chains (`EpochLog.chain_since`), and every synced
+byte is charged to the requesting client's SLO record.  benchmarks/
+traffic_bench.py is the CLI; docs/traffic.md the narrative.
+"""
+from repro.traffic.admission import AdmissionController
+from repro.traffic.slo import RequestRecord, summarize
+from repro.traffic.workload import (ClientSession, OpenLoopDriver,
+                                    TrafficResult, TrafficSpec,
+                                    poisson_arrivals)
+
+__all__ = ["AdmissionController", "ClientSession", "OpenLoopDriver",
+           "RequestRecord", "TrafficResult", "TrafficSpec",
+           "poisson_arrivals", "summarize"]

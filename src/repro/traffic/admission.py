@@ -1,0 +1,105 @@
+"""SLO-driven admission control over the serve-engine hooks.
+
+The serving engines stay policy-free: they expose backlog observability
+(`DeadlineBatcher.depth`, `oldest_age_ms`), a load-shedding primitive
+(`shed_tail`), a commit gate (`PIRServeLoop.commit_gate`) and a pipeline
+depth knob (`PipelinedServeLoop.set_depth`).  `AdmissionController` is the
+policy that drives them, invoked by the `OpenLoopDriver` once per service
+iteration:
+
+shed        When the queue grows past `max_queue` the tail (youngest
+            arrivals — the head is closest to its deadline and cheapest to
+            save) is shed and reported to the driver, which records the
+            requests as SLO misses.  This is what bounds p99 under
+            overload: an open-loop arrival process at > sustainable qps
+            grows the queue without bound, so *some* requests must fail —
+            shedding makes them fail fast and keeps the served tail flat.
+
+defer       Pending mutation commits are gated off while the queue holds
+            more than `defer_queue` requests: a commit would bump the
+            epoch and force every queued request through the stale-reject/
+            retry path (plus a hint re-sync per client), exactly when the
+            system can least afford it.  Freshness degrades — queued
+            requests are answered at the pre-commit epoch — instead of
+            latency.  Deferred commits apply on the first gated tick after
+            the backlog clears (the engine re-checks the gate every tick).
+
+depth       The pipeline depth tracks the backlog: ~1 batch queued needs
+            depth 1 (lowest completion latency), a standing backlog earns
+            a deeper pipeline (more device overlap, higher throughput) up
+            to `max_depth`.  No-op on the synchronous engine.
+"""
+from __future__ import annotations
+
+import math
+
+
+class AdmissionController:
+    """Shed / defer-commit / depth policy driven once per service iteration.
+
+    Construct, `attach` to a serve loop, then call `step(now)` from the
+    driving loop; it returns the requests shed this step (possibly empty)
+    so the caller owns the SLO accounting.  `stats()` summarises what the
+    controller did for the benchmark report.
+    """
+
+    def __init__(self, *, max_queue: int = 256, defer_queue: int | None = None,
+                 min_depth: int = 1, max_depth: int = 4):
+        assert max_queue >= 1 and min_depth >= 1 and max_depth >= min_depth
+        self.max_queue = max_queue
+        # defer commits strictly before shedding kicks in: holding an epoch
+        # bump is free; dropping requests is not
+        self.defer_queue = (max(1, max_queue // 2) if defer_queue is None
+                            else defer_queue)
+        self.min_depth = min_depth
+        self.max_depth = max_depth
+        self.loop = None
+        self.shed_total = 0
+        self.deferred_commits = 0
+        self.allowed_commits = 0
+        self.depth_trajectory: list[int] = []
+
+    def attach(self, loop):
+        """Install the commit gate on `loop` and start controlling it."""
+        self.loop = loop
+        loop.commit_gate = self._allow_commit
+        return self
+
+    def _allow_commit(self) -> bool:
+        """Commit gate: hold epoch bumps while the queue is deep."""
+        if self.loop.batcher.depth > self.defer_queue:
+            self.deferred_commits += 1
+            return False
+        self.allowed_commits += 1
+        return True
+
+    def step(self, now: float) -> list:
+        """One control decision; returns the requests shed (maybe empty)."""
+        loop = self.loop
+        assert loop is not None, "attach() a serve loop first"
+        shed = []
+        over = loop.batcher.depth - self.max_queue
+        if over > 0:
+            shed = loop.batcher.shed_tail(over)
+            self.shed_total += len(shed)
+        if hasattr(loop, "set_depth"):
+            want = max(self.min_depth, min(
+                self.max_depth,
+                math.ceil(loop.batcher.depth / loop.batcher.max_batch) or 1))
+            if want != loop.depth:
+                loop.set_depth(want)
+                self.depth_trajectory.append(want)
+        return shed
+
+    def stats(self) -> dict:
+        """What the controller did, for the benchmark report."""
+        return {
+            "max_queue": self.max_queue,
+            "defer_queue": self.defer_queue,
+            "shed": self.shed_total,
+            "deferred_commits": self.deferred_commits,
+            "allowed_commits": self.allowed_commits,
+            "depth_changes": len(self.depth_trajectory),
+            "final_depth": (self.depth_trajectory[-1]
+                            if self.depth_trajectory else None),
+        }

@@ -1,0 +1,100 @@
+"""SLO accounting for open-loop PIR serving.
+
+A `RequestRecord` is the per-request ground truth the `OpenLoopDriver`
+assembles: arrival/completion timestamps against the driver's clock plus the
+latency decomposition carried on each `Response` (`BatchTiming`) and the
+hint-delivery cost the issuing session paid (chain bytes + modelled downlink
+time).  `summarize` folds a run's records into the SLO summary the benchmark
+emits — percentiles and deadline attainment are computed over every OFFERED
+request, so a shed request counts as a miss rather than vanishing from the
+denominator (the standard open-loop rule; closed-loop style "served-only"
+percentiles would let the admission controller cheat by shedding).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SHED = "shed"
+SERVED = "served"
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """One request's life: arrival → (served | shed), with components.
+
+    Times are seconds on the driver clock; component fields are milliseconds.
+    `queue_ms` spans arrival → batch plan; `encode_ms`/`gemm_ms`/`decode_ms`
+    come from the serving engine's `BatchTiming` (shared by the batch);
+    `hint_sync_ms` is the modelled downlink time of the patch chain this
+    request's session downloaded to form the query (0 for warm sessions).
+    """
+    rid: int
+    session: int
+    t_arrival: float
+    outcome: str = SERVED
+    t_done: float | None = None
+    epoch: int = 0
+    retries: int = 0
+    multi_probe: int = 1
+    queue_ms: float = 0.0
+    encode_ms: float = 0.0
+    gemm_ms: float = 0.0
+    decode_ms: float = 0.0
+    hint_sync_ms: float = 0.0
+    hint_sync_bytes: int = 0
+
+    @property
+    def latency_ms(self) -> float:
+        """End-to-end latency incl. hint sync; +inf for shed requests."""
+        if self.t_done is None:
+            return float("inf")
+        return (self.t_done - self.t_arrival) * 1e3 + self.hint_sync_ms
+
+
+def _pct(values: np.ndarray, q: float) -> float:
+    """Percentile that propagates +inf (shed requests) instead of NaN."""
+    if values.size == 0:
+        return 0.0
+    # np.percentile interpolates, which turns a single inf into NaN for
+    # everything above the last finite sample; the order statistic doesn't.
+    k = min(values.size - 1, int(np.ceil(q / 100 * values.size)) - 1)
+    return float(np.sort(values)[max(k, 0)])
+
+
+def summarize(records: list[RequestRecord], *, deadline_ms: float,
+              wall_s: float) -> dict:
+    """Fold a run's records into the SLO summary dict the bench emits.
+
+    Attainment = fraction of OFFERED requests whose end-to-end latency
+    (queue + service + hint sync) beat `deadline_ms`; shed requests have
+    infinite latency and therefore count against attainment and p99.
+    Component means are over served requests only (a shed request never
+    entered the pipeline, so it has no components to average).
+    """
+    served = [r for r in records if r.outcome == SERVED]
+    lat = np.array([r.latency_ms for r in records], np.float64)
+    out = {
+        "offered": len(records),
+        "served": len(served),
+        "shed": sum(r.outcome == SHED for r in records),
+        "wall_s": round(wall_s, 4),
+        "offered_qps": round(len(records) / wall_s, 2) if wall_s else 0.0,
+        "served_qps": round(len(served) / wall_s, 2) if wall_s else 0.0,
+        "deadline_ms": deadline_ms,
+        "attainment": (round(float(np.mean(lat <= deadline_ms)), 4)
+                       if records else 1.0),
+        "p50_ms": round(_pct(lat, 50), 3),
+        "p99_ms": round(_pct(lat, 99), 3),
+        "retries": sum(r.retries for r in served),
+        "hint_sync_bytes": sum(r.hint_sync_bytes for r in served),
+    }
+    comp = {}
+    for name in ("queue_ms", "encode_ms", "gemm_ms", "decode_ms",
+                 "hint_sync_ms"):
+        vals = np.array([getattr(r, name) for r in served], np.float64)
+        comp[name] = {"mean": round(float(vals.mean()), 3) if served else 0.0,
+                      "p99": round(_pct(vals, 99), 3)}
+    out["components"] = comp
+    return out

@@ -1,0 +1,277 @@
+"""Open-loop traffic generation over the PIR serve loops.
+
+Open loop means arrivals are a property of the WORLD, not of the server:
+request times are drawn up front from a Poisson process at `qps` and each
+request is submitted at its scheduled instant whether or not the engine has
+kept up.  (A closed-loop driver — next request only after the previous
+response — self-throttles under overload and hides exactly the tail
+behaviour this subsystem exists to measure.)
+
+`ClientSession` models a long-lived client: it holds the epoch of its cached
+hint and only pays for hint delivery when it has to — either proactively
+when it falls more than `staleness_tolerance` epochs behind the published
+head, or reactively when the engine stale-rejects its query.  Both paths
+download the epoch log's minimal compacted chain (`EpochLog.chain_since`),
+and both charge the exact wire bytes plus a modelled downlink time to the
+request's SLO record, so "cheap hint delivery" is measured in the same
+budget as serving latency.
+
+`OpenLoopDriver` owns the run: it merges query and mutation arrivals into
+one schedule, services the engine while waiting between events (tick +
+admission-controller step + response absorption), and assembles the
+per-request `RequestRecord`s that `slo.summarize` folds into the benchmark
+report.  The driver takes its clock from the serve loop, so the FakeClock
+the engine tests use drives deterministic end-to-end traffic tests too.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.traffic import slo
+from repro.traffic.slo import RequestRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficSpec:
+    """Shape of an open-loop run.
+
+    `probe_mix` gives (multi_probe, weight) pairs for the single/multi-probe
+    request mix; `staleness_tolerance` is how many epochs behind a session
+    lets its cached hint drift before proactively syncing (0 = always
+    fresh); `downlink_gbps` converts synced chain bytes into the
+    `hint_sync_ms` latency component.
+    """
+    qps: float = 50.0
+    duration_s: float = 2.0
+    n_sessions: int = 8
+    probe_mix: tuple[tuple[int, float], ...] = ((1, 0.75), (4, 0.25))
+    top_k: int = 5
+    staleness_tolerance: int = 0
+    mutation_qps: float = 0.0
+    downlink_gbps: float = 1.0
+    seed: int = 0
+
+
+def poisson_arrivals(rng: np.random.Generator, qps: float,
+                     duration_s: float) -> np.ndarray:
+    """Sorted arrival times (s) of a Poisson process at rate `qps`.
+
+    Exponential interarrivals drawn up front — the open-loop schedule is
+    fixed before the run starts and never reacts to service progress.
+    """
+    if qps <= 0 or duration_s <= 0:
+        return np.empty(0, np.float64)
+    n = max(int(qps * duration_s * 2), 16)     # overdraw, then truncate
+    t = np.cumsum(rng.exponential(1.0 / qps, size=n))
+    while t[-1] < duration_s:                  # rare: overdraw fell short
+        t = np.concatenate([t, t[-1] + np.cumsum(
+            rng.exponential(1.0 / qps, size=n))])
+    return t[t < duration_s]
+
+
+class ClientSession:
+    """A long-lived client: cached-hint epoch + hint-delivery accounting."""
+
+    def __init__(self, sid: int, epoch: int = 0):
+        self.sid = sid
+        self.epoch = epoch
+        self.bytes_downloaded = 0
+        self.syncs = 0
+        self.n_requests = 0
+
+    def sync_to(self, log, until: int | None = None) -> int:
+        """Download the minimal chain to `until` (default head); rtn bytes."""
+        goal = log.epoch if until is None else until
+        if goal <= self.epoch:
+            return 0
+        nbytes = log.chain_bytes(self.epoch, goal)
+        self.epoch = goal
+        self.bytes_downloaded += nbytes
+        self.syncs += 1
+        return nbytes
+
+
+@dataclasses.dataclass
+class TrafficResult:
+    """Everything a run produced: records + engine/controller counters."""
+    records: list[RequestRecord]
+    wall_s: float
+    spec: TrafficSpec
+    stale_retries: int = 0
+    commits: int = 0
+    controller: dict | None = None
+    session_sync_bytes: int = 0
+
+    def summary(self, deadline_ms: float) -> dict:
+        """SLO summary dict (see slo.summarize) plus run-level counters."""
+        out = slo.summarize(self.records, deadline_ms=deadline_ms,
+                            wall_s=self.wall_s)
+        out["target_qps"] = self.spec.qps
+        out["stale_retries"] = self.stale_retries
+        out["commits"] = self.commits
+        out["session_sync_bytes"] = self.session_sync_bytes
+        if self.controller is not None:
+            out["admission"] = self.controller
+        return out
+
+
+class OpenLoopDriver:
+    """Drive a serve loop with an open-loop schedule; collect SLO records.
+
+    `queries`: (n, d) pool of query embeddings sampled per request.
+    `mutator`: optional callable(rng) -> journal record, invoked at each
+    mutation arrival (requires the loop to wrap a LiveIndex).
+    `controller`: optional AdmissionController, attached on construction
+    and stepped once per service iteration.
+    """
+
+    def __init__(self, loop, queries: np.ndarray, spec: TrafficSpec, *,
+                 mutator=None, controller=None):
+        self.loop = loop
+        self.queries = np.asarray(queries)
+        self.spec = spec
+        self.mutator = mutator
+        self.controller = controller
+        if controller is not None:
+            controller.attach(loop)
+        self.clock = loop.clock
+        self.rng = np.random.default_rng(spec.seed)
+        self.sessions = [ClientSession(i, epoch=loop.epoch)
+                         for i in range(spec.n_sessions)]
+        self.records: dict[int, RequestRecord] = {}
+        # rid -> (session, epoch at submit) for completion-time accounting
+        self._pending: dict[int, tuple[ClientSession, int]] = {}
+        # responses already on the loop (warmup runs) are not ours to absorb
+        self._n_seen = len(loop.responses)
+        self._probes = np.array([p for p, _ in spec.probe_mix])
+        w = np.array([w for _, w in spec.probe_mix], np.float64)
+        self._probe_w = w / w.sum()
+
+    # -- schedule -------------------------------------------------------------
+
+    def _schedule(self) -> list[tuple[float, str]]:
+        """Merged (time, kind) events: 'q' = query arrival, 'm' = mutation.
+
+        Queries and mutations draw from INDEPENDENT seeded streams, so the
+        mutation schedule is identical across runs that differ only in
+        query rate — a load sweep compares points against the same commit
+        pressure.
+        """
+        ev = [(float(t), "q") for t in poisson_arrivals(
+            np.random.default_rng([self.spec.seed, 1]),
+            self.spec.qps, self.spec.duration_s)]
+        if self.mutator is not None and self.spec.mutation_qps > 0:
+            ev += [(float(t), "m") for t in poisson_arrivals(
+                np.random.default_rng([self.spec.seed, 2]),
+                self.spec.mutation_qps, self.spec.duration_s)]
+        return sorted(ev)
+
+    # -- per-iteration service ------------------------------------------------
+
+    def _service(self):
+        """One service iteration: control, tick, absorb new responses."""
+        if self.controller is not None:
+            for req in self.controller.step(self.clock()):
+                rec = self.records.get(req.rid)
+                if rec is not None:          # pre-warm traffic isn't ours
+                    rec.outcome = slo.SHED
+                self._pending.pop(req.rid, None)
+        self.loop.tick()
+        self._absorb()
+
+    def _absorb(self):
+        """Fold newly retired responses into their records and sessions."""
+        resp = self.loop.responses
+        while self._n_seen < len(resp):
+            r = resp[self._n_seen]
+            self._n_seen += 1
+            rec = self.records.get(r.rid)
+            if rec is None:                  # not ours (pre-warm traffic)
+                continue
+            sess, submit_epoch = self._pending.pop(r.rid)
+            rec.t_done = r.t_done
+            rec.epoch = r.epoch
+            rec.retries = r.retries
+            if r.retries and r.epoch > submit_epoch:
+                # the engine stale-rejected this query: the client synced
+                # its hint to the serving epoch and re-encrypted — charge
+                # the exact chain bytes for that reactive sync
+                nbytes = sess.sync_to(self.loop.live.epochs,
+                                      max(sess.epoch, r.epoch))
+                rec.hint_sync_bytes += nbytes
+                rec.hint_sync_ms += self._downlink_ms(nbytes)
+            if r.timing is not None:
+                rec.queue_ms = (r.timing.t_plan - r.t_arrival) * 1e3
+                rec.encode_ms = r.timing.encode_s * 1e3
+                rec.gemm_ms = r.timing.gemm_s * 1e3
+                rec.decode_ms = r.timing.decode_s * 1e3
+            sess.n_requests += 1
+
+    def _downlink_ms(self, nbytes: int) -> float:
+        """Modelled time to ship `nbytes` over the spec'd downlink."""
+        return nbytes * 8 / (self.spec.downlink_gbps * 1e9) * 1e3
+
+    # -- arrivals -------------------------------------------------------------
+
+    def _submit_query(self, rid: int):
+        """One query arrival: pick a session, maybe sync, submit."""
+        sess = self.sessions[int(self.rng.integers(len(self.sessions)))]
+        sync_bytes, sync_ms = 0, 0.0
+        live = self.loop.live
+        if live is not None:
+            behind = self.loop.epoch - sess.epoch
+            if behind > self.spec.staleness_tolerance:
+                sync_bytes = sess.sync_to(live.epochs)
+                sync_ms = self._downlink_ms(sync_bytes)
+        emb = self.queries[int(self.rng.integers(len(self.queries)))]
+        mp = int(self.rng.choice(self._probes, p=self._probe_w))
+        rec = RequestRecord(rid, sess.sid, t_arrival=self.clock(),
+                            multi_probe=mp, hint_sync_bytes=sync_bytes,
+                            hint_sync_ms=sync_ms)
+        self.records[rid] = rec
+        self._pending[rid] = (sess, sess.epoch)
+        self.loop.submit(rid, emb, top_k=self.spec.top_k, multi_probe=mp,
+                         epoch=sess.epoch if live is not None else None)
+
+    # -- the run --------------------------------------------------------------
+
+    def run(self) -> TrafficResult:
+        """Execute the schedule; returns the assembled TrafficResult."""
+        events = self._schedule()
+        epoch0 = self.loop.epoch
+        retries0 = self.loop.stale_retries
+        t0 = self.clock()
+        rid = 0
+        i = 0
+        while i < len(events):
+            # submit every arrival that is due NOW — arrivals land on time
+            # regardless of backlog (open loop) — then service once; when
+            # the engine is slower than the arrival process this alternation
+            # is what grows the queue and exercises the admission policy
+            now = self.clock() - t0
+            while i < len(events) and events[i][0] <= now:
+                t_ev, kind = events[i]
+                i += 1
+                if kind == "q":
+                    self._submit_query(rid)
+                    rid += 1
+                else:
+                    self.loop.submit_mutation(self.mutator(self.rng))
+            if i < len(events):
+                self._service()
+        self.loop.drain()
+        if self.controller is not None:      # account post-drain state
+            self.controller.step(self.clock())
+        self._absorb()
+        wall = self.clock() - t0
+        recs = [self.records[i] for i in sorted(self.records)]
+        return TrafficResult(
+            records=recs, wall_s=wall, spec=self.spec,
+            stale_retries=self.loop.stale_retries - retries0,
+            commits=self.loop.epoch - epoch0,
+            controller=(self.controller.stats()
+                        if self.controller is not None else None),
+            session_sync_bytes=sum(s.bytes_downloaded
+                                   for s in self.sessions))

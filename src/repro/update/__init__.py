@@ -11,13 +11,16 @@ Layering:
     journal.py — durable append-only mutation log (insert/delete/replace)
     planner.py — mutations → touched clusters + overflow / pad-degradation
                  full-rebuild triggers (column-capacity accounting)
-    epochs.py  — versioned HintPatch wire format + client-side HintCache
+    epochs.py  — versioned HintPatch wire format, patch composition and
+                 periodic compaction (EpochLog segments), client HintCache
     routing.py — cluster→bucket routing of deltas into batch-PIR's
                  per-bucket replica hints (no-op when batch-PIR is off)
     live.py    — LiveIndex: orchestrates plan → column rebuild → delta GEMM
                  → epoch publish, with bit-exactness vs a from-scratch setup
 """
-from repro.update.epochs import EpochLog, HintCache, HintPatch, StaleEpochError
+from repro.update.epochs import (EpochLog, HintCache, HintPatch,
+                                 StaleEpochError, compact_chain,
+                                 compose_patches)
 from repro.update.journal import Mutation, MutationJournal
 from repro.update.live import LiveIndex
 from repro.update.planner import UpdatePlan, plan_updates
@@ -25,6 +28,7 @@ from repro.update.routing import patch_batch_hints, touched_buckets
 
 __all__ = [
     "EpochLog", "HintCache", "HintPatch", "StaleEpochError",
+    "compact_chain", "compose_patches",
     "Mutation", "MutationJournal", "LiveIndex", "UpdatePlan", "plan_updates",
     "patch_batch_hints", "touched_buckets",
 ]

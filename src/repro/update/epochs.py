@@ -22,6 +22,20 @@ All arithmetic is uint32 wraparound (mod 2^32), matching the server's
 `PIRServer.update_columns` path, so `patch(H)` equals `server.setup()` on
 the rebuilt DB bit-for-bit.
 
+Patch CHAINS (the hint-delivery layer): patches compose.  Two consecutive
+delta patches merge into one spanning patch whose delta is
+`D_final − D_initial` over the union of their touched columns — still
+int16 (both endpoints are u8 databases), and strictly no larger than the
+two patches side by side (overlapping columns dedupe).  `EpochLog` built
+with ``compact_every=C`` folds every aligned run of C patches into one
+compacted segment at publish time, so a client K epochs behind downloads
+O(K/C) segments plus a short raw tail instead of K patches — and never
+the full `m·k·4`-byte hint unless a rebuild epoch intervened (a full
+patch subsumes everything before it).  `chain_since`/`chain_bytes` give
+the minimal chain and its exact downlink cost; `HintCache.sync` applies
+either representation with bit-identical results (property-tested in
+tests/test_hint_chains.py).
+
 Publication timing: under the pipelined serving engine a commit is staged
 into shadow buffers first (`LiveIndex.stage`) and `EpochLog.publish`
 happens inside the pointer swap (`LiveIndex.publish`) — i.e. the epoch
@@ -91,39 +105,144 @@ class HintPatch:
         return hint.at[:r].add(jnp.matmul(d_u32, a_j))
 
 
-class EpochLog:
-    """Server-side publication log: monotone epochs + their patches."""
+def compose_patches(a: HintPatch, b: HintPatch) -> HintPatch:
+    """Merge consecutive patches into ONE spanning a.from_epoch→b.to_epoch.
 
-    def __init__(self):
+    Exact in every case (all arithmetic lands on the same mod-2^32 residues
+    a client applying the two patches in sequence would reach):
+
+      delta ∘ delta — the spanning delta is `D_final − D_initial` over the
+          union of touched columns: per-column int32 sum of the two deltas,
+          which provably fits int16 again (both endpoints are u8 databases),
+          row-truncated to the taller of the two.
+      anything ∘ full — the later full patch subsumes the earlier patch.
+      full ∘ delta — the delta is folded into the carried hint via the
+          public matrix A (seed-derived from the full patch's cfg), i.e.
+          exactly `HintPatch.apply` on the server side.
+    """
+    assert a.to_epoch == b.from_epoch, (a.to_epoch, b.from_epoch)
+    if b.is_full:
+        return dataclasses.replace(b, from_epoch=a.from_epoch)
+    if a.is_full:
+        assert a.cfg is not None, "full patch needs cfg to absorb deltas"
+        a_mat = lwe.gen_public_matrix(a.cfg.a_seed, a.cfg.n, a.cfg.params.k)
+        hint = np.asarray(b.apply(jnp.asarray(a.full_hint, U32), a_mat))
+        return HintPatch(from_epoch=a.from_epoch, to_epoch=b.to_epoch,
+                         full_hint=hint, cfg=a.cfg)
+    cols = np.union1d(a.cols, b.cols)
+    r = max(a.delta.shape[0], b.delta.shape[0])
+    acc = np.zeros((r, len(cols)), np.int32)
+    acc[:a.delta.shape[0], np.searchsorted(cols, a.cols)] += a.delta
+    acc[:b.delta.shape[0], np.searchsorted(cols, b.cols)] += b.delta
+    return HintPatch(from_epoch=a.from_epoch, to_epoch=b.to_epoch,
+                     cols=cols, delta=acc.astype(np.int16))
+
+
+def compact_chain(patches: list[HintPatch]) -> HintPatch:
+    """Fold a consecutive patch run into one spanning patch (left fold)."""
+    assert patches, "cannot compact an empty chain"
+    out = patches[0]
+    for p in patches[1:]:
+        out = compose_patches(out, p)
+    return out
+
+
+class EpochLog:
+    """Server-side publication log: monotone epochs + their patches.
+
+    ``compact_every=C`` turns on periodic compaction: every time the head
+    reaches a multiple of C, the just-completed aligned run of C patches is
+    folded into one segment.  `chain_since` then hands a catching-up client
+    the minimal chain — a short raw prefix up to the next C-boundary,
+    whole segments across the middle, and the raw tail — instead of one
+    patch per missed epoch.  Raw patches are kept (clients can be stranded
+    at any epoch, including mid-segment); `stored_bytes` accounts the
+    server-side cost of keeping both representations.
+    """
+
+    def __init__(self, compact_every: int | None = None):
+        assert compact_every is None or compact_every >= 2, compact_every
         self.epoch = 0
+        self.compact_every = compact_every
         self._patches: list[HintPatch] = []
+        self._segments: dict[int, HintPatch] = {}   # from_epoch → segment
 
     def publish(self, patch: HintPatch) -> int:
-        """Append the next epoch's patch; returns the new head epoch."""
+        """Append the next epoch's patch; returns the new head epoch.
+
+        With compaction enabled, a head landing on a ``compact_every``
+        boundary folds the completed run into its segment here — publish
+        time, not sync time — so every client downloading that span shares
+        one precomputed segment.
+        """
         assert patch.from_epoch == self.epoch, (patch.from_epoch, self.epoch)
         assert patch.to_epoch == self.epoch + 1
         self._patches.append(patch)
         self.epoch = patch.to_epoch
+        c = self.compact_every
+        if c and self.epoch % c == 0:
+            lo = self.epoch - c
+            self._segments[lo] = compact_chain(self._patches[lo:self.epoch])
         return self.epoch
 
     def patches_since(self, epoch: int) -> list[HintPatch]:
-        """The patch chain a client at `epoch` needs to reach the head.
+        """The RAW patch chain a client at `epoch` needs to reach the head.
 
         A full patch in the chain subsumes everything before it, so only the
-        suffix from the last full patch onward is returned.
+        suffix from the last full patch onward is returned.  `chain_since`
+        is the compaction-aware variant every client-facing path uses.
         """
         if not 0 <= epoch <= self.epoch:
             raise StaleEpochError(epoch, self.epoch)
-        chain = self._patches[epoch:]
-        for i in range(len(chain) - 1, -1, -1):
-            if chain[i].is_full:
-                return chain[i:]
-        return chain
+        return _subsume_full(self._patches[epoch:])
+
+    def chain_since(self, epoch: int,
+                    until: int | None = None) -> list[HintPatch]:
+        """The MINIMAL patch chain from `epoch` to `until` (default: head).
+
+        Greedy walk preferring compacted segments: at each epoch take the
+        segment starting there if one exists and does not overshoot the
+        target, else the raw patch.  A full patch anywhere in the chain
+        (rebuild epoch, or a segment that absorbed one) drops everything
+        before it.
+        """
+        goal = self.epoch if until is None else until
+        if not 0 <= epoch <= goal <= self.epoch:
+            raise StaleEpochError(epoch, self.epoch)
+        chain: list[HintPatch] = []
+        e = epoch
+        while e < goal:
+            p = self._segments.get(e)
+            if p is None or p.to_epoch > goal:
+                p = self._patches[e]
+            chain.append(p)
+            e = p.to_epoch
+        return _subsume_full(chain)
+
+    def chain_bytes(self, epoch: int, until: int | None = None) -> int:
+        """Exact downlink bytes of `chain_since(epoch, until)` (0 if fresh)."""
+        return sum(p.wire_bytes for p in self.chain_since(epoch, until))
+
+    @property
+    def stored_bytes(self) -> int:
+        """Server-side storage: raw patches plus compacted segments."""
+        return (sum(p.wire_bytes for p in self._patches)
+                + sum(p.wire_bytes for p in self._segments.values()))
 
     def check_fresh(self, epoch: int):
         """Raise StaleEpochError unless `epoch` is the published head."""
         if epoch != self.epoch:
             raise StaleEpochError(epoch, self.epoch)
+
+
+def _subsume_full(chain: list[HintPatch]) -> list[HintPatch]:
+    """Suffix of `chain` from its last full patch onward (whole chain if
+    none): a full patch carries the complete hint, so nothing before it
+    needs to travel."""
+    for i in range(len(chain) - 1, -1, -1):
+        if chain[i].is_full:
+            return chain[i:]
+    return chain
 
 
 class HintCache:
@@ -153,9 +272,15 @@ class HintCache:
         self.bytes_downloaded += patch.wire_bytes
 
     def sync(self, log: EpochLog) -> int:
-        """Catch up to the log head; returns bytes downloaded for the sync."""
+        """Catch up to the log head; returns bytes downloaded for the sync.
+
+        Downloads the MINIMAL chain (`EpochLog.chain_since`): compacted
+        segments where the log has them, raw patches elsewhere.  Applying
+        the chain is bit-identical to applying every raw patch — and to a
+        fresh full-hint download (tests/test_hint_chains.py).
+        """
         before = self.bytes_downloaded
-        for patch in log.patches_since(self.epoch):
+        for patch in log.chain_since(self.epoch):
             if patch.from_epoch != self.epoch and patch.is_full:
                 self.epoch = patch.from_epoch   # full patch subsumes the gap
             self.apply(patch)

@@ -73,12 +73,16 @@ class LiveIndex:
                  texts, embeddings, *,
                  doc_ids=None,
                  max_pad_fraction: float = 0.95,
+                 compact_every: int | None = None,
                  rebuild_kwargs: dict | None = None):
         assert system.assignment is not None, "build system via PirRagSystem.build"
         assert system.db.used_bytes is not None
         self.system = system
         self.journal = journal_lib.MutationJournal()
-        self.epochs = EpochLog()
+        # compact_every=C chains patches with periodic compaction: a client
+        # K epochs behind downloads O(K/C) precomputed segments, not K
+        # patches (the hint-delivery layer; see update.epochs.EpochLog)
+        self.epochs = EpochLog(compact_every=compact_every)
         self.max_pad_fraction = max_pad_fraction
         self._rebuild_kwargs = dict(rebuild_kwargs or {})
         # _commit_full supplies the then-current id set itself
@@ -108,6 +112,7 @@ class LiveIndex:
     @classmethod
     def build(cls, texts, embeddings, *, n_clusters: int,
               max_pad_fraction: float = 0.95, doc_ids=None,
+              compact_every: int | None = None,
               **build_kwargs) -> "LiveIndex":
         """Offline-build a PirRagSystem and wrap it as a live index.
 
@@ -115,12 +120,15 @@ class LiveIndex:
         (incl. ``mesh=`` for a sharded build) forward to
         `PirRagSystem.build` AND are replayed on every full rebuild, so a
         sharded index rebuilds through the sharded path.
+        ``compact_every=C`` enables periodic hint-patch compaction in the
+        epoch log (the many-epoch hint-delivery path).
         """
         system = pipeline.PirRagSystem.build(
             texts, embeddings, n_clusters=n_clusters, doc_ids=doc_ids,
             **build_kwargs)
         return cls(system, texts, embeddings, doc_ids=doc_ids,
                    max_pad_fraction=max_pad_fraction,
+                   compact_every=compact_every,
                    rebuild_kwargs=dict(n_clusters=n_clusters, **build_kwargs))
 
     # -- introspection -------------------------------------------------------
@@ -225,16 +233,22 @@ class LiveIndex:
 
         # Row truncation for the patch: beyond the max used length of the
         # old and new touched columns both sides are zero padding, so ΔD
-        # there is identically zero and need not travel.  (Read BEFORE the
-        # column scatter below — with donation the old buffer is consumed.)
+        # there is identically zero and need not travel.
         old_used = max(self._used[int(j)] for j in cols)
         r = max(old_used, max(used.values()))
         old_rows = np.asarray(system.server.db[:, jnp.asarray(cols)])[:r]
         delta = (new_cols[:r].astype(np.int16)
                  - old_rows.astype(np.int16))           # entries ∈ [−255, 255]
 
-        new_db_arr, delta_h = system.server.stage_update(
-            jnp.asarray(cols), jnp.asarray(new_cols), donate=donate)
+        cols_j, new_cols_j = jnp.asarray(cols), jnp.asarray(new_cols)
+        delta_h = system.server.stage_delta(cols_j, new_cols_j)
+        # The donating column scatter is DEFERRED to publish(): an exception
+        # later in this stage tail, or a caller dropping the StagedEpoch
+        # unpublished, must leave server.db serving the old epoch — never
+        # pointing at a consumed buffer.  Without donation the scatter is a
+        # fresh buffer, so it overlaps here in the (shadowable) stage phase.
+        new_db_arr = (None if donate
+                      else system.server.stage_scatter(cols_j, new_cols_j))
         # u32 wraparound: exact.  ΔH is transient, so the add donates ITS
         # buffer; the old hint array survives for in-flight decode snapshots.
         new_hint = (ops.add_delta(system.hint, delta_h)
@@ -245,7 +259,9 @@ class LiveIndex:
                                                  used, donate=donate)
 
         def apply():
-            system.server.db = new_db_arr
+            system.server.db = (
+                system.server.stage_scatter(cols_j, new_cols_j, donate=True)
+                if donate else new_db_arr)
             system.hint = new_hint
             if staged_batch is not None:
                 staged_batch.publish()

@@ -1,0 +1,215 @@
+"""Hint-delivery layer: patch composition, compaction, chain exactness.
+
+The acceptance property (ISSUE 6): for ANY mutation sequence split into
+epochs at any points, with ANY compaction configuration, a client syncing
+from any past epoch through `EpochLog.chain_since` ends bit-identical to a
+fresh full-hint download — while downloading no more bytes than the raw
+per-epoch patch chain.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.update import HintCache, LiveIndex, journal as journal_lib
+from repro.update.epochs import (EpochLog, HintPatch, StaleEpochError,
+                                 compact_chain, compose_patches)
+
+EMB = 8
+
+
+def _build_live(seed=0, n_docs=60, **kw):
+    from repro.data import corpus as corpus_lib
+    corp = corpus_lib.make_corpus(seed, n_docs, emb_dim=EMB, n_topics=4)
+    live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=4,
+                           impl="xla", kmeans_iters=4, **kw)
+    return live, corp
+
+
+def _mutate(live, rng, n_ops):
+    ids = set(live.doc_ids())
+    for _ in range(n_ops):
+        op = int(rng.integers(3))
+        if op == 0:
+            nid = int(10_000 + rng.integers(10_000))
+            if nid not in ids:
+                live.insert(nid, f"ins {nid}".encode(),
+                            rng.standard_normal(EMB).astype(np.float32))
+                ids.add(nid)
+        elif op == 1 and len(ids) > 20:
+            d = int(rng.choice(sorted(ids)))
+            live.delete(d)
+            ids.discard(d)
+        else:
+            d = int(rng.choice(sorted(ids)))
+            live.replace(d, f"rep {d}".encode(),
+                         rng.standard_normal(EMB).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# The acceptance property
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), compact_every=st.sampled_from([2, 3]))
+def test_property_chain_sync_bit_identical_from_every_epoch(
+        seed, compact_every):
+    """Any epoch split × any start epoch × compaction ⇒ exact sync.
+
+    Snapshots the hint at every epoch, then replays a client stranded at
+    EACH epoch (mid-segment starts included) through the compacted chain
+    and demands bit-identity with the live hint — and a downlink no larger
+    than the raw patch-per-epoch chain.
+    """
+    live, _ = _build_live(seed=seed % 5, compact_every=compact_every)
+    rng = np.random.default_rng(seed)
+    snaps = [(np.asarray(live.system.hint), live.system.cfg)]
+    for _ in range(int(rng.integers(4, 7))):      # epoch split points
+        _mutate(live, rng, int(rng.integers(1, 5)))
+        if live.commit() is not None:
+            snaps.append((np.asarray(live.system.hint), live.system.cfg))
+    log = live.epochs
+    final = jnp.asarray(live.system.hint)
+    for e0, (hint_e0, cfg_e0) in enumerate(snaps):
+        cache = HintCache(hint_e0, cfg_e0, epoch=e0)
+        nbytes = cache.sync(log)
+        assert cache.epoch == log.epoch
+        assert jnp.array_equal(jnp.asarray(cache.hint), final)
+        raw = sum(p.wire_bytes for p in log.patches_since(e0))
+        assert nbytes == log.chain_bytes(e0) <= raw
+        assert len(log.chain_since(e0)) <= len(log.patches_since(e0))
+
+
+def test_compacted_chain_is_shorter_and_cheaper():
+    """8 commits at compact_every=4: a stranded client downloads ~2 segments
+    + tail, not 8 patches, and far less than the full hint."""
+    live, _ = _build_live(compact_every=4)
+    rng = np.random.default_rng(1)
+    h0 = np.asarray(live.system.hint)
+    commits = 0
+    while commits < 8:
+        _mutate(live, rng, 3)
+        if live.commit() is not None:
+            commits += 1
+    log = live.epochs
+    chain = log.chain_since(0)
+    assert len(chain) == 2                         # two aligned segments
+    assert [(p.from_epoch, p.to_epoch) for p in chain] == [(0, 4), (4, 8)]
+    assert log.chain_bytes(0) <= sum(
+        p.wire_bytes for p in log.patches_since(0))
+    assert log.chain_bytes(0) < live.system.cfg.hint_bytes
+    # mid-segment client: raw prefix to the boundary, then a segment
+    mid = log.chain_since(3)
+    assert [(p.from_epoch, p.to_epoch) for p in mid] == [(3, 4), (4, 8)]
+    cache = HintCache(h0, live.system.cfg, epoch=0)
+    cache.sync(log)
+    assert jnp.array_equal(jnp.asarray(cache.hint),
+                           jnp.asarray(live.system.hint))
+
+
+def test_chain_since_until_bound():
+    """`until=` stops the walk mid-log and never hands out an overshooting
+    segment (partial catch-up accounting for reactive session syncs)."""
+    live, _ = _build_live(compact_every=2)
+    rng = np.random.default_rng(2)
+    commits = 0
+    while commits < 5:
+        _mutate(live, rng, 2)
+        if live.commit() is not None:
+            commits += 1
+    log = live.epochs
+    for e0 in range(6):
+        for e1 in range(e0, 6):
+            chain = log.chain_since(e0, e1)
+            at = e0
+            for p in chain:
+                assert p.from_epoch == at and p.to_epoch <= e1
+                at = p.to_epoch
+            assert at == e1
+            assert log.chain_bytes(e0, e1) == sum(
+                p.wire_bytes for p in chain)
+    with pytest.raises(StaleEpochError):
+        log.chain_since(2, 7)                      # past the head
+    with pytest.raises(StaleEpochError):
+        log.chain_since(4, 2)                      # backwards
+
+
+# ---------------------------------------------------------------------------
+# Composition algebra
+# ---------------------------------------------------------------------------
+
+def _delta_patch(e0, rng, m, r, n_cols):
+    """Synthetic delta patch with u8-bounded entries (as real packs have)."""
+    cols = np.sort(rng.choice(m, size=n_cols, replace=False)).astype(np.int64)
+    delta = rng.integers(-255, 256, size=(r, n_cols)).astype(np.int16)
+    return HintPatch(from_epoch=e0, to_epoch=e0 + 1, cols=cols, delta=delta)
+
+
+def test_compose_delta_delta_matches_sequential_apply():
+    """delta∘delta applied once == the two deltas applied in sequence."""
+    rng = np.random.default_rng(3)
+    m, k, r = 32, 16, 10
+    hint = jnp.asarray(rng.integers(0, 2**32, size=(m, k), dtype=np.uint32))
+    a_mat = jnp.asarray(rng.integers(0, 2**32, size=(m, k), dtype=np.uint32))
+    a = _delta_patch(0, rng, m, r, 6)
+    b = _delta_patch(1, rng, m, r - 2, 4)
+    seq = b.apply(a.apply(hint, a_mat), a_mat)
+    one = compose_patches(a, b)
+    assert (one.from_epoch, one.to_epoch) == (0, 2)
+    assert not one.is_full
+    assert jnp.array_equal(one.apply(hint, a_mat), seq)
+    assert one.wire_bytes <= a.wire_bytes + b.wire_bytes
+
+
+def test_compose_with_full_patch_subsumes_and_folds():
+    """anything∘full spans from the left edge; full∘delta folds the delta
+    into the carried hint via the seed-derived A (server-side apply)."""
+    live, _ = _build_live()
+    rng = np.random.default_rng(4)
+    cfg = live.system.cfg
+    full = HintPatch(from_epoch=2, to_epoch=3,
+                     full_hint=np.asarray(live.system.hint), cfg=cfg)
+    d = _delta_patch(1, rng, cfg.m, 8, 5)
+    sub = compose_patches(d, full)                 # delta ∘ full
+    assert sub.is_full and (sub.from_epoch, sub.to_epoch) == (1, 3)
+    assert np.array_equal(sub.full_hint, full.full_hint)
+    d2 = dataclasses.replace(_delta_patch(0, rng, cfg.m, 8, 5),
+                             from_epoch=3, to_epoch=4)
+    folded = compose_patches(full, d2)             # full ∘ delta
+    assert folded.is_full and (folded.from_epoch, folded.to_epoch) == (2, 4)
+    from repro.core import lwe
+    a_mat = lwe.gen_public_matrix(cfg.a_seed, cfg.n, cfg.params.k)
+    want = d2.apply(jnp.asarray(full.full_hint, jnp.uint32), a_mat)
+    assert jnp.array_equal(jnp.asarray(folded.full_hint), want)
+
+
+def test_full_patch_in_log_subsumes_chain_and_segments():
+    """A rebuild epoch inside a compacted span: the client chain starts at
+    the full patch (or a segment that absorbed it) — never earlier."""
+    rng = np.random.default_rng(5)
+    m, r = 32, 6
+    log = EpochLog(compact_every=2)
+    fake_hint = rng.integers(0, 2**32, size=(m, 8), dtype=np.uint32)
+    log.publish(_delta_patch(0, rng, m, r, 4))
+    log.publish(HintPatch(from_epoch=1, to_epoch=2, full_hint=fake_hint))
+    log.publish(_delta_patch(2, rng, m, r, 4))
+    log.publish(_delta_patch(3, rng, m, r, 4))
+    chain = log.chain_since(0)
+    assert chain[0].is_full                        # nothing before travels
+    assert chain[0].from_epoch in (0, 1)
+    assert chain[-1].to_epoch == 4
+    assert log.stored_bytes >= sum(p.wire_bytes for p in log.patches_since(0))
+
+
+def test_compact_chain_left_fold_matches_pairwise():
+    rng = np.random.default_rng(6)
+    patches = [_delta_patch(i, rng, 24, 5, 3) for i in range(4)]
+    one = compact_chain(patches)
+    two = compose_patches(compose_patches(patches[0], patches[1]),
+                          compose_patches(patches[2], patches[3]))
+    assert (one.from_epoch, one.to_epoch) == (two.from_epoch, two.to_epoch)
+    assert np.array_equal(one.cols, two.cols)
+    assert np.array_equal(one.delta, two.delta)

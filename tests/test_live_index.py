@@ -9,7 +9,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 from repro.core import chunking
 from repro.update import (HintCache, LiveIndex, StaleEpochError,
-                          journal as journal_lib)
+                          journal as journal_lib, routing)
 from repro.update.planner import plan_updates
 
 
@@ -247,3 +247,66 @@ def test_db_mirror_tracks_mutations():
     sizes = [len(chunking.deserialize_docs(live.system.db.matrix[:, j], 8))
              for j in range(3)]
     assert np.array_equal(live.system.db.cluster_sizes, sizes)
+
+
+# ---------------------------------------------------------------------------
+# Donation-rollback safety (ISSUE 6 satellite): an aborted or dropped
+# donating stage must leave the serving buffers intact
+# ---------------------------------------------------------------------------
+
+def test_aborted_donating_stage_keeps_serving(monkeypatch):
+    """stage(donate=True) raising mid-stage leaves server.db valid.
+
+    Donating scatters are deferred into the publish-side apply(), so the
+    retiring buffer is never consumed by a stage that doesn't complete —
+    the query below would decode garbage (or crash on a deleted buffer)
+    under the old eager-donation ordering.
+    """
+    live, corp = _build_live(n_docs=100, emb_dim=12, n_clusters=5)
+    live.system.enable_batch(kappa=4)
+    live.replace(3, b"doomed edit", corp.embeddings[3])
+
+    def boom(*a, **k):
+        raise RuntimeError("mid-stage failure")
+
+    monkeypatch.setattr(routing, "stage_batch_hints", boom)
+    with pytest.raises(RuntimeError, match="mid-stage"):
+        live.stage(donate=True)
+    monkeypatch.undo()
+
+    # old epoch still serves, bit-exactly: content is the pre-edit text
+    top, _ = live.query(corp.embeddings[3], epoch=live.epoch, top_k=3,
+                        key=jax.random.PRNGKey(11))
+    assert [t for d, _, t in top if d == 3] == [corp.texts[3]]
+    # the journal survived the abort: a retried donating commit lands
+    patch = live.commit(donate=True)
+    assert patch is not None and live.epoch == 1
+    top, _ = live.query(corp.embeddings[3], epoch=live.epoch, top_k=3,
+                        key=jax.random.PRNGKey(12))
+    assert [t for d, _, t in top if d == 3] == [b"doomed edit"]
+    fresh = jax.block_until_ready(live.system.server.setup())
+    assert jnp.array_equal(fresh, live.system.hint)
+
+
+def test_dropped_donating_staged_epoch_is_harmless():
+    """A StagedEpoch built with donate=True and never published leaves the
+    live epoch serving (single- and multi-probe) and can be re-staged."""
+    live, corp = _build_live(n_docs=100, emb_dim=12, n_clusters=5)
+    live.system.enable_batch(kappa=4)
+    live.replace(5, b"five v2", corp.embeddings[5])
+    staged = live.stage(donate=True)
+    assert staged is not None
+    del staged                                     # dropped, never published
+
+    top, _ = live.query(corp.embeddings[5], epoch=live.epoch, top_k=3,
+                        key=jax.random.PRNGKey(13))
+    assert [t for d, _, t in top if d == 5] == [corp.texts[5]]
+    top, _ = live.query(corp.embeddings[5], epoch=live.epoch, top_k=3,
+                        multi_probe=2, key=jax.random.PRNGKey(14))
+    assert [t for d, _, t in top if d == 5] == [corp.texts[5]]
+
+    patch = live.publish(live.stage(donate=True))  # re-stage then publish
+    assert patch is not None and live.epoch == 1
+    top, _ = live.query(corp.embeddings[5], epoch=live.epoch, top_k=3,
+                        multi_probe=2, key=jax.random.PRNGKey(15))
+    assert [t for d, _, t in top if d == 5] == [b"five v2"]

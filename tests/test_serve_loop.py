@@ -108,19 +108,20 @@ def test_per_batch_keys_are_distinct(system):
     loop = PIRServeLoop(sys, max_batch=2, deadline_ms=1e9, seed=0)
     import repro.core.pipeline as pipeline_mod
     seen_keys = []
-    orig = pipeline_mod.PirRagSystem.query_batch
+    # the sync loop routes through query_batch_async for component timing
+    orig = pipeline_mod.PirRagSystem.query_batch_async
 
     def spy(self, embs, **kw):
         seen_keys.append(np.asarray(kw["key"]).tolist())
         return orig(self, embs, **kw)
 
-    pipeline_mod.PirRagSystem.query_batch = spy
+    pipeline_mod.PirRagSystem.query_batch_async = spy
     try:
         for rid in range(4):
             loop.submit(rid, corp.embeddings[0])   # identical queries
             loop.tick()
     finally:
-        pipeline_mod.PirRagSystem.query_batch = orig
+        pipeline_mod.PirRagSystem.query_batch_async = orig
     assert len(seen_keys) == 2
     assert seen_keys[0] != seen_keys[1]
 

@@ -1,0 +1,210 @@
+"""Traffic subsystem: open-loop generation, SLO accounting, admission.
+
+Everything runs on a FakeClock (virtual time, deterministic): the driver
+takes its clock from the serve loop, so arrival pacing, deadline cuts and
+latency components are exact functions of the schedule — no wall-clock
+flakiness in tier-1.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.data import corpus as corpus_lib
+from repro.serve import PIRServeLoop, PipelinedServeLoop
+from repro.serve.engine import DeadlineBatcher, Request
+from repro.traffic import (AdmissionController, OpenLoopDriver, TrafficSpec,
+                           poisson_arrivals, summarize)
+from repro.traffic.slo import SERVED, SHED, RequestRecord
+from repro.update import LiveIndex, journal as journal_lib
+
+N_DOCS = 120
+EMB = 16
+
+
+class FakeClock:
+    """Monotone virtual clock advancing a fixed step per reading."""
+
+    def __init__(self, step: float = 1e-4):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+_BASE: dict = {}
+
+
+def _get_base():
+    if not _BASE:
+        corp = corpus_lib.make_corpus(3, N_DOCS, emb_dim=EMB, n_topics=5)
+        live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=5,
+                               impl="xla", kmeans_iters=5, compact_every=2)
+        live.system.enable_batch(kappa=4)
+        _BASE["corp"], _BASE["live"] = corp, live
+    return _BASE["corp"], _BASE["live"]
+
+
+def _mutator(rng):
+    doc = int(rng.integers(N_DOCS))
+    return journal_lib.replace(doc, f"mut {doc}".encode(),
+                               rng.standard_normal(EMB).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Arrival process
+# ---------------------------------------------------------------------------
+
+def test_poisson_arrivals_rate_and_determinism():
+    t1 = poisson_arrivals(np.random.default_rng(7), 100.0, 10.0)
+    t2 = poisson_arrivals(np.random.default_rng(7), 100.0, 10.0)
+    assert np.array_equal(t1, t2)                  # seeded ⇒ reproducible
+    assert np.all(np.diff(t1) > 0) and t1[-1] < 10.0
+    assert 800 < len(t1) < 1200                    # ~1000 ± Poisson noise
+    assert poisson_arrivals(np.random.default_rng(0), 0.0, 5.0).size == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO fold
+# ---------------------------------------------------------------------------
+
+def test_summarize_counts_shed_against_attainment_and_p99():
+    recs = [RequestRecord(i, 0, t_arrival=0.0, t_done=0.005)
+            for i in range(98)]                    # 5 ms each
+    recs += [RequestRecord(98, 0, t_arrival=0.0, outcome=SHED),
+             RequestRecord(99, 0, t_arrival=0.0, outcome=SHED)]
+    s = summarize(recs, deadline_ms=10.0, wall_s=1.0)
+    assert s["offered"] == 100 and s["served"] == 98 and s["shed"] == 2
+    assert s["attainment"] == 0.98                 # shed = missed
+    assert s["p50_ms"] == 5.0
+    assert s["p99_ms"] == float("inf")             # the tail IS the sheds
+    assert s["served_qps"] == 98.0
+    assert set(s["components"]) == {"queue_ms", "encode_ms", "gemm_ms",
+                                    "decode_ms", "hint_sync_ms"}
+    empty = summarize([], deadline_ms=10.0, wall_s=0.0)
+    assert empty["offered"] == 0 and empty["attainment"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Engine observability + admission primitives (deterministic, no driver)
+# ---------------------------------------------------------------------------
+
+def _req(rid, t):
+    return Request(rid, np.zeros(EMB, np.float32), t, epoch=0)
+
+
+def test_batcher_depth_age_and_shed_tail():
+    b = DeadlineBatcher(max_batch=8, deadline_ms=20.0)
+    assert b.depth == 0 and b.oldest_age_ms(5.0) == 0.0
+    for i in range(6):
+        b.submit(_req(i, 1.0 + i * 0.001))
+    assert b.depth == 6
+    assert b.oldest_age_ms(1.010) == pytest.approx(10.0)
+    shed = b.shed_tail(2)
+    assert [r.rid for r in shed] == [4, 5]         # youngest, arrival order
+    assert b.depth == 4
+    assert [r.rid for r in b.cut()] == [0, 1, 2, 3]
+    assert b.shed_tail(3) == []                    # empty queue: no-op
+
+
+def test_admission_sheds_defers_and_adapts_depth():
+    corp, live0 = _get_base()
+    live = copy.deepcopy(live0)
+    loop = PipelinedServeLoop(live, max_batch=4, deadline_ms=5.0,
+                              clock=FakeClock(), depth=1)
+    ctl = AdmissionController(max_queue=8, defer_queue=4,
+                              min_depth=1, max_depth=3).attach(loop)
+    for i in range(14):
+        loop.submit(i, corp.embeddings[i % N_DOCS])
+    loop.submit_mutation(_mutator(np.random.default_rng(0)))
+    loop.tick()                                    # gated: queue is deep
+    assert loop.epoch == 0 and ctl.deferred_commits >= 1
+    shed = ctl.step(loop.clock())
+    assert loop.batcher.depth <= 8
+    assert len(shed) == ctl.shed_total > 0
+    assert {r.rid for r in shed} <= set(range(14))
+    assert loop.depth == 2                         # ceil(8 / 4)
+    loop.drain()                                   # drain bypasses the gate
+    assert loop.epoch == 1 and loop.batcher.depth == 0
+    # backlog cleared: gate opens and depth relaxes back down
+    loop.submit_mutation(_mutator(np.random.default_rng(1)))
+    loop.tick()
+    assert loop.epoch == 2
+    ctl.step(loop.clock())
+    assert loop.depth == 1
+    stats = ctl.stats()
+    assert stats["shed"] == len(shed) and stats["allowed_commits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end open-loop runs (virtual time)
+# ---------------------------------------------------------------------------
+
+def test_open_loop_run_serves_everything_with_components():
+    corp, live0 = _get_base()
+    live = copy.deepcopy(live0)
+    loop = PipelinedServeLoop(live, max_batch=8, deadline_ms=5.0,
+                              clock=FakeClock(), depth=2)
+    spec = TrafficSpec(qps=60.0, duration_s=1.0, n_sessions=4,
+                       probe_mix=((1, 0.7), (2, 0.3)), seed=11)
+    res = OpenLoopDriver(loop, corp.embeddings, spec).run()
+    assert len(res.records) > 30
+    assert all(r.outcome == SERVED and r.t_done is not None
+               for r in res.records)
+    for r in res.records:
+        assert r.t_done > r.t_arrival
+        assert r.queue_ms > 0 and r.encode_ms > 0 and r.decode_ms > 0
+    s = res.summary(deadline_ms=1000.0)
+    assert s["served"] == s["offered"] == len(res.records)
+    assert s["shed"] == 0 and s["attainment"] == 1.0
+    assert 0 < s["p50_ms"] <= s["p99_ms"] < float("inf")
+    assert s["components"]["queue_ms"]["mean"] > 0
+
+
+def test_open_loop_with_mutations_syncs_sessions_exactly():
+    """Commits during the run leave sessions behind; every synced byte is
+    charged to exactly one request record (proactive or reactive)."""
+    corp, live0 = _get_base()
+    live = copy.deepcopy(live0)
+    loop = PIRServeLoop(live, max_batch=4, deadline_ms=5.0,
+                        clock=FakeClock())
+    spec = TrafficSpec(qps=50.0, duration_s=1.2, n_sessions=3,
+                       probe_mix=((1, 1.0),), staleness_tolerance=0,
+                       mutation_qps=5.0, seed=5)
+    res = OpenLoopDriver(loop, corp.embeddings, spec,
+                         mutator=_mutator).run()
+    assert res.commits >= 1
+    assert all(r.outcome == SERVED for r in res.records)
+    charged = sum(r.hint_sync_bytes for r in res.records)
+    assert charged == res.session_sync_bytes > 0
+    s = res.summary(deadline_ms=1000.0)
+    assert s["commits"] == res.commits
+    assert s["hint_sync_bytes"] == charged
+    assert s["components"]["hint_sync_ms"]["mean"] >= 0
+
+
+def test_open_loop_overload_sheds_and_bounds_queue():
+    """Offered load far above the virtual service rate: the controller
+    sheds the excess, every offered request is accounted exactly once, and
+    the queue never outgrows max_queue + one arrival burst."""
+    corp, live0 = _get_base()
+    live = copy.deepcopy(live0)
+    # big clock step makes service slow in VIRTUAL time: each clock read
+    # costs 2 ms, so a tick (several reads) can't keep up with 400 qps
+    loop = PipelinedServeLoop(live, max_batch=2, deadline_ms=1.0,
+                              clock=FakeClock(step=2e-3), depth=1)
+    spec = TrafficSpec(qps=400.0, duration_s=0.6, n_sessions=2,
+                       probe_mix=((1, 1.0),), seed=9)
+    ctl = AdmissionController(max_queue=6, defer_queue=3, max_depth=2)
+    res = OpenLoopDriver(loop, corp.embeddings, spec, controller=ctl).run()
+    s = res.summary(deadline_ms=50.0)
+    assert s["shed"] == ctl.shed_total > 0
+    assert s["served"] + s["shed"] == s["offered"]
+    assert s["attainment"] < 1.0
+    assert s["p99_ms"] == float("inf")             # sheds dominate the tail
+    served_lat = [r.latency_ms for r in res.records if r.outcome == SERVED]
+    assert max(served_lat) < float("inf")
+    assert loop.batcher.depth == 0                 # drained at the end
+    assert s["admission"]["shed"] == s["shed"]
