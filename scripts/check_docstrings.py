@@ -35,6 +35,10 @@ MODULES = [
     "repro.traffic.admission",
     "repro.distributed.collectives",
     "repro.kernels.ops",
+    "repro.obs",
+    "repro.obs.registry",
+    "repro.obs.trace",
+    "repro.obs.scrub",
 ]
 
 

@@ -1,0 +1,134 @@
+"""CI gate: validate a Chrome-trace export against the checked-in schema.
+
+    PYTHONPATH=src python scripts/check_trace.py trace_serve.json
+
+Three layers, all hard failures (exit 1):
+
+  1. structural — `repro.obs.trace.validate_chrome_trace` (name/ph/ts/dur
+     shape of every event);
+  2. schema — the checked-in ``scripts/trace_schema.json`` subset of the
+     Chrome Trace Event Format, enforced by a hand-rolled walker (the CI
+     image has no ``jsonschema``; the walker covers exactly the keywords
+     the schema uses: type, enum, required, properties,
+     additionalProperties, minimum, minLength, if/then const);
+  3. privacy — every ``args`` value re-passes the `repro.obs.scrub`
+     allowlist, so a trace that somehow recorded a query-derived payload
+     fails CI even if the record-time gate were bypassed.
+
+Also sanity-checks span-tree integrity: every non-root ``parent`` id must
+name another event's ``sid``, and sids must be unique.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+_TYPES = {"object": dict, "array": list, "string": str,
+          "integer": int, "boolean": bool, "number": (int, float)}
+
+
+def _check_type(value, typ) -> bool:
+    """One JSON-schema ``type`` check (bool is NOT an integer/number)."""
+    if isinstance(typ, list):
+        return any(_check_type(value, t) for t in typ)
+    py = _TYPES[typ]
+    if typ in ("integer", "number") and isinstance(value, bool):
+        return False
+    return isinstance(value, py)
+
+
+def _validate(value, schema: dict, path: str, errs: list[str]) -> None:
+    """Walk `value` against the schema subset trace_schema.json uses."""
+    typ = schema.get("type")
+    if typ is not None and not _check_type(value, typ):
+        errs.append(f"{path}: expected {typ}, got {type(value).__name__}")
+        return
+    if "enum" in schema and value not in schema["enum"]:
+        errs.append(f"{path}: {value!r} not in {schema['enum']}")
+    if "const" in schema and value != schema["const"]:
+        errs.append(f"{path}: {value!r} != {schema['const']!r}")
+    if isinstance(value, (int, float)) and not isinstance(value, bool):
+        if "minimum" in schema and value < schema["minimum"]:
+            errs.append(f"{path}: {value} < minimum {schema['minimum']}")
+    if isinstance(value, str) and len(value) < schema.get("minLength", 0):
+        errs.append(f"{path}: shorter than minLength")
+    if isinstance(value, dict):
+        for req in schema.get("required", []):
+            if req not in value:
+                errs.append(f"{path}: missing required key {req!r}")
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties")
+        for k, v in value.items():
+            if k in props:
+                _validate(v, props[k], f"{path}.{k}", errs)
+            elif isinstance(extra, dict):
+                _validate(v, extra, f"{path}.{k}", errs)
+        cond = schema.get("if")
+        if cond is not None:
+            matches = not any(
+                _fails(value.get(k), sub)
+                for k, sub in cond.get("properties", {}).items())
+            if matches:
+                _validate(value, schema.get("then", {}), path, errs)
+    if isinstance(value, list) and "items" in schema:
+        for i, item in enumerate(value):
+            _validate(item, schema["items"], f"{path}[{i}]", errs)
+
+
+def _fails(value, schema: dict) -> bool:
+    """True when `value` FAILS `schema` (used for if/then dispatch)."""
+    errs: list[str] = []
+    _validate(value, schema, "", errs)
+    return bool(errs)
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(f"usage: {argv[0]} TRACE.json")
+        return 2
+    from repro.obs import PrivacyViolation, scrub
+    from repro.obs.trace import validate_chrome_trace
+
+    with open(argv[1]) as f:
+        trace = json.load(f)
+    errs = validate_chrome_trace(trace)
+
+    with open(os.path.join(os.path.dirname(__file__),
+                           "trace_schema.json")) as f:
+        schema = json.load(f)
+    _validate(trace, schema, "$", errs)
+
+    events = trace.get("traceEvents", [])
+    sids = [e["args"]["sid"] for e in events
+            if isinstance(e, dict) and isinstance(e.get("args"), dict)
+            and "sid" in e["args"]]
+    if len(sids) != len(set(sids)):
+        errs.append("duplicate span ids in export")
+    known = set(sids)
+    for i, e in enumerate(events):
+        args = e.get("args", {}) if isinstance(e, dict) else {}
+        parent = args.get("parent", -1)
+        if parent != -1 and parent not in known:
+            errs.append(f"event {i}: parent {parent} names no exported sid")
+        for key, val in args.items():
+            try:
+                scrub(val, where=f"event {i} ({e.get('name')}) {key!r}")
+            except PrivacyViolation as exc:
+                errs.append(f"PRIVACY: {exc}")
+
+    if errs:
+        print(f"{argv[1]}: {len(errs)} problem(s)")
+        for e in errs[:50]:
+            print("  -", e)
+        return 1
+    n_spans = sum(1 for e in events if e.get("ph") == "X")
+    print(f"{argv[1]}: OK ({n_spans} spans, "
+          f"{len(events) - n_spans} instants; schema + privacy clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -52,6 +52,14 @@ def main():  # pragma: no cover - exercised by examples/tests
                          "placed shard-by-shard (docs/architecture.md), "
                          "then served through the zero-collective answer "
                          "path — results bit-identical either way")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export a Chrome-trace (chrome://tracing / "
+                         "Perfetto) of the run's spans to this path; "
+                         "privacy-scrubbed at record time "
+                         "(docs/observability.md)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the metrics registry (counters/gauges/"
+                         "histograms) as JSON after the run")
     args = ap.parse_args()
 
     from repro.core import pipeline
@@ -65,11 +73,15 @@ def main():  # pragma: no cover - exercised by examples/tests
         mesh = jax.make_mesh((args.shard,), ("chunks",),
                              devices=jax.devices()[:args.shard])
 
+    from repro.obs import Obs
+
     corp = corpus_lib.make_corpus(0, args.docs, emb_dim=64, n_topics=24)
     rng = np.random.default_rng(0)
     loop_cls = (PipelinedServeLoop if args.engine == "pipelined"
                 else PIRServeLoop)
-    loop_kw = dict(max_batch=args.max_batch, deadline_ms=args.deadline_ms)
+    obs = Obs(trace=args.trace is not None)
+    loop_kw = dict(max_batch=args.max_batch, deadline_ms=args.deadline_ms,
+                   obs=obs)
     if args.engine == "pipelined":
         loop_kw["depth"] = args.depth
     if args.mutate_every > 0:
@@ -108,6 +120,16 @@ def main():  # pragma: no cover - exercised by examples/tests
           f"{np.percentile(lat, 99):.2f}s"
           + (f"; epoch {loop.epoch}; stale retries {loop.stale_retries}"
              if live is not None else ""))
+    if args.trace is not None:
+        from repro.obs import span_coverage
+        obs.export_chrome(args.trace)
+        cov = span_coverage(obs.tracer.spans)
+        print(f"trace: {len(obs.tracer.spans)} spans + "
+              f"{len(obs.tracer.instants)} instants -> {args.trace} "
+              f"(root-span coverage {cov:.1%})")
+    if args.metrics:
+        import json
+        print(json.dumps(obs.metrics_dict(), indent=1))
 
 
 if __name__ == "__main__":

@@ -40,6 +40,7 @@ from typing import Callable, Iterable
 import jax
 import numpy as np
 
+from repro.obs import Obs
 from repro.serve.epochs import ShadowCommitter
 
 
@@ -165,16 +166,26 @@ class PIRServeLoop:
     batching, epoch admission and key-stream logic never look at the mesh).
     """
 
+    #: span attribute naming this engine (registered enum in repro.obs.scrub)
+    ENGINE = "sync"
+
     def __init__(self, system, *, max_batch: int = 64,
                  deadline_ms: float = 20.0,
                  clock: Callable[[], float] = time.perf_counter,
-                 live=None, seed: int = 0):
+                 live=None, seed: int = 0, obs: Obs | None = None):
         self.live = live if live is not None else (
             system if hasattr(system, "epochs") else None)
         self.system = system if self.live is None else self.live.system
         self.batcher = DeadlineBatcher(max_batch=max_batch,
                                        deadline_ms=deadline_ms)
         self.clock = clock
+        # Observability: spans time every tick stage (BatchTiming is built
+        # from their boundaries) and the registry carries serving counters.
+        # The default Obs(trace=False) keeps the timeline without retaining
+        # spans; pass Obs(trace=True, clock=<same clock>) to export traces.
+        self.obs = obs if obs is not None else Obs(clock=clock, trace=False)
+        if self.live is not None:
+            self.live.set_obs(self.obs)
         self.responses: list[Response] = []
         self.mutations: deque = deque()
         self.stale_retries = 0
@@ -235,6 +246,8 @@ class PIRServeLoop:
             self.stale_retries += 1
             r.epoch = cur
             r.retries += 1
+        if stale:
+            self.obs.counter("serve.stale_retries").inc(len(stale))
         self.batcher.requeue_front(stale)
         return fresh
 
@@ -258,40 +271,56 @@ class PIRServeLoop:
 
         force=True flushes a partial batch regardless of the deadline
         (used by drain) WITHOUT touching the configured deadline_ms.
-        """
-        self._commit_mutations()
-        now = self.clock()
-        if not self.batcher.ready(now) and not (force and self.batcher.queue):
-            return 0
-        cur = self.epoch
-        fresh = self._admit(self.batcher.cut(), cur)
-        if not fresh:
-            return 0
 
-        system = self._serving_system()
-        for mp, reqs in self._probe_groups(fresh):
-            embs = np.stack([r.query_emb for r in reqs])
-            self._key, kq = jax.random.split(self._key)
-            t_plan = self.clock()
-            infl = system.query_batch_async(
-                embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
-            t_disp = self.clock()
-            # query_batch ≡ query_batch_async().complete(); going through
-            # the async form here only adds the component timestamps —
-            # responses stay bit-identical to the one-call path
-            jax.block_until_ready(infl.pending)
-            t_gemm = self.clock()
-            results = infl.complete()
-            t = self.clock()
-            self._record(reqs, results, cur, t, BatchTiming(
-                t_plan=t_plan, encode_s=t_disp - t_plan,
-                gemm_s=t_gemm - t_disp, decode_s=t - t_gemm))
-        return len(fresh)
+        The tick is one root span; plan (encode) / gemm (device wait) /
+        complete (decode + re-rank) are nested spans whose boundaries ARE
+        the `BatchTiming` components — one timeline, two consumers.
+        """
+        with self.obs.span("serve.tick", engine=self.ENGINE) as tick_sp:
+            self.obs.gauge("serve.queue_depth").set(self.batcher.depth)
+            self._commit_mutations()
+            now = self.clock()
+            if (not self.batcher.ready(now)
+                    and not (force and self.batcher.queue)):
+                return 0
+            cur = self.epoch
+            fresh = self._admit(self.batcher.cut(), cur)
+            if not fresh:
+                return 0
+            tick_sp.set(batch=len(fresh), epoch=cur)
+
+            system = self._serving_system()
+            for mp, reqs in self._probe_groups(fresh):
+                embs = np.stack([r.query_emb for r in reqs])
+                self._key, kq = jax.random.split(self._key)
+                # query_batch ≡ query_batch_async().complete(); the async
+                # form only adds the component span boundaries — responses
+                # stay bit-identical to the one-call path
+                with self.obs.span("serve.plan", batch=len(reqs),
+                                   multi_probe=mp) as sp_plan:
+                    infl = system.query_batch_async(
+                        embs, top_k=[r.top_k for r in reqs],
+                        multi_probe=mp, key=kq)
+                with self.obs.span("serve.gemm", batch=len(reqs)) as sp_gemm:
+                    jax.block_until_ready(infl.pending)
+                with self.obs.span("serve.complete",
+                                   batch=len(reqs)) as sp_done:
+                    results = infl.complete()
+                self._record(reqs, results, cur, sp_done.t1, BatchTiming(
+                    t_plan=sp_plan.t0, encode_s=sp_plan.dur,
+                    gemm_s=sp_gemm.dur, decode_s=sp_done.dur))
+            return len(fresh)
 
     def _record(self, reqs: list[Request], results: list, epoch: int,
                 t_done: float, timing: BatchTiming):
         """Append one served group's responses (shared batch timing)."""
+        self.obs.counter("serve.responses").inc(len(reqs))
+        self.obs.histogram("serve.batch_size",
+                           bounds=(1, 2, 4, 8, 16, 32, 64, 128)
+                           ).record(len(reqs))
+        lat_hist = self.obs.histogram("serve.latency_ms")
         for req, top in zip(reqs, results):
+            lat_hist.record((t_done - req.t_arrival) * 1e3)
             # batch_size = this group's GEMM width, not the tick total
             self.responses.append(Response(
                 req.rid, top, t_done, len(reqs), epoch=epoch,
@@ -326,6 +355,8 @@ class PipelinedServeLoop(PIRServeLoop):
     synchronous loop commits on — which is why responses, epochs and retry
     counts stay bit-identical.
     """
+
+    ENGINE = "pipelined"
 
     def __init__(self, system, *, depth: int = 2, donate: bool = True,
                  **kwargs):
@@ -363,33 +394,43 @@ class PipelinedServeLoop(PIRServeLoop):
 
         Returns the number of requests DISPATCHED (their responses land
         when the pipeline retires them — per-request completion timestamps
-        are taken at the complete stage).
+        are taken at the complete stage).  The plan span's boundaries seed
+        each in-flight batch's `BatchTiming`; its gemm/complete spans are
+        opened by the LATER tick that retires it, which is exactly the
+        nesting the trace shows (a complete span parented by a younger
+        tick than its plan span — the pipeline overlap made visible).
         """
-        self._commit_mutations()
-        now = self.clock()
-        if not self.batcher.ready(now) and not (force and self.batcher.queue):
-            # idle tick: nothing to dispatch, so retire EVERYTHING in
-            # flight — during a traffic lull responses must not sit decoded
-            # -but-unreported behind the depth bound
-            self._retire(0)
-            return 0
-        cur = self.epoch
-        fresh = self._admit(self.batcher.cut(), cur)
-        if not fresh:
-            return 0
+        with self.obs.span("serve.tick", engine=self.ENGINE) as tick_sp:
+            self.obs.gauge("serve.queue_depth").set(self.batcher.depth)
+            self._commit_mutations()
+            now = self.clock()
+            if (not self.batcher.ready(now)
+                    and not (force and self.batcher.queue)):
+                # idle tick: nothing to dispatch, so retire EVERYTHING in
+                # flight — during a traffic lull responses must not sit
+                # decoded-but-unreported behind the depth bound
+                self._retire(0)
+                return 0
+            cur = self.epoch
+            fresh = self._admit(self.batcher.cut(), cur)
+            if not fresh:
+                return 0
+            tick_sp.set(batch=len(fresh), epoch=cur)
 
-        system = self._serving_system()
-        for mp, reqs in self._probe_groups(fresh):
-            embs = np.stack([r.query_emb for r in reqs])
-            self._key, kq = jax.random.split(self._key)
-            t_plan = self.clock()
-            infl = system.query_batch_async(
-                embs, top_k=[r.top_k for r in reqs], multi_probe=mp, key=kq)
-            t_disp = self.clock()
-            self._inflight.append((reqs, cur, infl, t_plan,
-                                   t_disp - t_plan))
-        self._retire(self.depth)
-        return len(fresh)
+            system = self._serving_system()
+            for mp, reqs in self._probe_groups(fresh):
+                embs = np.stack([r.query_emb for r in reqs])
+                self._key, kq = jax.random.split(self._key)
+                with self.obs.span("serve.plan", batch=len(reqs),
+                                   multi_probe=mp) as sp_plan:
+                    infl = system.query_batch_async(
+                        embs, top_k=[r.top_k for r in reqs],
+                        multi_probe=mp, key=kq)
+                self._inflight.append((reqs, cur, infl, sp_plan.t0,
+                                       sp_plan.dur))
+            self.obs.gauge("serve.inflight").set(len(self._inflight))
+            self._retire(self.depth)
+            return len(fresh)
 
     def _retire(self, limit: int):
         """Complete (decode + record) oldest in-flight batches beyond limit.
@@ -401,14 +442,13 @@ class PipelinedServeLoop(PIRServeLoop):
         """
         while len(self._inflight) > limit:
             reqs, epoch, infl, t_plan, encode_s = self._inflight.popleft()
-            t0 = self.clock()
-            jax.block_until_ready(infl.pending)
-            t1 = self.clock()
-            results = infl.complete()
-            t = self.clock()
-            self._record(reqs, results, epoch, t, BatchTiming(
-                t_plan=t_plan, encode_s=encode_s, gemm_s=t1 - t0,
-                decode_s=t - t1))
+            with self.obs.span("serve.gemm", batch=len(reqs)) as sp_gemm:
+                jax.block_until_ready(infl.pending)
+            with self.obs.span("serve.complete", batch=len(reqs)) as sp_done:
+                results = infl.complete()
+            self._record(reqs, results, epoch, sp_done.t1, BatchTiming(
+                t_plan=t_plan, encode_s=encode_s, gemm_s=sp_gemm.dur,
+                decode_s=sp_done.dur))
 
     def drain(self):
         """Serve and complete everything: queue, mutations, and pipeline.
@@ -421,4 +461,5 @@ class PipelinedServeLoop(PIRServeLoop):
                 self.tick(force=True)
         finally:
             self.commit_gate = gate
-        self._retire(0)
+        with self.obs.span("serve.drain", engine=self.ENGINE):
+            self._retire(0)

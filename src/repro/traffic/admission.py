@@ -69,6 +69,7 @@ class AdmissionController:
         """Commit gate: hold epoch bumps while the queue is deep."""
         if self.loop.batcher.depth > self.defer_queue:
             self.deferred_commits += 1
+            self.loop.obs.counter("admission.deferred_commits").inc()
             return False
         self.allowed_commits += 1
         return True
@@ -82,6 +83,9 @@ class AdmissionController:
         if over > 0:
             shed = loop.batcher.shed_tail(over)
             self.shed_total += len(shed)
+            loop.obs.counter("admission.shed").inc(len(shed))
+            loop.obs.instant("admission.shed", n=len(shed),
+                             depth=loop.batcher.depth)
         if hasattr(loop, "set_depth"):
             want = max(self.min_depth, min(
                 self.max_depth,
@@ -89,6 +93,8 @@ class AdmissionController:
             if want != loop.depth:
                 loop.set_depth(want)
                 self.depth_trajectory.append(want)
+                loop.obs.counter("admission.depth_changes").inc()
+                loop.obs.instant("admission.depth", depth=want)
         return shed
 
     def stats(self) -> dict:

@@ -16,6 +16,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.registry import percentile
+
 SHED = "shed"
 SERVED = "served"
 
@@ -54,13 +56,16 @@ class RequestRecord:
 
 
 def _pct(values: np.ndarray, q: float) -> float:
-    """Percentile that propagates +inf (shed requests) instead of NaN."""
-    if values.size == 0:
-        return 0.0
-    # np.percentile interpolates, which turns a single inf into NaN for
-    # everything above the last finite sample; the order statistic doesn't.
-    k = min(values.size - 1, int(np.ceil(q / 100 * values.size)) - 1)
-    return float(np.sort(values)[max(k, 0)])
+    """Percentile that propagates +inf (shed requests) instead of NaN.
+
+    Delegates to the repo's single rank rule (`repro.obs.registry
+    .percentile`): the order statistic at rank ``ceil(q/100·n) − 1``.
+    np.percentile interpolates, which turns a single inf into NaN for
+    everything above the last finite sample; the order statistic doesn't —
+    pinned by tests/test_traffic.py.  Kept as a named wrapper so the SLO
+    fold and the metrics registry provably share one convention.
+    """
+    return percentile(values, q)
 
 
 def summarize(records: list[RequestRecord], *, deadline_ms: float,

@@ -202,6 +202,7 @@ class OpenLoopDriver:
                                       max(sess.epoch, r.epoch))
                 rec.hint_sync_bytes += nbytes
                 rec.hint_sync_ms += self._downlink_ms(nbytes)
+                self._count_sync(nbytes, reactive=True)
             if r.timing is not None:
                 rec.queue_ms = (r.timing.t_plan - r.t_arrival) * 1e3
                 rec.encode_ms = r.timing.encode_s * 1e3
@@ -212,6 +213,13 @@ class OpenLoopDriver:
     def _downlink_ms(self, nbytes: int) -> float:
         """Modelled time to ship `nbytes` over the spec'd downlink."""
         return nbytes * 8 / (self.spec.downlink_gbps * 1e9) * 1e3
+
+    def _count_sync(self, nbytes: int, *, reactive: bool):
+        """Charge one hint sync to the loop's metrics registry."""
+        kind = "reactive" if reactive else "proactive"
+        obs = self.loop.obs
+        obs.counter(f"traffic.hint_sync_bytes.{kind}").inc(nbytes)
+        obs.counter(f"traffic.hint_syncs.{kind}").inc()
 
     # -- arrivals -------------------------------------------------------------
 
@@ -225,6 +233,7 @@ class OpenLoopDriver:
             if behind > self.spec.staleness_tolerance:
                 sync_bytes = sess.sync_to(live.epochs)
                 sync_ms = self._downlink_ms(sync_bytes)
+                self._count_sync(sync_bytes, reactive=False)
         emb = self.queries[int(self.rng.integers(len(self.queries)))]
         mp = int(self.rng.choice(self._probes, p=self._probe_w))
         rec = RequestRecord(rid, sess.sid, t_arrival=self.clock(),

@@ -166,6 +166,9 @@ class EpochLog:
         self.compact_every = compact_every
         self._patches: list[HintPatch] = []
         self._segments: dict[int, HintPatch] = {}   # from_epoch → segment
+        # Optional observability handle (repro.obs.Obs); LiveIndex threads
+        # its own through so compaction events land in the serving trace.
+        self.obs = None
 
     def publish(self, patch: HintPatch) -> int:
         """Append the next epoch's patch; returns the new head epoch.
@@ -182,7 +185,15 @@ class EpochLog:
         c = self.compact_every
         if c and self.epoch % c == 0:
             lo = self.epoch - c
-            self._segments[lo] = compact_chain(self._patches[lo:self.epoch])
+            seg = compact_chain(self._patches[lo:self.epoch])
+            self._segments[lo] = seg
+            if self.obs is not None:
+                self.obs.counter("epoch.compactions").inc()
+                self.obs.instant("epoch.compact", from_epoch=lo,
+                                 to_epoch=self.epoch,
+                                 segment_bytes=seg.wire_bytes)
+        if self.obs is not None:
+            self.obs.gauge("epoch.stored_bytes").set(self.stored_bytes)
         return self.epoch
 
     def patches_since(self, epoch: int) -> list[HintPatch]:

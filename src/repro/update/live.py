@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core import chunking, pipeline
 from repro.kernels import ops
+from repro.obs import DEFAULT_SIZE_BUCKETS, Obs
 from repro.update import journal as journal_lib
 from repro.update import planner, routing
 from repro.update.epochs import EpochLog, HintPatch
@@ -96,6 +97,10 @@ class LiveIndex:
         self._rebuild_kwargs.setdefault("mesh", system.mesh)
         self._rebuild_kwargs.setdefault("mesh_axes", system.mesh_axes)
         self.commits: list[CommitStats] = []
+        # Observability handle: a serve loop replaces this with its own via
+        # set_obs() so commit spans land in the SAME trace as serve ticks.
+        self.obs = Obs(trace=False)
+        self.epochs.obs = self.obs
 
         ids = (np.arange(len(texts)) if doc_ids is None
                else np.asarray(doc_ids))
@@ -130,6 +135,11 @@ class LiveIndex:
                    max_pad_fraction=max_pad_fraction,
                    compact_every=compact_every,
                    rebuild_kwargs=dict(n_clusters=n_clusters, **build_kwargs))
+
+    def set_obs(self, obs: Obs) -> None:
+        """Adopt `obs` (a serve loop's handle) for commit/compaction events."""
+        self.obs = obs
+        self.epochs.obs = obs
 
     # -- introspection -------------------------------------------------------
 
@@ -192,15 +202,19 @@ class LiveIndex:
             return None
         t0 = time.perf_counter()
         db = self.system.db
-        plan = planner.plan_updates(
-            muts, docs=self._docs, cluster_of=self._cluster_of,
-            centroids=self.system.centroids, m=db.m,
-            used_bytes=self._used, n_clusters=db.n, emb_dim=db.emb_dim,
-            max_pad_fraction=self.max_pad_fraction)
-        if plan.full_rebuild:
-            patch, apply = self._stage_full(plan)
-        else:
-            patch, apply = self._stage_delta(plan, donate=donate)
+        with self.obs.span("commit.stage", mutations=len(muts)) as sp:
+            plan = planner.plan_updates(
+                muts, docs=self._docs, cluster_of=self._cluster_of,
+                centroids=self.system.centroids, m=db.m,
+                used_bytes=self._used, n_clusters=db.n, emb_dim=db.emb_dim,
+                max_pad_fraction=self.max_pad_fraction)
+            sp.set(kind="full" if plan.full_rebuild else "delta",
+                   touched=len(plan.touched))
+            if plan.full_rebuild:
+                with self.obs.span("commit.rebuild", docs=len(plan.new_docs)):
+                    patch, apply = self._stage_full(plan)
+            else:
+                patch, apply = self._stage_delta(plan, donate=donate)
         return StagedEpoch(patch=patch, plan=plan, n_mutations=len(muts),
                            t0=t0, _apply=apply)
 
@@ -211,12 +225,22 @@ class LiveIndex:
         snapshot of the old epoch; queries planned after it are formed —
         and admitted — at the new one.
         """
-        staged._apply()
         plan, patch = staged.plan, staged.patch
-        self.epochs.publish(patch)
+        with self.obs.span("commit.publish",
+                           kind="full" if plan.full_rebuild else "delta",
+                           epoch=self.epochs.epoch + 1):
+            staged._apply()
+            self.epochs.publish(patch)
         self.journal.mark_committed(self.epochs.epoch)
         self._docs = plan.new_docs
         self._cluster_of = plan.new_cluster_of
+        self.obs.counter("commit.epochs").inc()
+        self.obs.counter("commit.mutations").inc(staged.n_mutations)
+        if plan.full_rebuild:
+            self.obs.counter("commit.full_rebuilds").inc()
+        self.obs.histogram("commit.patch_bytes",
+                           bounds=DEFAULT_SIZE_BUCKETS).record(
+                               patch.wire_bytes)
         self.commits.append(CommitStats(
             epoch=self.epochs.epoch, n_mutations=staged.n_mutations,
             touched_clusters=len(plan.touched),

@@ -177,6 +177,37 @@ def test_idle_ticks_retire_inflight_batches(base_live):
     assert loop.inflight == 0 and len(loop.responses) == 4   # ...but retires
 
 
+def test_batch_timing_parity_sync_vs_pipelined(base_live):
+    """BatchTiming audit (ISSUE 7): both engines must stamp every response
+    with a well-formed timing derived from their obs spans — same batch
+    partition, monotone boundaries, positive components — even though the
+    pipelined engine legitimately reports residual (near-zero overlapped)
+    gemm time where the sync engine reports the full device wait."""
+    corp, base = base_live
+    ops = _script_from_rng(np.random.default_rng(17), 50)
+    sync, pipe = _compare_engines(corp, lambda: copy.deepcopy(base), ops,
+                                  depth=2)
+    for loop in (sync, pipe):
+        for r in loop.responses:
+            t = r.timing
+            assert t is not None, f"missing timing on rid {r.rid}"
+            # FakeClock advances per read, so every span has positive width
+            assert t.encode_s > 0 and t.gemm_s > 0 and t.decode_s > 0
+            assert t.t_plan < r.t_done
+
+    def partition(loop):
+        """rids grouped by shared BatchTiming object (the batch identity)."""
+        groups: dict = {}
+        for r in loop.responses:
+            groups.setdefault(id(r.timing), []).append(r.rid)
+        return sorted(map(tuple, groups.values()))
+
+    # the engines batch identically, so requests must SHARE timing structs
+    # identically — a parity regression here means one engine fragmented
+    # (or merged) a batch's timing without changing its responses
+    assert partition(sync) == partition(pipe)
+
+
 def test_donated_commits_stay_exact(base_live):
     """After donated shadow commits, server-side state is bit-identical to a
     from-scratch setup of the mutated corpus (the live-index invariant)."""
