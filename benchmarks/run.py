@@ -131,6 +131,20 @@ def main() -> None:
         all_checks.extend(bres["checks"])
     section("batchpir", sec_batchpir)
 
+    # ---- keyed embedding-PIR: flat-κ recsys serving + LPT packing -----------
+    def sec_recsys():
+        from benchmarks import recsys_bench
+        rres = recsys_bench.run(fast=args.fast)
+        for r in rres["lookup"]["rows"]:
+            print(f"recsys_k{r['kappa']},{r['server_us']:.0f},"
+                  f"vs_k1={r['vs_kappa1']:.2f};up={r['uplink_bytes']}")
+        pk = rres["packing"]
+        print(f"recsys_packing,{pk['n_shards']},"
+              f"seq={pk['imbalance_seq']:.3f};lpt={pk['imbalance_lpt']:.3f}")
+        results["recsys"] = rres
+        all_checks.extend(rres["checks"])
+    section("recsys", sec_recsys)
+
     # ---- sharded serving: answer-GEMM scaling 1→8 fake devices --------------
     def sec_sharded():
         from benchmarks import sharded_bench
@@ -239,6 +253,7 @@ def main() -> None:
     out = {"meta": meta}
     for src, dst in (("kernel", "kernel"), ("scalability", "fig2"),
                      ("quality", "fig3"), ("batchpir", "batchpir"),
+                     ("recsys", "recsys"),
                      ("sharded", "sharded"), ("build", "build"),
                      ("serve", "serve"), ("traffic", "traffic"),
                      ("graph", "graph"), ("obs", "obs")):

@@ -19,14 +19,15 @@ import time
 import numpy as np
 
 from repro.batchpir.client import (BatchAccounting, BatchPIRClient,
-                                   BatchQueryState)
-from repro.batchpir.partition import CuckooPartition, PlacementError
+                                   BatchQueryState, KeyedQueryState)
+from repro.batchpir.partition import (CuckooPartition, KeyedLayout,
+                                      PlacementError)
 from repro.batchpir.server import BatchPIRServer, BucketUpdate
 
 __all__ = [
     "BatchAccounting", "BatchPIR", "BatchPIRClient", "BatchPIRServer",
-    "BatchQueryState", "BucketUpdate", "CuckooPartition", "PlacementError",
-    "build",
+    "BatchQueryState", "BucketUpdate", "CuckooPartition", "KeyedLayout",
+    "KeyedQueryState", "PlacementError", "build",
 ]
 
 

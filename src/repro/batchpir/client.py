@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.batchpir.partition import CuckooPartition
+from repro.batchpir.partition import CuckooPartition, KeyedLayout
 from repro.batchpir.server import BatchPIRServer
 from repro.core import lwe, pir
 
@@ -35,6 +35,20 @@ class BatchQueryState:
     """Client-side secrets + placement for one batched query (never sent)."""
     placement: dict[int, int]            # bucket → cluster (real queries)
     secrets: list[jax.Array]             # per bucket LWE secret
+
+
+@dataclasses.dataclass
+class KeyedQueryState:
+    """Client-side state of one keyed row lookup (never sent).
+
+    ``ids`` preserves the requested multiset and its order — recovery
+    returns one row per requested id, duplicates included — while the
+    wrapped `BatchQueryState` carries the placement of the DISTINCT id
+    groups that actually went on the wire.
+    """
+    ids: tuple[int, ...]                 # requested row ids, caller order
+    layout: KeyedLayout
+    base: BatchQueryState
 
 
 @dataclasses.dataclass
@@ -90,6 +104,24 @@ class BatchPIRClient:
         return jnp.stack(qs), BatchQueryState(placement=placement,
                                               secrets=secrets)
 
+    def query_rows(self, key: jax.Array, layout: KeyedLayout, ids, *,
+                   walk_seed: int = 0
+                   ) -> tuple[jax.Array, KeyedQueryState]:
+        """Encrypt a keyed lookup for table rows `ids` → ((B, W) u32, state).
+
+        ``ids`` is a MULTISET (duplicates fine — a DLRM request repeats hot
+        ids freely): it dedups to distinct id groups before cuckoo
+        placement, and `recover_rows` fans shared group columns back out to
+        every requesting id.  The wire view is the document path's: always
+        B ciphertexts of the shared width, independent of κ, of duplicate
+        structure, and of which ids were asked.  Raises PlacementError when
+        the distinct-group set is structurally unplaceable.
+        """
+        ids = [int(i) for i in ids]
+        groups = layout.groups_of(ids)       # validates every id's range
+        qs, base = self.query(key, groups, walk_seed=walk_seed)
+        return qs, KeyedQueryState(ids=tuple(ids), layout=layout, base=base)
+
     # -- decode --------------------------------------------------------------
 
     def recover(self, answers: list[jax.Array], state: BatchQueryState, *,
@@ -116,6 +148,26 @@ class BatchPIRClient:
                                                  s), p)
             out[cluster] = np.asarray(vals.astype(jnp.uint8))
         return out
+
+    def recover_rows(self, answers: list[jax.Array],
+                     state: KeyedQueryState, *,
+                     hints: list[jax.Array] | None = None,
+                     cfgs: list[pir.PIRConfig] | None = None) -> np.ndarray:
+        """Decode a keyed lookup → (κ, d) f32, bit-identical to table[ids].
+
+        Decodes each placed group's column once, then extracts every
+        requested row by fixed-stride arithmetic (`KeyedLayout.decode_row`)
+        — duplicate ids repeat their row, in the caller's original order.
+        ``hints``/``cfgs`` are the same plan-time epoch snapshots `recover`
+        takes.
+        """
+        cols = self.recover(answers, state.base, hints=hints, cfgs=cfgs)
+        layout = state.layout
+        rows = [layout.decode_row(cols[layout.group_of(i)], i)
+                for i in state.ids]
+        if not rows:
+            return np.zeros((0, layout.dim), np.float32)
+        return np.stack(rows)
 
     # -- accounting ----------------------------------------------------------
 

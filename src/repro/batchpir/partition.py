@@ -24,6 +24,7 @@ communicated.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -60,6 +61,98 @@ def _balanced_candidates(n_clusters: int, n_buckets: int,
 
 def _next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyedLayout:
+    """Keyed grouping of a fixed-width embedding table (recsys serving).
+
+    The document path clusters by embedding similarity; a recsys embedding
+    lookup is KEYED — the client knows row ids, not contents — so the
+    "clusters" are just contiguous id ranges: row i lives in group
+    ``i // group_size`` at within-group position ``i % group_size``.
+    Both sides derive the mapping from (n_rows, group_size) alone; nothing
+    about the table contents leaks into the layout.
+
+    Row codec: each row serializes through the standard chunking record
+    with ``text`` = the row's raw little-endian f32 bytes, so every record
+    has the same width (16-byte header + d quantized bytes + 4d payload
+    bytes) and a group's column decodes by fixed-stride arithmetic.  The
+    f32 payload round-trips bit-exactly — the u8-quantized emb field only
+    feeds the (inert, for keyed systems) legacy re-rank path.
+    """
+    n_rows: int                 # V: embedding table rows
+    dim: int                    # d: embedding width (f32 lanes)
+    group_size: int             # rows per group; last group may be short
+
+    @classmethod
+    def build(cls, n_rows: int, dim: int,
+              group_size: int | None = None) -> "KeyedLayout":
+        """Size the grouping; default group_size ≈ √V balances the column
+        height (group_size·record bytes) against the group count (the PIR
+        query width), the same m×n tradeoff the document build makes."""
+        if n_rows < 1 or dim < 1:
+            raise ValueError(f"need n_rows, dim >= 1, got {n_rows}, {dim}")
+        if group_size is None:
+            group_size = max(1, math.isqrt(n_rows))
+        if group_size < 1:
+            raise ValueError(f"group_size must be >= 1, got {group_size}")
+        return cls(n_rows=n_rows, dim=dim, group_size=group_size)
+
+    @property
+    def n_groups(self) -> int:
+        """Number of id groups = PIR clusters of the keyed DB."""
+        return -(-self.n_rows // self.group_size)
+
+    @property
+    def record_stride(self) -> int:
+        """Fixed serialized bytes per row record: header + emb_q + raw f32."""
+        return 16 + 5 * self.dim
+
+    def group_of(self, row_id: int) -> int:
+        """The group (cluster) holding table row ``row_id``."""
+        if not 0 <= row_id < self.n_rows:
+            raise IndexError(f"row id {row_id} outside table "
+                             f"[0, {self.n_rows})")
+        return row_id // self.group_size
+
+    def groups_of(self, ids) -> list[int]:
+        """Distinct, sorted groups covering an id multiset — the probe set
+        handed to cuckoo placement (duplicates fan back out at decode)."""
+        return sorted({self.group_of(int(i)) for i in ids})
+
+    def row_text(self, row: np.ndarray) -> bytes:
+        """A row's record payload: its raw little-endian f32 bytes."""
+        return np.ascontiguousarray(row, dtype="<f4").tobytes()
+
+    def decode_row(self, col: np.ndarray, row_id: int) -> np.ndarray:
+        """Extract row ``row_id`` from its group's decrypted column bytes.
+
+        Fixed-stride: group g packs rows [g·gs, min((g+1)·gs, V)) in
+        ascending id order (the canonical `chunking.pack_column` order), so
+        the record sits at ``4 + (row_id % gs)·record_stride``.  The id
+        header is verified; on mismatch (a corrupt or foreign column) the
+        records are scanned before giving up.
+        """
+        g = self.group_of(row_id)
+        stride = self.record_stride
+        start = 4 + (row_id - g * self.group_size) * stride
+        buf = np.asarray(col, np.uint8)
+        rec = buf[start:start + stride]
+        if (len(rec) == stride
+                and int(np.frombuffer(rec[:4].tobytes(), np.uint32)[0])
+                == row_id):
+            return np.frombuffer(
+                rec[16 + self.dim:].tobytes(), "<f4").copy()
+        n_docs = int(np.frombuffer(buf[:4].tobytes(), np.uint32)[0])
+        for p in range(n_docs):
+            rec = buf[4 + p * stride:4 + (p + 1) * stride]
+            if (len(rec) == stride
+                    and int(np.frombuffer(rec[:4].tobytes(), np.uint32)[0])
+                    == row_id):
+                return np.frombuffer(
+                    rec[16 + self.dim:].tobytes(), "<f4").copy()
+        raise KeyError(f"row {row_id} not found in group {g}'s column")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -101,6 +101,8 @@ class BatchPIRServer:
         self.mesh_axes: tuple[str, ...] | None = None
         self.n_shards = 1
         self._stack: jax.Array | None = None   # sharded bucket stack cache
+        self._order: np.ndarray | None = None  # height-aware stack permutation
+        self._slot: np.ndarray | None = None   # bucket → stack slot (inverse)
         if mesh is not None:
             from repro.core import clustering
             self.mesh_axes, self.n_shards = clustering.resolve_mesh_axes(
@@ -198,17 +200,31 @@ class BatchPIRServer:
 
     def _answer_batch_sharded(self, qs: jax.Array) -> list[jax.Array]:
         if self._stack is None:
+            # height-aware bucket→device packing: skewed bucket heights
+            # otherwise park the tall (real-work) buckets on a few devices
+            # while the rest multiply zero padding.  The LPT permutation is
+            # cached with the stack and both invalidate together.
+            from repro.distributed import collectives
+            self._order = collectives.balanced_bucket_order(
+                [d.shape[0] for d in self.sub_dbs], self.n_shards)
+            self._slot = np.empty_like(self._order)
+            self._slot[self._order] = np.arange(len(self._order))
             self._stack = jax.device_put(
-                ops.stack_buckets(self.sub_dbs, self.n_shards),
+                ops.stack_buckets(self.sub_dbs, self.n_shards,
+                                  order=self._order),
                 self._stack_sharding)
         was_vec = qs.ndim == 2
         q3 = qs[:, :, None] if was_vec else qs
         b_pad = self._stack.shape[0] - q3.shape[0]
         if b_pad:
             q3 = jnp.pad(q3, ((0, b_pad), (0, 0), (0, 0)))
+        # queries travel with their buckets; answers index back through the
+        # inverse permutation, so the reorder is invisible to callers
+        q3 = q3[jnp.asarray(self._order)]
         full = ops.bucketed_modmatmul_sharded(self._stack, q3, self.mesh,
                                               self.mesh_axes)
-        out = [full[b, :d.shape[0], :] for b, d in enumerate(self.sub_dbs)]
+        out = [full[int(self._slot[b]), :d.shape[0], :]
+               for b, d in enumerate(self.sub_dbs)]
         return [o[:, 0] for o in out] if was_vec else out
 
     # -- live-index deltas ---------------------------------------------------
@@ -288,9 +304,12 @@ class BatchPIRServer:
                 # patch the cached sharded layout with ONE fused scatter
                 # (scatter output keeps the operand's sharding); the value
                 # is transposed because jax moves the advanced-index dims
-                # (bucket scalar + column array) to the front
+                # (bucket scalar + column array) to the front.  The stack
+                # is laid out in height-aware order, so bucket b lives at
+                # stack slot _slot[b].
                 new_stack = new_stack.at[
-                    b, :rows, jnp.asarray(pos)].set(new_sub.T)
+                    int(self._slot[b]), :rows, jnp.asarray(pos)].set(
+                        new_sub.T)
             if self.hints:
                 # ΔH_b is transient, so the add donates ITS buffer — the
                 # live hint stays intact for in-flight decode snapshots
@@ -309,7 +328,12 @@ class BatchPIRServer:
                 self.cfgs[b] = cfg
             for b, hint in new_hints.items():
                 self.hints[b] = hint
-            self._stack = None if stack_invalidated else new_stack
+            if stack_invalidated:
+                # a rebuilt bucket changes heights → the LPT permutation is
+                # stale; stack, order and inverse recompute together
+                self._stack = self._order = self._slot = None
+            else:
+                self._stack = new_stack
 
         return StagedBucketPatch(updates=updates, _apply=apply)
 

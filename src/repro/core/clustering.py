@@ -363,7 +363,87 @@ def balanced_assign(x: np.ndarray, cents: np.ndarray, cap: int,
         assert d2.shape == (n, k), (d2.shape, (n, k))
     best = d2.min(axis=1)
     order = np.argsort(best)          # most-confident docs claim slots first
-    pref = np.argsort(d2, axis=1)     # per-doc centroid preference list
+    # Deferred acceptance with the confidence order as every cluster's
+    # common priority: all free docs propose at once, each cluster keeps
+    # its `cap` best-priority holders, losers re-propose next round.
+    # Under a common strict priority this converges to EXACTLY the
+    # sequential walk's assignment (serial dictatorship ≡ deferred
+    # acceptance; regression-pinned against `_balanced_assign_walk` in
+    # tests/test_clustering.py).  The walk's preference lists never
+    # materialize: a full cluster's worst-held rank `thr[c]` only tightens
+    # over rounds, so the set of clusters that could still accept rank r is
+    # exactly {c : thr[c] >= r} — past rejectors are excluded for free —
+    # and "first viable preference" is a masked argmin over d2.  That
+    # replaces the old walk's full (N, k) argsort (its single most
+    # expensive op) and its Python loop over N docs with one vectorized
+    # argmin per round over the shrinking free set.  Exact distance ties
+    # break lowest-cluster-first (argmin's first-occurrence rule — the
+    # stable preference order).
+    d2r = d2[order]                   # rank-major distances (rank r = row r)
+    free = np.arange(n)               # ranks still proposing (all, initially)
+    held: list[np.ndarray] = [np.empty(0, np.int64) for _ in range(k)]
+    thr = np.full(k, n, np.int64)     # full cluster's worst held rank
+    while free.size:
+        sub = d2r if free.size == n else d2r[free]
+        if (thr == n).all():          # nothing full yet (always round 1)
+            props = sub.argmin(1)
+        else:
+            masked = np.where(thr[None, :] >= free[:, None], sub, np.inf)
+            props = masked.argmin(1)
+            # cap·k ≥ n ⇒ some cluster is below cap (thr = n) and viable
+            assert np.isfinite(
+                masked[np.arange(free.size), props]).all()
+        srt = np.lexsort((free, props))       # by cluster, then priority
+        f, p = free[srt], props[srt]
+        bounds = np.flatnonzero(np.diff(p)) + 1
+        rejected: list[np.ndarray] = []
+        for c, g in zip(p[np.concatenate(([0], bounds))],
+                        np.split(f, bounds)):
+            merged = np.sort(np.concatenate((held[c], g)))
+            held[c] = merged[:cap]
+            if merged.size >= cap:
+                thr[c] = held[c][-1]
+            if merged.size > cap:
+                rejected.append(merged[cap:])
+        free = (np.concatenate(rejected) if rejected
+                else np.empty(0, np.int64))
+    out = np.full(n, -1, np.int32)
+    for c in range(k):
+        out[order[held[c]]] = c
+    assert (out >= 0).all()
+    return out
+
+
+def _balanced_assign_walk(x: np.ndarray, cents: np.ndarray, cap: int,
+                          batch: int = 65536, *,
+                          d2: np.ndarray | None = None) -> np.ndarray:
+    """The original O(N·k) sequential greedy walk `balanced_assign` replaced.
+
+    Kept as the behavioural reference: the vectorized deferred-acceptance
+    implementation must produce identical assignments on identical inputs
+    (the equality regression in tests/test_clustering.py), since packed
+    columns — and therefore hints, queries and answers — depend on it
+    byte-for-byte.
+    """
+    n, k = x.shape[0], cents.shape[0]
+    if cap * k < n:
+        raise ValueError(f"cap {cap} × k {k} < N {n}")
+    if d2 is None:
+        d2 = np.empty((n, k), np.float32)
+        for s in range(0, n, batch):
+            xb = x[s:s + batch]
+            d2[s:s + batch] = (
+                (xb * xb).sum(1, keepdims=True) - 2 * xb @ cents.T
+                + (cents * cents).sum(1)[None, :])
+    else:
+        d2 = np.asarray(d2, np.float32)
+        assert d2.shape == (n, k), (d2.shape, (n, k))
+    best = d2.min(axis=1)
+    order = np.argsort(best)
+    # kind="stable" pins the preference order on exact distance ties to
+    # lowest-cluster-first — the tie-break argmin gives for free — where the
+    # original quicksort left it unspecified (and numpy-version-dependent).
+    pref = np.argsort(d2, axis=1, kind="stable")
     counts = np.zeros(k, np.int64)
     out = np.full(n, -1, np.int32)
     for i in order:

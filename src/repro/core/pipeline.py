@@ -88,6 +88,20 @@ class QueryStats:
 
 
 @dataclasses.dataclass
+class LookupStats:
+    """Accounting for one keyed embedding lookup (`PirRagSystem.lookup`)."""
+    uplink_bytes: int
+    downlink_bytes: int
+    client_ms: float
+    server_ms: float
+    kappa: int                    # rows requested (multiset size)
+    groups: int                   # distinct id groups privately fetched
+    mode: str = "batch"           # "batch" (cuckoo) | "legacy" (G one-hots)
+    n_buckets: int = 0            # batch mode: bucket queries sent (incl dummies)
+    hint_bytes: int = 0           # one-time hint downlink of the path used
+
+
+@dataclasses.dataclass
 class PirRagSystem:
     """Bundles server-public state (centroids) and the two protocol roles."""
     centroids: np.ndarray         # PUBLIC: (n_clusters, d)
@@ -100,6 +114,7 @@ class PirRagSystem:
     hint_seconds: float = 0.0     # hint GEMM (int8-roofline op on TPU)
     assignment: np.ndarray | None = None  # (N,) doc→cluster (live index)
     batch: object | None = None           # batchpir.BatchPIR once enabled
+    keyed: object | None = None           # batchpir.KeyedLayout (keyed system)
     mesh: object | None = None            # device mesh (sharded serving)
     mesh_axes: tuple | None = None        # mesh axes the DB rows shard over
     _qkey: jax.Array | None = None        # split stream for keyless queries
@@ -181,6 +196,69 @@ class PirRagSystem:
                    mesh=mesh, mesh_axes=server.mesh_axes,
                    _qkey=_fresh_client_key())
 
+    @classmethod
+    def build_keyed(cls, table: np.ndarray, *, group_size: int | None = None,
+                    kappa: int = 8, n_buckets: int | None = None,
+                    chunk_size: int = 256, seed: int = 0,
+                    batch_seed: int = 101, impl: str = "auto",
+                    q_switch: int | None = 1 << 16,
+                    mesh=None, mesh_axes: tuple | None = None,
+                    ) -> "PirRagSystem":
+        """Offline setup for KEYED serving: a private embedding-table index.
+
+        table: (V, d) f32 embedding rows.  A recsys lookup is keyed — the
+        client knows row IDS, not contents — so there is no k-means: row i
+        lands in group ``i // group_size`` (`batchpir.KeyedLayout`,
+        default group_size ≈ √V), each group packs into one chunk-transposed
+        column through the standard codec with the row's raw f32 bytes as
+        the record payload, and the batch-PIR subsystem is enabled
+        immediately (keyed serving IS batched serving — a DLRM request
+        carries κ sparse ids).  `lookup` then recovers rows bit-identical
+        to ``table[ids]``.
+
+        ``centroids`` are the per-group row means: the keyed path never
+        consults them, but they keep the legacy embedding-similarity
+        `query` well-formed on a keyed system.  ``seed`` feeds the same
+        two-stream discipline as `build` (the k-means stream is simply
+        unused); ``mesh=`` row-shards the flat DB and spreads buckets
+        across devices exactly as in the document build.
+        """
+        t0 = time.perf_counter()
+        from repro import batchpir
+        table = np.ascontiguousarray(table, np.float32)
+        layout = batchpir.KeyedLayout.build(table.shape[0], table.shape[1],
+                                            group_size)
+        _, a_seed = _derive_build_streams(seed)
+        axes, shards = (clustering.resolve_mesh_axes(mesh, mesh_axes)
+                        if mesh is not None else (None, 1))
+        assign = np.arange(layout.n_rows, dtype=np.int64) // layout.group_size
+        texts = [layout.row_text(table[i]) for i in range(layout.n_rows)]
+        # per-group means; bincount over segments keeps it one pass
+        sums = np.zeros((layout.n_groups, layout.dim), np.float64)
+        np.add.at(sums, assign, table)
+        cnts = np.bincount(assign, minlength=layout.n_groups)[:, None]
+        cents = (sums / np.maximum(cnts, 1)).astype(np.float32)
+        db = chunking.build_chunked_db(texts, table, assign, layout.n_groups,
+                                       chunk_size, n_row_shards=shards)
+        cfg = pir.make_config(db.m, db.n, impl=impl, q_switch=q_switch,
+                              a_seed=a_seed)
+        server = pir.PIRServer(
+            cfg, db.row_shards if db.row_shards is not None
+            else jnp.asarray(db.matrix), mesh=mesh, mesh_axes=axes)
+        t_index = time.perf_counter()
+        hint = jax.block_until_ready(server.setup())
+        if mesh is not None:
+            hint = jnp.asarray(np.asarray(hint))
+        t_hint = time.perf_counter()
+        sys = cls(centroids=cents, db=db, cfg=cfg, server=server, hint=hint,
+                  setup_seconds=t_hint - t0, index_seconds=t_index - t0,
+                  hint_seconds=t_hint - t_index, assignment=assign,
+                  keyed=layout, mesh=mesh, mesh_axes=server.mesh_axes,
+                  _qkey=_fresh_client_key())
+        sys.enable_batch(kappa=kappa, n_buckets=n_buckets, seed=batch_seed)
+        sys.setup_seconds += sys.batch.setup_seconds
+        return sys
+
     # -- key stream ----------------------------------------------------------
 
     def next_query_key(self) -> jax.Array:
@@ -213,6 +291,141 @@ class PirRagSystem:
             a_seed=self.cfg.a_seed, impl=self.cfg.impl,
             mesh=self.mesh, mesh_axes=self.mesh_axes)
         return self.batch
+
+    # -- keyed lookups (recsys serving) --------------------------------------
+
+    def _require_keyed(self):
+        if self.keyed is None or self.batch is None:
+            raise ValueError("keyed lookups need a build_keyed() system")
+        return self.keyed, self.batch
+
+    def lookup(self, ids, *, key: jax.Array | None = None
+               ) -> tuple[np.ndarray, LookupStats]:
+        """Privately fetch embedding rows `ids` → ((κ, d) f32, accounting).
+
+        ``ids`` is a multiset (duplicates fine); rows come back in caller
+        order, bit-identical to ``table[ids]``.  The server sees B
+        pseudorandom bucket ciphertexts — independent of κ, of duplicate
+        structure, and of which ids were asked — and streams its bucketed
+        DB once regardless of κ.  A structurally unplaceable distinct-group
+        set (negligible probability) falls back to the legacy path: one
+        flat-PIR one-hot per distinct group, still private, just without
+        the one-pass amortization.
+        """
+        layout, bp = self._require_keyed()
+        key = key if key is not None else self.next_query_key()
+        from repro.batchpir import PlacementError
+        t0 = time.perf_counter()
+        try:
+            qs, state = bp.client.query_rows(key, layout, ids)
+        except PlacementError:
+            return self._lookup_legacy(ids, key, t0)
+        batch = jax.block_until_ready(qs)
+        t1 = time.perf_counter()
+        ans = [jax.block_until_ready(a) for a in bp.server.answer_batch(batch)]
+        t2 = time.perf_counter()
+        rows = bp.client.recover_rows(ans, state)
+        t3 = time.perf_counter()
+        acc = bp.client.accounting(state.base)
+        stats = LookupStats(
+            uplink_bytes=acc.uplink_bytes, downlink_bytes=acc.downlink_bytes,
+            client_ms=1e3 * ((t1 - t0) + (t3 - t2)),
+            server_ms=1e3 * (t2 - t1), kappa=len(state.ids),
+            groups=len(state.base.placement), mode="batch",
+            n_buckets=acc.n_buckets, hint_bytes=acc.hint_bytes)
+        return rows, stats
+
+    def _lookup_legacy(self, ids, key: jax.Array, t0: float
+                       ) -> tuple[np.ndarray, LookupStats]:
+        """Flat-PIR fallback: one one-hot query per DISTINCT id group."""
+        layout = self.keyed
+        ids = [int(i) for i in ids]
+        groups = layout.groups_of(ids)
+        client = pir.PIRClient(self.cfg, self.hint)
+        qs, states = [], []
+        for j, g in enumerate(groups):
+            qu, st = client.query(jax.random.fold_in(key, j), int(g))
+            qs.append(qu)
+            states.append(st)
+        if qs:
+            batch = jax.block_until_ready(jnp.stack(qs, axis=1))
+            t1 = time.perf_counter()
+            ans = jax.block_until_ready(self.server.answer(batch))
+        else:
+            t1 = time.perf_counter()
+            ans = None
+        t2 = time.perf_counter()
+        cols = {g: np.asarray(client.recover(ans[:, j], states[j]))
+                for j, g in enumerate(groups)}
+        rows = [layout.decode_row(cols[layout.group_of(i)], i) for i in ids]
+        out = (np.stack(rows) if rows
+               else np.zeros((0, layout.dim), np.float32))
+        t3 = time.perf_counter()
+        g = len(groups)
+        stats = LookupStats(
+            uplink_bytes=g * self.cfg.uplink_bytes,
+            downlink_bytes=g * self.cfg.downlink_bytes,
+            client_ms=1e3 * ((t1 - t0) + (t3 - t2)),
+            server_ms=1e3 * (t2 - t1), kappa=len(ids), groups=g,
+            mode="legacy", hint_bytes=self.cfg.hint_bytes)
+        return out, stats
+
+    def lookup_batch(self, ids_batch, *, seed: int | None = None,
+                     key: jax.Array | None = None) -> list[np.ndarray]:
+        """Batched keyed serving: C clients' bucket queries, one bucketed GEMM.
+
+        ids_batch: a sequence of id multisets, one per client.  Returns one
+        (κ_i, d) f32 array per client, bit-identical to ``table[ids_i]``.
+        """
+        return self.lookup_batch_async(ids_batch, seed=seed,
+                                       key=key).complete()
+
+    def lookup_batch_async(self, ids_batch, *, seed: int | None = None,
+                           key: jax.Array | None = None) -> InflightBatch:
+        """Plan + dispatch a keyed serving batch; decode deferred.
+
+        The keyed mirror of `query_batch_async`: per-client placement
+        failures fall back to that client's legacy lookup, everyone else
+        stacks along the column axis of the shared bucketed GEMM, and the
+        per-bucket hints/configs are snapshotted at plan time so
+        `complete()` decodes against this batch's epoch even if a live
+        commit lands in between.
+        """
+        layout, bp = self._require_keyed()
+        if key is None:
+            key = (jax.random.PRNGKey(seed) if seed is not None
+                   else self.next_query_key())
+        from repro.batchpir import PlacementError
+
+        per_client, fallback = [], {}
+        for i, ids in enumerate(ids_batch):
+            k_i = jax.random.fold_in(key, i)
+            try:
+                per_client.append(bp.client.query_rows(k_i, layout, ids))
+            except PlacementError:
+                t0 = time.perf_counter()
+                fallback[i] = self._lookup_legacy(ids, k_i, t0)[0]
+                per_client.append(None)
+
+        live = [i for i, pc in enumerate(per_client) if pc is not None]
+        answers: list = []
+        if live:
+            stacked = jnp.stack([per_client[i][0] for i in live], axis=2)
+            answers = bp.server.answer_batch(stacked)   # per bucket (m_b, C)
+        hints = list(bp.client.hints)
+        cfgs = list(bp.client.cfgs)
+
+        def complete():
+            out: list[np.ndarray | None] = [None] * len(per_client)
+            for c_idx, i in enumerate(live):
+                ans_i = [a[:, c_idx] for a in answers]
+                out[i] = bp.client.recover_rows(ans_i, per_client[i][1],
+                                                hints=hints, cfgs=cfgs)
+            for i, rows in fallback.items():
+                out[i] = rows
+            return out
+
+        return InflightBatch(_complete=complete, pending=tuple(answers))
 
     # -- online -------------------------------------------------------------
 

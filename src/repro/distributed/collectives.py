@@ -191,6 +191,66 @@ def bucket_shard_gemm(mesh: Mesh, axes: tuple[str, ...]):
                              out_specs=spec))
 
 
+def balanced_bucket_order(heights, n_shards: int) -> "np.ndarray":
+    """LPT bucket→device packing for `bucket_shard_gemm`; returns an order.
+
+    heights: per-bucket useful row counts (sub-DB heights before the stack
+    pads them to a common m').  The bucket count pads up to a multiple of
+    ``n_shards`` with zero-height virtual buckets, then buckets assign
+    longest-first to the least-loaded device, each device taking exactly
+    B'/n_shards buckets.  The result is a (B',) int64 permutation laid out
+    device-major: stacking ``dbs`` in this order makes the contiguous
+    per-device slices carry near-equal useful-row totals, so a skewed
+    height distribution no longer parks most of the real work on one
+    device while the rest multiply zero padding.
+
+    Deterministic and permutation-stable: ties break by (height desc,
+    bucket index asc) and by lowest device id, and the per-device load
+    totals depend only on the sorted height sequence — permuting the
+    input heights permutes the assignment but reproduces the same load
+    multiset.  Reordering the bucket axis never changes any bucket's GEMM
+    (each answer is complete on its owning device), so callers that index
+    answers through the inverse permutation stay bit-identical to the
+    unsorted layout.
+    """
+    import numpy as np
+    h = np.asarray(heights, np.int64)
+    b_pad = (-len(h)) % n_shards
+    if b_pad:
+        h = np.concatenate([h, np.zeros(b_pad, np.int64)])
+    cap = len(h) // n_shards
+    by_h = np.lexsort((np.arange(len(h)), -h))      # height desc, index asc
+    loads = np.zeros(n_shards, np.int64)
+    counts = np.zeros(n_shards, np.int64)
+    slots: list[list[int]] = [[] for _ in range(n_shards)]
+    for b in by_h:
+        open_devs = np.nonzero(counts < cap)[0]
+        dev = int(open_devs[np.argmin(loads[open_devs])])
+        slots[dev].append(int(b))
+        loads[dev] += h[b]
+        counts[dev] += 1
+    return np.concatenate([np.asarray(s, np.int64) for s in slots])
+
+
+def shard_row_loads(heights, n_shards: int, order=None) -> "np.ndarray":
+    """Per-device useful-row totals of a bucket stack layout.
+
+    With ``order=None`` this scores the sequential (unsorted) layout
+    `ops.stack_buckets` produces by default; passing the permutation from
+    `balanced_bucket_order` scores the height-aware layout.  The
+    max/mean of the returned (n_shards,) vector is the imbalance metric
+    the recsys benchmark reports.
+    """
+    import numpy as np
+    h = np.asarray(heights, np.int64)
+    b_pad = (-len(h)) % n_shards
+    if b_pad:
+        h = np.concatenate([h, np.zeros(b_pad, np.int64)])
+    if order is not None:
+        h = h[np.asarray(order)]
+    return h.reshape(n_shards, -1).sum(axis=1)
+
+
 def _shard_count(mesh: Mesh, axes: tuple[str, ...]) -> int:
     """Shard count via the one shared axis rule (`resolve_mesh_axes`)."""
     from repro.core import clustering

@@ -215,13 +215,21 @@ def _matvec_u32(d: jax.Array, q: jax.Array) -> jax.Array:
     return jnp.matmul(d.astype(U32), q)
 
 
-def stack_buckets(dbs: Sequence[jax.Array], n_shards: int = 1
-                  ) -> jax.Array:
+def stack_buckets(dbs: Sequence[jax.Array], n_shards: int = 1,
+                  order: Sequence[int] | None = None) -> jax.Array:
     """Zero-pad bucket sub-DBs to a common height and stack: (B', m', W).
 
     The bucket count pads up to a multiple of ``n_shards`` with all-zero
     buckets (their answers are zero and are never sliced out), so the stack
     divides evenly over a mesh for the sharded batch-PIR path.
+
+    ``order`` — a permutation of the padded bucket axis, e.g. from
+    `distributed.collectives.balanced_bucket_order` — reorders the stack so
+    skewed bucket heights pack evenly across devices.  Callers must route
+    queries and answers through the same permutation (queries reorder, the
+    answer slices index via the inverse); every bucket's GEMM is complete
+    on its own leading-axis slice, so the reordered layout is bit-identical
+    to the sequential one.
     """
     m_pad = max(d.shape[0] for d in dbs)
     b_pad = (-len(dbs)) % n_shards
@@ -229,6 +237,9 @@ def stack_buckets(dbs: Sequence[jax.Array], n_shards: int = 1
     if b_pad:
         zero = jnp.zeros((m_pad, dbs[0].shape[1]), jnp.uint8)
         padded += [zero] * b_pad
+    if order is not None:
+        assert len(order) == len(padded), (len(order), len(padded))
+        padded = [padded[int(b)] for b in order]
     return jnp.stack(padded)
 
 

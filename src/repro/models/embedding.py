@@ -23,6 +23,28 @@ def table_axes():
     return {"table": ("emb_rows", None)}
 
 
+def table_from_rows(n_rows: int, dim: int, flat_ids, rows,
+                    dtype=jnp.float32):
+    """Rebuild a sparse stacked table from privately fetched rows.
+
+    The private-serving bridge: a client that PIR-fetched exactly the rows
+    its request touches (core.pipeline.PirRagSystem.lookup over the flat
+    stacked-id space) scatters them into an otherwise-zero table of the
+    full (n_rows, dim) shape, so `recsys.forward`/`serve` run UNMODIFIED
+    on params holding only the client's own rows.  Outputs are bitwise
+    equal to the public-table run whenever every id the batch touches was
+    fetched — duplicate ids scatter identical rows, so repeats are
+    harmless.  Returns the ``{"table": ...}`` params leaf `table_init`
+    produces.
+    """
+    t = jnp.zeros((n_rows, dim), dtype)
+    flat_ids = jnp.asarray(flat_ids).reshape(-1)
+    rows = jnp.asarray(rows, dtype).reshape(-1, dim)
+    if flat_ids.shape[0]:
+        t = t.at[flat_ids].set(rows)
+    return {"table": t}
+
+
 def field_lookup(p, idx: jax.Array, vocab: int,
                  *, compute_dtype=jnp.bfloat16) -> jax.Array:
     """idx: (B, n_fields) per-field ids → (B, n_fields, dim)."""

@@ -63,6 +63,7 @@ register_enum(
     "served", "shed",               # request outcomes (traffic.slo)
     "delta", "full",                # commit / hint-patch kinds
     "xla", "pallas", "auto",        # kernel impl dispatch
+    "query", "lookup",              # request kinds (serve/traffic)
 )
 
 

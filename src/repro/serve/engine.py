@@ -47,12 +47,13 @@ from repro.serve.epochs import ShadowCommitter
 @dataclasses.dataclass
 class Request:
     rid: int
-    query_emb: np.ndarray
+    query_emb: np.ndarray | None   # None for keyed embedding lookups
     t_arrival: float
     epoch: int = 0                 # hint epoch the query was formed against
     retries: int = 0
     top_k: int = 5                 # per-request result size
     multi_probe: int = 1           # clusters to fetch (>1 → batch-PIR able)
+    lookup_ids: tuple | None = None  # keyed row ids (recsys lookup request)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +216,18 @@ class PIRServeLoop:
                                     else epoch, top_k=top_k,
                                     multi_probe=multi_probe))
 
+    def submit_lookup(self, rid: int, ids, *, epoch: int | None = None):
+        """A client submits a keyed embedding lookup (row id multiset).
+
+        Lookups batch through the same deadline/admission policy as
+        queries; each tick serves all queued lookups in ONE bucketed pass
+        of the keyed batch-PIR subsystem.  Needs a `build_keyed` system.
+        """
+        self.batcher.submit(Request(rid, None, self.clock(),
+                                    epoch=self.epoch if epoch is None
+                                    else epoch,
+                                    lookup_ids=tuple(int(i) for i in ids)))
+
     def submit_mutation(self, mut):
         """Queue a journal record; folded into an epoch at the next tick."""
         assert self.live is not None, "mutations need a LiveIndex"
@@ -252,14 +265,33 @@ class PIRServeLoop:
         return fresh
 
     def _probe_groups(self, fresh: list[Request]
-                      ) -> list[tuple[int, list[Request]]]:
-        """One GEMM per distinct multi_probe value: single-probe requests
-        share the classic column-stacked GEMM; multi-probe requests share
-        the bucketed batch-PIR GEMM (all clients in one streamed pass)."""
-        groups: dict[int, list[Request]] = {}
+                      ) -> list[tuple[tuple[str, int], list[Request]]]:
+        """One GEMM per request kind/shape: single-probe queries share the
+        classic column-stacked GEMM; each distinct multi_probe value shares
+        the bucketed batch-PIR GEMM; keyed lookups share the keyed bucketed
+        GEMM (all clients in one streamed pass).  Keys are ("lookup", 0) or
+        ("query", multi_probe) — sorted, so group order is deterministic."""
+        groups: dict[tuple[str, int], list[Request]] = {}
         for r in fresh:
-            groups.setdefault(r.multi_probe, []).append(r)
-        return [(mp, groups[mp]) for mp in sorted(groups)]
+            k = (("lookup", 0) if r.lookup_ids is not None
+                 else ("query", r.multi_probe))
+            groups.setdefault(k, []).append(r)
+        return [(k, groups[k]) for k in sorted(groups)]
+
+    def _plan_group(self, system, kind: tuple[str, int],
+                    reqs: list[Request], kq):
+        """Encode + dispatch one request group → its `InflightBatch`.
+
+        The one place both engines form batches, so the sync and pipelined
+        paths cannot diverge per kind: lookups route through
+        `lookup_batch_async` (results are (κ, d) row arrays), queries
+        through `query_batch_async` (results are top-k doc lists)."""
+        if kind[0] == "lookup":
+            return system.lookup_batch_async(
+                [r.lookup_ids for r in reqs], key=kq)
+        embs = np.stack([r.query_emb for r in reqs])
+        return system.query_batch_async(embs, top_k=[r.top_k for r in reqs],
+                                        multi_probe=kind[1], key=kq)
 
     def _serving_system(self):
         return self.live.system if self.live is not None else self.system
@@ -290,17 +322,15 @@ class PIRServeLoop:
             tick_sp.set(batch=len(fresh), epoch=cur)
 
             system = self._serving_system()
-            for mp, reqs in self._probe_groups(fresh):
-                embs = np.stack([r.query_emb for r in reqs])
+            for kind, reqs in self._probe_groups(fresh):
                 self._key, kq = jax.random.split(self._key)
                 # query_batch ≡ query_batch_async().complete(); the async
                 # form only adds the component span boundaries — responses
                 # stay bit-identical to the one-call path
                 with self.obs.span("serve.plan", batch=len(reqs),
-                                   multi_probe=mp) as sp_plan:
-                    infl = system.query_batch_async(
-                        embs, top_k=[r.top_k for r in reqs],
-                        multi_probe=mp, key=kq)
+                                   kind=kind[0],
+                                   multi_probe=kind[1]) as sp_plan:
+                    infl = self._plan_group(system, kind, reqs, kq)
                 with self.obs.span("serve.gemm", batch=len(reqs)) as sp_gemm:
                     jax.block_until_ready(infl.pending)
                 with self.obs.span("serve.complete",
@@ -418,14 +448,12 @@ class PipelinedServeLoop(PIRServeLoop):
             tick_sp.set(batch=len(fresh), epoch=cur)
 
             system = self._serving_system()
-            for mp, reqs in self._probe_groups(fresh):
-                embs = np.stack([r.query_emb for r in reqs])
+            for kind, reqs in self._probe_groups(fresh):
                 self._key, kq = jax.random.split(self._key)
                 with self.obs.span("serve.plan", batch=len(reqs),
-                                   multi_probe=mp) as sp_plan:
-                    infl = system.query_batch_async(
-                        embs, top_k=[r.top_k for r in reqs],
-                        multi_probe=mp, key=kq)
+                                   kind=kind[0],
+                                   multi_probe=kind[1]) as sp_plan:
+                    infl = self._plan_group(system, kind, reqs, kq)
                 self._inflight.append((reqs, cur, infl, sp_plan.t0,
                                        sp_plan.dur))
             self.obs.gauge("serve.inflight").set(len(self._inflight))

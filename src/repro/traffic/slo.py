@@ -40,6 +40,7 @@ class RequestRecord:
     epoch: int = 0
     retries: int = 0
     multi_probe: int = 1
+    kind: str = "query"           # "query" (similarity) | "lookup" (keyed)
     queue_ms: float = 0.0
     encode_ms: float = 0.0
     gemm_ms: float = 0.0
@@ -102,4 +103,20 @@ def summarize(records: list[RequestRecord], *, deadline_ms: float,
         comp[name] = {"mean": round(float(vals.mean()), 3) if served else 0.0,
                       "p99": round(_pct(vals, 99), 3)}
     out["components"] = comp
+    # Per-kind breakdown (similarity queries vs keyed lookups): the mixed
+    # recsys workload needs each kind's attainment separately — a flat
+    # aggregate would let one kind's tail hide behind the other's volume.
+    kinds: dict[str, dict] = {}
+    for kind in sorted({r.kind for r in records}):
+        sub = [r for r in records if r.kind == kind]
+        sub_served = [r for r in sub if r.outcome == SERVED]
+        klat = np.array([r.latency_ms for r in sub], np.float64)
+        kinds[kind] = {
+            "offered": len(sub),
+            "served": len(sub_served),
+            "attainment": round(float(np.mean(klat <= deadline_ms)), 4),
+            "p50_ms": round(_pct(klat, 50), 3),
+            "p99_ms": round(_pct(klat, 99), 3),
+        }
+    out["kinds"] = kinds
     return out

@@ -52,6 +52,15 @@ class TrafficSpec:
     mutation_qps: float = 0.0
     downlink_gbps: float = 1.0
     seed: int = 0
+    # Keyed-lookup share of the arrival process: each query arrival is a
+    # keyed embedding lookup with probability `lookup_mix` (needs a
+    # build_keyed system on the loop).  Lookups draw `lookup_kappa` row ids
+    # from a Zipf(`lookup_zipf_a`) popularity law folded onto the table —
+    # the DLRM-style skew where a few hot ids dominate and requests repeat
+    # them freely.
+    lookup_mix: float = 0.0
+    lookup_kappa: int = 8
+    lookup_zipf_a: float = 1.2
 
 
 def poisson_arrivals(rng: np.random.Generator, qps: float,
@@ -223,8 +232,8 @@ class OpenLoopDriver:
 
     # -- arrivals -------------------------------------------------------------
 
-    def _submit_query(self, rid: int):
-        """One query arrival: pick a session, maybe sync, submit."""
+    def _pick_session(self) -> tuple[ClientSession, int, float]:
+        """Draw the issuing session and charge any proactive hint sync."""
         sess = self.sessions[int(self.rng.integers(len(self.sessions)))]
         sync_bytes, sync_ms = 0, 0.0
         live = self.loop.live
@@ -234,6 +243,22 @@ class OpenLoopDriver:
                 sync_bytes = sess.sync_to(live.epochs)
                 sync_ms = self._downlink_ms(sync_bytes)
                 self._count_sync(sync_bytes, reactive=False)
+        return sess, sync_bytes, sync_ms
+
+    def _submit_arrival(self, rid: int):
+        """One arrival: a keyed lookup with probability `lookup_mix`,
+        otherwise a similarity query (the decision rides the run stream, so
+        the mix is reproducible per seed)."""
+        if (self.spec.lookup_mix > 0
+                and self.rng.random() < self.spec.lookup_mix):
+            self._submit_lookup(rid)
+        else:
+            self._submit_query(rid)
+
+    def _submit_query(self, rid: int):
+        """One query arrival: pick a session, maybe sync, submit."""
+        sess, sync_bytes, sync_ms = self._pick_session()
+        live = self.loop.live
         emb = self.queries[int(self.rng.integers(len(self.queries)))]
         mp = int(self.rng.choice(self._probes, p=self._probe_w))
         rec = RequestRecord(rid, sess.sid, t_arrival=self.clock(),
@@ -243,6 +268,30 @@ class OpenLoopDriver:
         self._pending[rid] = (sess, sess.epoch)
         self.loop.submit(rid, emb, top_k=self.spec.top_k, multi_probe=mp,
                          epoch=sess.epoch if live is not None else None)
+
+    def _submit_lookup(self, rid: int):
+        """One keyed-lookup arrival: Zipf-skewed id multiset → submit_lookup.
+
+        Ids come from a Zipf popularity law folded onto [0, V): hot ids
+        repeat within a single request exactly as DLRM sparse features do
+        (the keyed client dedups them to groups on the wire, so the
+        multiset costs the same as its distinct set).
+        """
+        layout = getattr(self.loop._serving_system(), "keyed", None)
+        assert layout is not None, "lookup_mix needs a build_keyed system"
+        sess, sync_bytes, sync_ms = self._pick_session()
+        live = self.loop.live
+        ids = ((self.rng.zipf(self.spec.lookup_zipf_a,
+                              size=self.spec.lookup_kappa) - 1)
+               % layout.n_rows).astype(np.int64)
+        rec = RequestRecord(rid, sess.sid, t_arrival=self.clock(),
+                            kind="lookup", hint_sync_bytes=sync_bytes,
+                            hint_sync_ms=sync_ms)
+        self.records[rid] = rec
+        self._pending[rid] = (sess, sess.epoch)
+        self.loop.submit_lookup(rid, ids,
+                                epoch=sess.epoch if live is not None
+                                else None)
 
     # -- the run --------------------------------------------------------------
 
@@ -264,7 +313,7 @@ class OpenLoopDriver:
                 t_ev, kind = events[i]
                 i += 1
                 if kind == "q":
-                    self._submit_query(rid)
+                    self._submit_arrival(rid)
                     rid += 1
                 else:
                     self.loop.submit_mutation(self.mutator(self.rng))

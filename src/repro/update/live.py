@@ -88,7 +88,8 @@ class LiveIndex:
         self._rebuild_kwargs = dict(rebuild_kwargs or {})
         # _commit_full supplies the then-current id set itself
         self._rebuild_kwargs.pop("doc_ids", None)
-        self._rebuild_kwargs.setdefault("n_clusters", system.db.n)
+        if system.keyed is None:
+            self._rebuild_kwargs.setdefault("n_clusters", system.db.n)
         # Full rebuilds re-run the ENTIRE offline build; a sharded system
         # must rebuild through the same sharded path (mesh-parallel K-means,
         # per-shard packing) rather than fall back to a host-side build that
@@ -136,6 +137,30 @@ class LiveIndex:
                    compact_every=compact_every,
                    rebuild_kwargs=dict(n_clusters=n_clusters, **build_kwargs))
 
+    @classmethod
+    def build_keyed(cls, table, *, max_pad_fraction: float = 0.95,
+                    compact_every: int | None = None,
+                    **build_kwargs) -> "LiveIndex":
+        """Offline-build a KEYED system (embedding table) as a live index.
+
+        table: (V, d) f32; extra kwargs forward to
+        `PirRagSystem.build_keyed` and are replayed on full rebuilds.  Row i
+        is doc i with the id-derived group assignment, so `replace(i, ...)`
+        streams fresh embedding rows through the standard delta-epoch path
+        (replaced records keep the fixed keyed width, so a replace can
+        never overflow a column).  Keyed mutations are REPLACE-only: the
+        table's id space must stay dense 0..V-1 for the client's stride
+        arithmetic, so inserts/deletes trip the planner's keyed guard.
+        """
+        table = np.ascontiguousarray(table, np.float32)
+        system = pipeline.PirRagSystem.build_keyed(table, **build_kwargs)
+        layout = system.keyed
+        texts = [layout.row_text(table[i]) for i in range(layout.n_rows)]
+        return cls(system, texts, table,
+                   max_pad_fraction=max_pad_fraction,
+                   compact_every=compact_every,
+                   rebuild_kwargs=dict(build_kwargs))
+
     def set_obs(self, obs: Obs) -> None:
         """Adopt `obs` (a serve loop's handle) for commit/compaction events."""
         self.obs = obs
@@ -176,6 +201,21 @@ class LiveIndex:
         """Journal a replace (emb: (d,) f32); visible at the next commit."""
         self.journal.append(journal_lib.replace(doc_id, text, emb))
 
+    def replace_row(self, row_id: int, row: np.ndarray):
+        """Journal a KEYED row replace; the record payload is the row itself.
+
+        Keyed records carry the row's raw f32 bytes as their text payload
+        (`KeyedLayout.row_text`), so callers hand over just the new row and
+        the (fixed-width) record stays in the id-derived group — the next
+        commit ships it as an ordinary delta epoch.
+        """
+        layout = self.system.keyed
+        if layout is None:
+            raise ValueError("replace_row needs a keyed (build_keyed) index")
+        row = np.asarray(row, np.float32)
+        self.journal.append(journal_lib.replace(
+            row_id, layout.row_text(row), row))
+
     # -- commit --------------------------------------------------------------
 
     def commit(self, *, donate: bool = False) -> HintPatch | None:
@@ -202,12 +242,26 @@ class LiveIndex:
             return None
         t0 = time.perf_counter()
         db = self.system.db
+        keyed = self.system.keyed
+        if keyed is not None:
+            # The client decodes by id arithmetic over a dense 0..V-1 space;
+            # inserts/deletes would punch holes in it.  Replaced rows must
+            # also STAY in their id-derived group, so the planner routes by
+            # the public layout, not by embedding similarity.
+            for m_ in muts:
+                if m_.kind != journal_lib.REPLACE:
+                    raise ValueError(
+                        f"keyed index supports replace only, got {m_.kind} "
+                        f"for doc {m_.doc_id}")
+        assign_fn = (None if keyed is None
+                     else (lambda i, e: keyed.group_of(i)))
         with self.obs.span("commit.stage", mutations=len(muts)) as sp:
             plan = planner.plan_updates(
                 muts, docs=self._docs, cluster_of=self._cluster_of,
                 centroids=self.system.centroids, m=db.m,
                 used_bytes=self._used, n_clusters=db.n, emb_dim=db.emb_dim,
-                max_pad_fraction=self.max_pad_fraction)
+                max_pad_fraction=self.max_pad_fraction,
+                assign_fn=assign_fn)
             sp.set(kind="full" if plan.full_rebuild else "delta",
                    touched=len(plan.touched))
             if plan.full_rebuild:
@@ -319,6 +373,32 @@ class LiveIndex:
         ids = sorted(plan.new_docs)
         texts = [plan.new_docs[i][0] for i in ids]
         embs = np.stack([plan.new_docs[i][1] for i in ids])
+        if self.system.keyed is not None:
+            # Keyed rebuild: the id space is dense (replace-only), so the
+            # doc set IS the table — rebuild through the keyed path with
+            # the same layout/bucket knobs.
+            assert ids == list(range(len(ids))), "keyed id space not dense"
+            lay, bp = self.system.keyed, self.system.batch
+            kw = {k: v for k, v in self._rebuild_kwargs.items()
+                  if k not in ("group_size", "kappa", "n_buckets",
+                               "batch_seed")}
+            new_system = pipeline.PirRagSystem.build_keyed(
+                embs, group_size=lay.group_size, kappa=bp.kappa,
+                n_buckets=bp.partition.n_buckets, batch_seed=bp.seed, **kw)
+            plan.new_cluster_of.clear()
+            plan.new_cluster_of.update(
+                {i: int(new_system.assignment[p])
+                 for p, i in enumerate(ids)})
+
+            def apply_keyed():
+                self.system = new_system
+                self._used = {j: int(new_system.db.used_bytes[j])
+                              for j in range(new_system.db.n)}
+
+            return HintPatch(from_epoch=self.epochs.epoch,
+                             to_epoch=self.epochs.epoch + 1,
+                             full_hint=np.asarray(new_system.hint),
+                             cfg=new_system.cfg), apply_keyed
         new_system = pipeline.PirRagSystem.build(
             texts, embs, doc_ids=ids, **self._rebuild_kwargs)
         routing.rebuild_batch(self.system, new_system)
@@ -357,3 +437,13 @@ class LiveIndex:
         """Epoch-checked batched query ((B, d) f32; kwargs to the system)."""
         self.check_epoch(epoch)
         return self.system.query_batch(query_embs, **kwargs)
+
+    def lookup(self, ids, *, epoch: int, **kwargs):
+        """Epoch-checked keyed row lookup (kwargs to `PirRagSystem.lookup`)."""
+        self.check_epoch(epoch)
+        return self.system.lookup(ids, **kwargs)
+
+    def lookup_batch(self, ids_batch, *, epoch: int, **kwargs):
+        """Epoch-checked batched keyed lookup (kwargs to the system)."""
+        self.check_epoch(epoch)
+        return self.system.lookup_batch(ids_batch, **kwargs)

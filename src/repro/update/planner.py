@@ -21,7 +21,7 @@ by the very next query without re-clustering.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -54,8 +54,18 @@ def plan_updates(mutations: Sequence[journal_lib.Mutation], *,
                  used_bytes: Mapping[int, int],
                  n_clusters: int,
                  emb_dim: int,
-                 max_pad_fraction: float = 0.95) -> UpdatePlan:
-    """Resolve `mutations` in order and account column capacity."""
+                 max_pad_fraction: float = 0.95,
+                 assign_fn: Callable[[int, np.ndarray], int] | None = None
+                 ) -> UpdatePlan:
+    """Resolve `mutations` in order and account column capacity.
+
+    ``assign_fn(doc_id, emb) -> cluster`` overrides the nearest-centroid
+    placement rule for inserts/replaces.  Keyed (embedding-table) systems
+    pass the id→group map here: their column membership is a public
+    function of the ID, so a replaced row must stay in its id-derived
+    group — re-routing it by embedding similarity would silently break the
+    client's fixed-stride decode arithmetic.
+    """
     new_docs = dict(docs)
     new_cluster_of = dict(cluster_of)
     touched: set[int] = set()
@@ -77,7 +87,8 @@ def plan_updates(mutations: Sequence[journal_lib.Mutation], *,
         old_cluster = new_cluster_of.get(mut.doc_id)
         if old_cluster is not None:
             touched.add(old_cluster)       # replace may move the doc
-        cl = nearest_centroid(emb, centroids)
+        cl = (nearest_centroid(emb, centroids) if assign_fn is None
+              else int(assign_fn(mut.doc_id, emb)))
         new_docs[mut.doc_id] = (mut.text, emb)
         new_cluster_of[mut.doc_id] = cl
         touched.add(cl)

@@ -140,6 +140,29 @@ def test_balanced_assign_d2_override_matches_internal():
     assert np.array_equal(a, b)
 
 
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(2, 16),
+       exact=st.sampled_from([True, False]))
+def test_balanced_assign_matches_reference_walk(seed, k, exact):
+    """The vectorized deferred-acceptance path ≡ the serial greedy walk.
+
+    `balanced_assign` replaced the O(N·k) host loop with a masked-argmin
+    deferred-acceptance round structure; both orderings are serial
+    dictatorship under the same priority, so outputs must be EQUAL — not
+    merely equally balanced — on any input, including exact caps
+    (cap·k == n, every cluster filled to the brim) where rejection
+    cascades are longest.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(k * rng.integers(4, 40))
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    cents = rng.standard_normal((k, 8)).astype(np.float32)
+    cap = -(-n // k) + (0 if exact else int(rng.integers(1, 20)))
+    fast = clustering.balanced_assign(x, cents, cap)
+    ref = clustering._balanced_assign_walk(x, cents, cap)
+    assert np.array_equal(fast, ref)
+
+
 def test_empty_cluster_keeps_centroid():
     """k > n_distinct points: Lloyd must not NaN on empty clusters."""
     x = jnp.asarray(np.random.default_rng(0).standard_normal((10, 4)),

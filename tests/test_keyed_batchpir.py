@@ -1,0 +1,223 @@
+"""Keyed batch-PIR property hardening: private embedding-row lookups.
+
+The recsys serving contract (`PirRagSystem.build_keyed` / `lookup`):
+recovered rows are bit-identical to ``table[ids]`` for ANY id multiset —
+Zipf-skewed, duplicated, empty — the wire view is independent of κ and of
+which ids were asked, and cuckoo placement either succeeds or raises
+`PlacementError` deterministically.  The e2e cases drive the unmodified
+MIND `recsys.serve` on privately fetched rows, including through a live
+mutation epoch.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.batchpir import KeyedLayout, PlacementError
+from repro.core import pipeline
+
+
+@functools.lru_cache(maxsize=None)
+def _keyed_system(v=600, d=8, kappa=26, seed=0, **kw):
+    """One shared keyed system per shape — crypto setup is the slow part."""
+    rng = np.random.default_rng(seed + 17)
+    table = rng.standard_normal((v, d)).astype(np.float32)
+    sysm = pipeline.PirRagSystem.build_keyed(table, kappa=kappa, impl="xla",
+                                             seed=seed, **kw)
+    return sysm, table
+
+
+def _zipf_ids(rng, n_rows, kappa, a=1.2):
+    """DLRM-skew multiset: duplicates are the COMMON case, not an edge."""
+    return ((rng.zipf(a, size=kappa) - 1) % n_rows).astype(np.int64)
+
+
+# -- layout arithmetic (no crypto: full 1e3–1e5 vocab range) ----------------
+
+@settings(max_examples=25, deadline=None)
+@given(n_rows=st.integers(1_000, 100_000), dim=st.integers(1, 64),
+       seed=st.integers(0, 10_000))
+def test_layout_grouping_properties(n_rows, dim, seed):
+    lay = KeyedLayout.build(n_rows, dim)
+    assert lay.record_stride == 16 + 5 * dim
+    assert lay.n_groups == -(-n_rows // lay.group_size)
+    rng = np.random.default_rng(seed)
+    ids = _zipf_ids(rng, n_rows, 26)
+    for i in ids:
+        g = lay.group_of(int(i))
+        assert 0 <= g < lay.n_groups
+        assert g == int(i) // lay.group_size
+    gs = lay.groups_of(ids)
+    assert gs == sorted(set(gs))                       # distinct + sorted
+    assert set(gs) == {int(i) // lay.group_size for i in ids}
+    for bad in (-1, n_rows):
+        with pytest.raises(IndexError):
+            lay.group_of(bad)
+
+
+# -- bit-identity under skew ------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), kappa=st.integers(1, 26),
+       zipf_a=st.sampled_from([1.1, 1.5, 2.5]))
+def test_lookup_bit_identical_zipf(seed, kappa, zipf_a):
+    """rows == table[ids] bitwise for Zipf multisets with duplicates."""
+    sysm, table = _keyed_system()
+    rng = np.random.default_rng(seed)
+    ids = _zipf_ids(rng, len(table), kappa, a=zipf_a)
+    rows, stats = sysm.lookup(ids, key=jax.random.PRNGKey(seed))
+    assert rows.dtype == np.float32 and rows.shape == (kappa, table.shape[1])
+    np.testing.assert_array_equal(rows, table[ids])
+    assert stats.kappa == kappa
+    assert stats.groups == len(set(int(i) // sysm.keyed.group_size
+                                   for i in ids))
+
+
+def test_lookup_edge_multisets():
+    """Empty multiset and an all-duplicates multiset both decode exactly."""
+    sysm, table = _keyed_system()
+    empty, stats = sysm.lookup([], key=jax.random.PRNGKey(0))
+    assert empty.shape == (0, table.shape[1]) and stats.kappa == 0
+    ids = [41] * 26
+    rows, _ = sysm.lookup(ids, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(rows, table[ids])
+
+
+def test_lookup_batch_matches_sequential():
+    """The engine's batched keyed path ≡ per-client sequential lookups."""
+    sysm, table = _keyed_system()
+    rng = np.random.default_rng(5)
+    batch = [_zipf_ids(rng, len(table), int(k)) for k in (3, 8, 26)]
+    outs = sysm.lookup_batch(batch, key=jax.random.PRNGKey(7))
+    assert len(outs) == len(batch)
+    for ids, rows in zip(batch, outs):
+        assert rows.shape == (len(ids), table.shape[1])
+        np.testing.assert_array_equal(rows, table[ids])
+
+
+# -- wire-view independence -------------------------------------------------
+
+def test_uplink_independent_of_kappa_and_ids():
+    """The server always sees B same-width ciphertexts: message size can
+    depend on neither κ, nor duplicate structure, nor the ids themselves."""
+    sysm, table = _keyed_system()
+    lay, bp = sysm.keyed, sysm.batch
+    rng = np.random.default_rng(11)
+    shapes = set()
+    for kappa in (1, 2, 7, 13, 26):
+        for draw in range(3):
+            ids = _zipf_ids(rng, len(table), kappa)
+            qs, _ = bp.client.query_rows(
+                jax.random.PRNGKey(kappa * 100 + draw), lay, ids)
+            shapes.add((qs.shape, qs.dtype.name, int(qs.size * 4)))
+    assert len(shapes) == 1, shapes
+    ((shape, _, up),) = shapes
+    assert shape[0] == bp.partition.n_buckets       # dummies fill the gaps
+    assert up == bp.server.uplink_bytes
+
+
+def test_placement_deterministic_per_key():
+    """Same (key, ids, walk_seed) → byte-identical queries; placement is a
+    pure function, success or failure alike."""
+    sysm, table = _keyed_system()
+    lay, bp = sysm.keyed, sysm.batch
+    rng = np.random.default_rng(23)
+    for kappa in (4, 17, 26):
+        ids = _zipf_ids(rng, len(table), kappa)
+        q1, s1 = bp.client.query_rows(jax.random.PRNGKey(42), lay, ids)
+        q2, s2 = bp.client.query_rows(jax.random.PRNGKey(42), lay, ids)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        assert s1.base.placement == s2.base.placement
+
+
+def test_placement_failure_deterministic_and_fallback_exact():
+    """> B distinct groups is structurally unplaceable: `query_rows` raises
+    PlacementError every time, and the system-level `lookup` falls back to
+    the legacy per-group path with bit-exact rows."""
+    sysm, table = _keyed_system(v=640, d=8, kappa=4, n_buckets=6, seed=3)
+    lay, bp = sysm.keyed, sysm.batch
+    gs = lay.group_size
+    ids = np.arange(7) * gs                      # 7 distinct groups > 6 buckets
+    for attempt in range(2):
+        with pytest.raises(PlacementError):
+            bp.client.query_rows(jax.random.PRNGKey(attempt), lay, ids)
+    rows, stats = sysm.lookup(ids, key=jax.random.PRNGKey(9))
+    assert stats.mode == "legacy"
+    np.testing.assert_array_equal(rows, table[ids])
+
+
+# -- e2e: the unmodified MIND model on privately fetched rows ---------------
+
+def _mind_batch(cfg, rng):
+    hist = rng.integers(0, cfg.vocab_per_field, (2, cfg.hist_len))
+    mask = np.ones((2, cfg.hist_len), bool)
+    target = rng.integers(0, cfg.vocab_per_field, (2,))
+    batch = {"hist": jnp.asarray(hist), "hist_mask": jnp.asarray(mask),
+             "target": jnp.asarray(target)}
+    ids = np.concatenate([hist.ravel(), target]).astype(np.int64)
+    return batch, ids
+
+
+def _serve_bits(params, batch, cfg):
+    from repro.models import recsys
+    return np.asarray(recsys.serve(params, batch, cfg)).view(np.uint32)
+
+
+def test_mind_serve_parity_through_mutation_epoch():
+    """serve() on PIR-fetched rows ≡ the public-table run, bit for bit —
+    before AND after a live REPLACE epoch re-fetches patched rows."""
+    from repro.configs.mind import SMOKE as cfg
+    from repro.models import embedding, recsys
+    from repro.update import LiveIndex
+
+    rng = np.random.default_rng(2)
+    params = recsys.init(jax.random.PRNGKey(0), cfg)
+    table = np.asarray(params["emb"]["table"], np.float32)
+    live = LiveIndex.build_keyed(table, kappa=26, impl="xla", seed=0)
+    batch, ids = _mind_batch(cfg, rng)
+
+    def private_bits(pub_table):
+        rows, _ = live.lookup(ids, epoch=live.epoch,
+                              key=jax.random.PRNGKey(3 + live.epoch))
+        np.testing.assert_array_equal(rows, pub_table[ids])
+        priv = {"emb": embedding.table_from_rows(
+                    len(pub_table), cfg.embed_dim, ids, rows),
+                "bilinear": params["bilinear"]}
+        return _serve_bits(priv, batch, cfg)
+
+    pub = {"emb": {"table": jnp.asarray(table)}, "bilinear": params["bilinear"]}
+    np.testing.assert_array_equal(private_bits(table),
+                                  _serve_bits(pub, batch, cfg))
+
+    # live epoch: replace two rows this request actually touches
+    table2 = table.copy()
+    for rid in (int(ids[0]), int(ids[-1])):
+        table2[rid] = rng.standard_normal(cfg.embed_dim).astype(np.float32)
+        live.replace_row(rid, table2[rid])
+    patch = live.commit()
+    assert patch is not None and not patch.is_full        # delta epoch
+    pub2 = {"emb": {"table": jnp.asarray(table2)},
+            "bilinear": params["bilinear"]}
+    np.testing.assert_array_equal(private_bits(table2),
+                                  _serve_bits(pub2, batch, cfg))
+    # keyed dense-id guard: inserts must be rejected, not silently staged
+    from repro.update import journal as journal_lib
+    live.journal.append(journal_lib.insert(
+        len(table2), b"x", np.zeros(cfg.embed_dim, np.float32)))
+    with pytest.raises(ValueError, match="replace only"):
+        live.commit()
+
+
+@pytest.mark.slow
+def test_lookup_bit_identical_large_vocab():
+    """Vocab 1e5: the stride arithmetic and placement hold at DLRM scale."""
+    sysm, table = _keyed_system(v=100_000, d=8, kappa=8, seed=1,
+                                group_size=100)
+    rng = np.random.default_rng(31)
+    for seed in range(3):
+        ids = _zipf_ids(np.random.default_rng(seed), len(table), 8)
+        rows, _ = sysm.lookup(ids, key=jax.random.PRNGKey(seed))
+        np.testing.assert_array_equal(rows, table[ids])

@@ -293,6 +293,57 @@ print("MESH-OK")
 """
 
 
+def test_keyed_lookup_mixed_batch_both_engines():
+    """Keyed lookups flow through both engines alongside similarity queries
+    in ONE tick's batch, stay bit-exact against the live table through a
+    replace epoch, and the engines agree response-for-response."""
+    rng = np.random.default_rng(6)
+    table = rng.standard_normal((144, 8)).astype(np.float32)
+    new_row = rng.standard_normal(8).astype(np.float32)
+    asks = [rng.integers(0, 144, size=k).tolist() for k in (3, 9)]
+
+    def drive(loop):
+        layout = loop._serving_system().keyed
+        for rid, ids in enumerate(asks):
+            loop.submit_lookup(rid, ids)
+        loop.submit(10, table[7], top_k=3)            # mixed-kind tick
+        served = loop.tick(force=True)
+        loop.drain()
+        assert served >= 1
+        loop.submit_mutation(journal_lib.replace(
+            asks[0][0], layout.row_text(new_row), new_row))
+        loop.submit_lookup(11, asks[0])               # re-fetch after commit
+        loop.drain()
+        return loop.responses
+
+    sync = PIRServeLoop(
+        LiveIndex.build_keyed(table, kappa=9, impl="xla", seed=0),
+        max_batch=8, deadline_ms=1e9, clock=FakeClock(), seed=0)
+    pipe = PipelinedServeLoop(
+        LiveIndex.build_keyed(table, kappa=9, impl="xla", seed=0),
+        max_batch=8, deadline_ms=1e9, clock=FakeClock(), seed=0, depth=2)
+    rs, rp = drive(sync), drive(pipe)
+
+    patched = table.copy()
+    patched[asks[0][0]] = new_row
+    for resp in (rs, rp):
+        by_rid = {r.rid: r for r in resp}
+        assert set(by_rid) == {0, 1, 10, 11}
+        for rid, ids in enumerate(asks):
+            np.testing.assert_array_equal(by_rid[rid].top, table[ids])
+        assert by_rid[10].top and by_rid[10].epoch == 0
+        assert by_rid[11].epoch == 1                  # post-commit epoch
+        np.testing.assert_array_equal(by_rid[11].top, patched[asks[0]])
+    # engines agree on everything, row payloads included
+    assert [(r.rid, r.epoch, r.batch_size) for r in rs] == \
+           [(r.rid, r.epoch, r.batch_size) for r in rp]
+    for a, b in zip(rs, rp):
+        if a.rid == 10:
+            assert a.top == b.top
+        else:
+            np.testing.assert_array_equal(a.top, b.top)
+
+
 @pytest.mark.slow
 def test_pipelined_sharded_matches_single_device_sync():
     """8-fake-device mesh: pipelined sharded serving (shadow commits via the

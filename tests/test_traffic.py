@@ -185,6 +185,39 @@ def test_open_loop_with_mutations_syncs_sessions_exactly():
     assert s["components"]["hint_sync_ms"]["mean"] >= 0
 
 
+def test_open_loop_mixed_lookup_traffic_per_kind_slo():
+    """lookup_mix routes a reproducible share of arrivals through
+    `submit_lookup` on a keyed system; the SLO fold reports each kind's
+    attainment separately and the per-kind counts partition the total."""
+    rng = np.random.default_rng(21)
+    table = rng.standard_normal((144, 8)).astype(np.float32)
+    live = LiveIndex.build_keyed(table, kappa=6, impl="xla", seed=0)
+    loop = PipelinedServeLoop(live, max_batch=8, deadline_ms=5.0,
+                              clock=FakeClock(), depth=2)
+    spec = TrafficSpec(qps=60.0, duration_s=1.0, n_sessions=4,
+                       probe_mix=((1, 1.0),), lookup_mix=0.5,
+                       lookup_kappa=6, seed=13)
+    res = OpenLoopDriver(loop, table, spec).run()
+    kinds = {r.kind for r in res.records}
+    assert kinds == {"query", "lookup"}
+    assert all(r.outcome == SERVED for r in res.records)
+    s = res.summary(deadline_ms=1000.0)
+    assert set(s["kinds"]) == {"query", "lookup"}
+    assert (s["kinds"]["query"]["offered"] + s["kinds"]["lookup"]["offered"]
+            == s["offered"])
+    for k in ("query", "lookup"):
+        assert s["kinds"][k]["offered"] > 5          # the mix really mixes
+        assert s["kinds"][k]["served"] == s["kinds"][k]["offered"]
+        assert s["kinds"][k]["attainment"] == 1.0
+        assert 0 < s["kinds"][k]["p50_ms"] <= s["kinds"][k]["p99_ms"]
+    # determinism: the same seed reproduces the same kind sequence
+    live2 = LiveIndex.build_keyed(table, kappa=6, impl="xla", seed=0)
+    loop2 = PipelinedServeLoop(live2, max_batch=8, deadline_ms=5.0,
+                               clock=FakeClock(), depth=2)
+    res2 = OpenLoopDriver(loop2, table, spec).run()
+    assert [r.kind for r in res.records] == [r.kind for r in res2.records]
+
+
 def test_open_loop_overload_sheds_and_bounds_queue():
     """Offered load far above the virtual service rate: the controller
     sheds the excess, every offered request is accounted exactly once, and
