@@ -205,6 +205,27 @@ def main() -> None:
         all_checks.extend(tres["checks"])
     section("traffic", sec_traffic)
 
+    # ---- fault-tolerant fleet: failover SLO, recovery, no-fault identity ----
+    def sec_fleet():
+        from benchmarks import fleet_bench
+        fres = fleet_bench.run(fast=args.fast)
+        ident, loss, rec = fres["identity"], fres["loss"], fres["recovery"]
+        print(f"fleet_identity,{ident['n_responses']},"
+              f"identical={ident['identical']};"
+              f"clock={ident['clock_identical']}")
+        print(f"fleet_shard_loss,{1e6 / max(loss['served_qps'], 1e-9):.0f},"
+              f"attain={loss['attainment']:.3f};"
+              f"p99={loss['served_p99_ms']:.0f}ms;"
+              f"failovers={loss['failovers']};"
+              f"detect={loss['failover_detect_ticks']}t;"
+              f"failed={loss['failed']}")
+        print(f"fleet_recovery,{rec['wall_s'] * 1e6:.0f},"
+              f"epochs={rec['epochs']};eps={rec['epochs_per_s']:.0f}/s;"
+              f"bit_identical={rec['bit_identical']}")
+        results["fleet"] = fres
+        all_checks.extend(fres["checks"])
+    section("fleet", sec_fleet)
+
     # ---- Graph-PIR sketch tuning sweep --------------------------------------
     def sec_graph():
         from benchmarks import graph_bench
@@ -256,6 +277,7 @@ def main() -> None:
                      ("recsys", "recsys"),
                      ("sharded", "sharded"), ("build", "build"),
                      ("serve", "serve"), ("traffic", "traffic"),
+                     ("fleet", "fleet"),
                      ("graph", "graph"), ("obs", "obs")):
         if src in results:
             out[dst] = results[src]

@@ -33,6 +33,11 @@ MODULES = [
     "repro.traffic.workload",
     "repro.traffic.slo",
     "repro.traffic.admission",
+    "repro.fleet",
+    "repro.fleet.faults",
+    "repro.fleet.retry",
+    "repro.fleet.replica",
+    "repro.fleet.recovery",
     "repro.distributed.collectives",
     "repro.kernels.ops",
     "repro.obs",

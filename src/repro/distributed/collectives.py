@@ -363,3 +363,19 @@ def ring_psum(mesh: Mesh, axis: str):
 
     return shard_map(local, mesh=mesh, in_specs=P(axis, None),
                      out_specs=P(axis, None), check_rep=False)
+
+
+def row_shard_health_check(faults, n_devices: int) -> list[tuple[int, int]]:
+    """Guard the "collectives.row_shard.loss" fault site for a fleet tick.
+
+    The replica layer (repro.fleet.replica) calls this once per tick in
+    place of a real per-device heartbeat RPC; `faults` is a duck-typed
+    injector (or None) whose due events name the device losing its
+    row-shard cells.  Returns [(device, down_ticks), ...] — empty on every
+    un-faulted tick, at the cost of one counter increment, so the no-fault
+    health check adds no clock reads or collectives to the serving path.
+    """
+    if faults is None:
+        return []
+    return [(ev.device % n_devices, ev.down_ticks)
+            for ev in faults.fire("collectives.row_shard.loss")]

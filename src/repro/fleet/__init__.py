@@ -1,0 +1,45 @@
+"""Fault-tolerant fleet serving: faults, retries, replicas, recovery.
+
+Failure model and degradation contract live in docs/fleet.md.  The light
+leaves — `faults` (the injection plan/injector) and `retry` (the bounded
+retry/backoff policy) — import eagerly: they depend only on numpy and are
+what the serve/update/traffic layers import at module scope.  The heavy
+modules — `replica` (replica groups + FleetServeLoop, pulls in the whole
+serve stack) and `recovery` (journal replay) — resolve lazily via PEP 562
+so ``from repro.fleet.faults import ...`` inside `update.live` never
+re-enters the serve engine mid-import.
+"""
+from __future__ import annotations
+
+from repro.fleet.faults import (ALL_SITES, FaultEvent, FaultInjector,
+                                FaultPlan, InjectedCommitFault, NO_FAULTS,
+                                SITE_ANSWER_DELAY, SITE_ANSWER_DROP,
+                                SITE_CHAIN_CORRUPT, SITE_COMMIT_FAIL,
+                                SITE_SHARD_LOSS)
+from repro.fleet.retry import DEFAULT_POLICY, RetryPolicy
+
+_LAZY = {
+    "ReplicaGroup": ("repro.fleet.replica", "ReplicaGroup"),
+    "ShardHost": ("repro.fleet.replica", "ShardHost"),
+    "FleetServeLoop": ("repro.fleet.replica", "FleetServeLoop"),
+    "ReplayReport": ("repro.fleet.recovery", "ReplayReport"),
+    "epoch_batches": ("repro.fleet.recovery", "epoch_batches"),
+    "replay_into": ("repro.fleet.recovery", "replay_into"),
+    "readmit": ("repro.fleet.recovery", "readmit"),
+}
+
+__all__ = [
+    "ALL_SITES", "FaultEvent", "FaultInjector", "FaultPlan",
+    "InjectedCommitFault", "NO_FAULTS", "SITE_ANSWER_DELAY",
+    "SITE_ANSWER_DROP", "SITE_CHAIN_CORRUPT", "SITE_COMMIT_FAIL",
+    "SITE_SHARD_LOSS", "DEFAULT_POLICY", "RetryPolicy", *_LAZY,
+]
+
+
+def __getattr__(name: str):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod_name), attr)

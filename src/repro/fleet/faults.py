@@ -1,0 +1,166 @@
+"""Deterministic fault injection for the serving fleet.
+
+A `FaultPlan` is a SEEDED, fully enumerated schedule of fault events, each
+bound to a named SITE — a specific guarded point in the serving stack — and
+an invocation index at that site.  The `FaultInjector` compiled from a plan
+counts site invocations and fires the matching events; with an empty plan
+every guard is a pure counter increment, so the no-fault path makes exactly
+the same clock reads and dispatches as an uninjected run (the bit-identity
+regression in tests/test_fleet.py pins this).
+
+Sites (each module guards its own; the literals below are the canonical
+vocabulary — this module depends only on numpy, so guarded modules import
+it eagerly without cycles, while the heavier fleet modules stay lazy behind
+``repro.fleet.__getattr__``):
+
+``collectives.row_shard.loss``  (`distributed.collectives.row_shard_health_check`)
+    Fired once per fleet tick; payload ``device`` + ``down_ticks`` takes
+    that device out of the replica placement for a window, killing every
+    row-shard replica cell placed on it.
+``serve.answer.drop``  (`serve.engine` tick, post-admission)
+    The cut batch's answer is lost before dispatch: every request in it is
+    charged one retry against the engine's `RetryPolicy` and re-queued
+    with backoff (or terminally failed).
+``serve.answer.delay``  (`serve.engine` tick, post-admission)
+    The cut batch is held for ``delay_s`` of loop-clock time before
+    becoming dispatchable again (no retry charged — the answer is late,
+    not lost).
+``update.commit.stage``  (`update.live.LiveIndex.stage`)
+    The staged commit raises `InjectedCommitFault` mid-stage; the engines
+    catch it, leave the journal's pending batch intact, and retry the
+    commit with backoff on a later tick (PR 6 closed the donation window,
+    so a dropped `StagedEpoch` leaves the live epoch serving untouched).
+``update.hint.chain``  (`update.epochs.EpochLog.download_chain`)
+    One patch of the downloaded chain is bit-flipped in transit (the log's
+    own copy is untouched); the client detects the checksum mismatch at
+    decode time and performs one deterministic full re-sync.
+
+Every event is identified by (site, nth invocation), so a plan is exact
+under FakeClock virtual time AND under the real clock — fault timing is a
+function of the control flow, not of wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+#: Canonical site names (mirrored as literals at each guarded call site).
+SITE_SHARD_LOSS = "collectives.row_shard.loss"
+SITE_ANSWER_DROP = "serve.answer.drop"
+SITE_ANSWER_DELAY = "serve.answer.delay"
+SITE_COMMIT_FAIL = "update.commit.stage"
+SITE_CHAIN_CORRUPT = "update.hint.chain"
+
+ALL_SITES = (SITE_SHARD_LOSS, SITE_ANSWER_DROP, SITE_ANSWER_DELAY,
+             SITE_COMMIT_FAIL, SITE_CHAIN_CORRUPT)
+
+
+class InjectedCommitFault(RuntimeError):
+    """A staged commit failed by injection; the mutation batch is retryable."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fire at the `at`-th invocation of `site` (0-based).
+
+    Payload fields are site-specific: ``device``/``down_ticks`` for shard
+    loss, ``delay_s`` for answer delays; the rest ignore them.
+    """
+    site: str
+    at: int
+    device: int = 0
+    down_ticks: int = 0
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.site in ALL_SITES, self.site
+        assert self.at >= 0 and self.down_ticks >= 0 and self.delay_s >= 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, enumerable fault schedule (empty = no faults).
+
+    Plans are data: the chaos property tests draw seeded random plans,
+    shrink them, and replay them exactly; benches pin literal plans so the
+    measured degradation is attributable to a known fault.
+    """
+    events: tuple[FaultEvent, ...] = ()
+
+    @classmethod
+    def none(cls) -> "FaultPlan":
+        """The empty plan: every guard is a counter increment, nothing fires."""
+        return cls(())
+
+    @classmethod
+    def single_shard_loss(cls, *, at_tick: int, device: int,
+                          down_ticks: int) -> "FaultPlan":
+        """One device lost for a window — the bench's headline scenario."""
+        return cls((FaultEvent(SITE_SHARD_LOSS, at=at_tick, device=device,
+                               down_ticks=down_ticks),))
+
+    @classmethod
+    def random(cls, seed: int, *, n_events: int, horizon: int,
+               n_devices: int, max_down_ticks: int = 12,
+               max_delay_s: float = 0.02,
+               sites: tuple[str, ...] = ALL_SITES) -> "FaultPlan":
+        """A seeded random plan: `n_events` faults over `horizon` invocations.
+
+        Deterministic per (seed, shape): the chaos tests sweep seeds and
+        assert the same invariants under every drawn schedule.
+        """
+        rng = np.random.default_rng([seed, 0xFA])
+        events = []
+        for _ in range(n_events):
+            site = sites[int(rng.integers(len(sites)))]
+            ev = FaultEvent(
+                site, at=int(rng.integers(horizon)),
+                device=int(rng.integers(n_devices)),
+                down_ticks=int(rng.integers(1, max_down_ticks + 1)),
+                delay_s=float(rng.uniform(0.0, max_delay_s)))
+            events.append(ev)
+        return cls(tuple(events))
+
+    def compile(self) -> "FaultInjector":
+        """An injector with fresh invocation counters for this plan."""
+        return FaultInjector(self)
+
+
+class FaultInjector:
+    """Counts site invocations and fires the plan's matching events.
+
+    One injector per run: counters are mutable state, so two runs that
+    should see identical faults must each `compile()` the plan afresh.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self._count: dict[str, int] = {}
+        self._by_site: dict[str, dict[int, list[FaultEvent]]] = {}
+        for ev in plan.events:
+            self._by_site.setdefault(ev.site, {}).setdefault(
+                ev.at, []).append(ev)
+        self.fired: list[FaultEvent] = []
+
+    def fire(self, site: str) -> list[FaultEvent]:
+        """Advance `site`'s invocation counter; return the events due NOW.
+
+        Returns an empty list almost always — the hot-path cost of an armed
+        injector is one dict lookup and one integer increment.
+        """
+        n = self._count.get(site, 0)
+        self._count[site] = n + 1
+        due = self._by_site.get(site, {}).get(n, [])
+        if due:
+            self.fired.extend(due)
+        return due
+
+    def invocations(self, site: str) -> int:
+        """How many times `site` has been guarded so far this run."""
+        return self._count.get(site, 0)
+
+
+#: Compiled empty plan, shareable: it has no per-run counter state that
+#: matters (nothing ever fires).
+NO_FAULTS = None

@@ -1,0 +1,99 @@
+"""Journal-replay re-admission: a lost shard host rejoins the fleet.
+
+The mutation journal is the durable recovery story (`repro.update.journal`):
+every committed epoch is an ordered batch of journal records, and
+`LiveIndex` commits are DETERMINISTIC — staging the same mutation batch on
+the same epoch-e state publishes a bit-identical epoch e+1 (hint, DB,
+patch; property-tested in tests/test_fleet.py).  So a host that lost state
+(or merely fell behind while its device was down) catches up by replaying
+the surviving authority's committed records, epoch by epoch, through its
+OWN `LiveIndex.commit` path:
+
+    for (epoch, batch) in epoch_batches(authority_journal, since=me.epoch):
+        me.journal.append(*batch); me.commit()   # reproduces epoch exactly
+
+Replaying through the journal (rather than copying arrays) keeps the
+recovered host's journal, epoch log and hint-patch chain COMPLETE — after
+re-admission it is indistinguishable from a host that never failed, and can
+itself become the replay source for the next failure.
+
+Injected commit faults never target replays: `replay_into` disarms the
+host's fault hook for the duration (`update.commit.stage` guards foreground
+commits; recovery is the path that must not fail).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayReport:
+    """One re-admission's accounting (the `fleet.recovery` observable)."""
+    from_epoch: int      # host's epoch before replay
+    to_epoch: int        # head epoch reached
+    epochs: int          # commits replayed
+    mutations: int       # journal records replayed
+    wall_s: float        # replay wall-clock (the bench's recovery time)
+
+
+def epoch_batches(journal, since_epoch: int) -> list[tuple[int, list]]:
+    """Committed (epoch, mutation batch) groups after `since_epoch`.
+
+    Groups `journal.committed_records()` by the epoch each record joined,
+    in epoch order — exactly the commit batches the authority folded, so
+    replaying them reproduces the same epoch boundaries (and therefore the
+    same patches) on the recovering host.
+    """
+    groups: dict[int, list] = {}
+    for epoch, mut in journal.committed_records():
+        if epoch > since_epoch:
+            groups.setdefault(epoch, []).append(mut)
+    return [(e, groups[e]) for e in sorted(groups)]
+
+
+def replay_into(live, batches: list[tuple[int, list]], *,
+                obs=None) -> int:
+    """Replay epoch batches through `live.commit()`; returns epochs applied.
+
+    Asserts the epoch numbering lines up after every commit — a drifted
+    replay would otherwise silently produce a host at the right epoch with
+    the wrong state.  The host's fault hook is disarmed for the duration
+    (injected commit faults target foreground commits, not recovery).
+    """
+    n_muts = 0
+    faults, live.faults = live.faults, None
+    try:
+        for epoch, batch in batches:
+            assert live.epoch == epoch - 1, (live.epoch, epoch)
+            for mut in batch:
+                live.journal.append(mut)
+            live.commit()
+            assert live.epoch == epoch, (live.epoch, epoch)
+            n_muts += len(batch)
+    finally:
+        live.faults = faults
+    if obs is not None and batches:
+        obs.counter("fleet.replayed_epochs").inc(len(batches))
+        obs.counter("fleet.replayed_mutations").inc(n_muts)
+    return len(batches)
+
+
+def readmit(live, source_journal, *, obs=None) -> ReplayReport:
+    """Re-admit `live` by replaying `source_journal` past its epoch.
+
+    Returns the `ReplayReport`; after this the host's epoch, hint, DB and
+    epoch log match the source's bit-for-bit (commit determinism), so it
+    re-enters rotation as a full failover target.
+    """
+    t0 = time.perf_counter()
+    from_epoch = live.epoch
+    batches = epoch_batches(source_journal, from_epoch)
+    epochs = replay_into(live, batches, obs=obs)
+    report = ReplayReport(
+        from_epoch=from_epoch, to_epoch=live.epoch, epochs=epochs,
+        mutations=sum(len(b) for _, b in batches),
+        wall_s=time.perf_counter() - t0)
+    if obs is not None:
+        obs.counter("fleet.recovery").inc()
+    return report

@@ -1,0 +1,356 @@
+"""Row-shard replica groups: placement, health, failover, failback.
+
+A `ReplicaGroup` holds R complete ranks of the live index (R=2 by default),
+each rank's row shards placed on a DISJOINT device set
+(`launch.mesh.make_replica_meshes`: rank r of shard s sits on device
+r·S + s), so one lost device takes out exactly one rank's shard cell and
+never its sibling.  Rank 0 is the home authority: it takes every commit,
+and followers trail it by at most ``sync_lag`` epochs, catching up by
+replaying the authority's journal (`fleet.recovery`) — deterministic
+commits make the follower's state bit-identical to the authority's at every
+epoch boundary.
+
+Health is a per-device heartbeat state machine in TICK COUNTS (no clock
+reads — fleet timing must not perturb the serve loop's virtual clock):
+
+    healthy ── miss a beat ──▶ suspect ── `heartbeat_timeout` misses ──▶ down
+       ▲                                                                  │
+       └── recovering ◀── device beats again / journal replay ◀───────────┘
+
+When the authority rank goes DOWN the group FAILS OVER: the lowest
+available rank becomes authority at its own (possibly stale, ≤ sync_lag
+behind) epoch — answers degrade to bounded staleness instead of erroring,
+with the exact epoch gap stamped on every response (`Response.staleness`).
+The new authority catches the remaining lag up at ``catchup_per_tick``
+epochs per tick and only then accepts fresh commits.  When rank 0's device
+returns it is RE-ADMITTED by journal replay (bit-identical to never having
+failed) and the group fails back.  If no rank is available the group
+reports a total outage and the serve loop queues instead of answering.
+
+`FleetServeLoop` wraps `PipelinedServeLoop` with the group: same batching,
+admission and pipelining, plus the per-tick health step, authority
+tracking, commit gating during catch-up, and staleness accounting.  With
+no faults injected the group never changes state and the response stream
+is BIT-IDENTICAL to a plain `PipelinedServeLoop` on the same index
+(regression-asserted in tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.distributed import collectives
+from repro.fleet import recovery
+from repro.fleet.retry import DEFAULT_POLICY
+from repro.serve.engine import PipelinedServeLoop
+from repro.serve.epochs import ShadowCommitter
+from repro.update.live import LiveIndex
+
+#: Health states (registered telemetry enums in repro.obs.scrub).
+HEALTHY = "healthy"
+SUSPECT = "suspect"
+DOWN = "down"
+RECOVERING = "recovering"
+
+
+@dataclasses.dataclass
+class ShardHost:
+    """One replica rank: a full copy of the live index + its history."""
+    rank: int
+    live: LiveIndex
+    readmissions: int = 0
+
+
+class ReplicaGroup:
+    """R replica ranks over disjoint device rows, with failover/failback.
+
+    ``ranks`` must start bit-identical (same seeded build, or deepcopies);
+    ``heartbeat_timeout`` is missed beats before a device counts as DOWN
+    (the detection delay), ``sync_lag`` the follower freshness bound, and
+    ``catchup_per_tick`` the failover catch-up rate.  Journals model
+    durable per-host storage: they survive the host's device being down,
+    which is what makes journal-replay recovery possible.
+    """
+
+    def __init__(self, ranks: list[LiveIndex], *, n_shards: int = 4,
+                 heartbeat_timeout: int = 2, sync_lag: int = 2,
+                 catchup_per_tick: int = 1, faults=None, obs=None):
+        assert ranks, "a replica group needs at least one rank"
+        self.hosts = [ShardHost(rank=r, live=live)
+                      for r, live in enumerate(ranks)]
+        self.n_replicas = len(ranks)
+        self.n_shards = n_shards
+        self.n_devices = self.n_replicas * n_shards
+        # (R, S) logical device grid: rank-major, matching the disjoint
+        # per-rank meshes of launch.mesh.make_replica_meshes
+        self.placement = np.arange(self.n_devices).reshape(
+            self.n_replicas, n_shards)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.sync_lag = sync_lag
+        self.catchup_per_tick = max(1, catchup_per_tick)
+        self.faults = faults
+        self.obs = obs
+        self.authority_rank = 0
+        self.outage = False
+        self.ticks = 0
+        self.failovers = 0
+        self.failbacks = 0
+        # failover latency in ticks: last injected loss vs the failover it
+        # triggered (benchmarks convert via the measured tick duration)
+        self.last_loss_tick = -1
+        self.last_failover_tick = -1
+        self.replay_reports: list[recovery.ReplayReport] = []
+        self._last_beat = {d: 0 for d in range(self.n_devices)}
+        self._down_until = {d: 0 for d in range(self.n_devices)}
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def build(cls, texts, embeddings, *, n_replicas: int = 2,
+              n_shards: int = 4, meshes=None, group_kwargs: dict | None = None,
+              **build_kwargs) -> "ReplicaGroup":
+        """Build rank 0 and replicate it R ways (identical by construction).
+
+        ``meshes`` (from `launch.mesh.make_replica_meshes`) builds each
+        rank THROUGH its own disjoint sub-mesh — the 8-fake-device path;
+        without meshes, ranks are deepcopies of one seeded build (exactly
+        what a deterministic rebuild on another host produces, minus the
+        wall-clock).  Remaining kwargs forward to `LiveIndex.build`.
+        """
+        if meshes is not None:
+            assert len(meshes) == n_replicas, (len(meshes), n_replicas)
+            ranks = [LiveIndex.build(texts, embeddings, mesh=m,
+                                     **build_kwargs) for m in meshes]
+        else:
+            first = LiveIndex.build(texts, embeddings, **build_kwargs)
+            ranks = [first] + [copy.deepcopy(first)
+                               for _ in range(n_replicas - 1)]
+        return cls(ranks, n_shards=n_shards, **(group_kwargs or {}))
+
+    @classmethod
+    def from_live(cls, live: LiveIndex, *, n_replicas: int = 2,
+                  **kwargs) -> "ReplicaGroup":
+        """Wrap an existing LiveIndex as rank 0, deepcopying the followers."""
+        ranks = [live] + [copy.deepcopy(live) for _ in range(n_replicas - 1)]
+        return cls(ranks, **kwargs)
+
+    def attach(self, *, obs, faults):
+        """Adopt the serve loop's obs handle and arm the fault injector.
+
+        The commit-fail and chain-corruption sites follow the AUTHORITY'S
+        live index (foreground commits and client downloads go there);
+        follower replays never see injected faults.
+        """
+        self.obs = obs
+        self.faults = faults
+        if faults is not None:
+            live = self.authority.live
+            live.faults = faults
+            live.epochs.faults = faults
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def authority(self) -> ShardHost:
+        """The rank currently taking commits and serving answers."""
+        return self.hosts[self.authority_rank]
+
+    def head_epoch(self) -> int:
+        """The most advanced epoch any rank has published (the fleet head)."""
+        return max(h.live.epoch for h in self.hosts)
+
+    @property
+    def catching_up(self) -> bool:
+        """True while the authority trails the fleet head (post-failover)."""
+        return self.authority.live.epoch < self.head_epoch()
+
+    def device_state(self, dev: int) -> str:
+        """healthy | suspect | down for one logical device."""
+        missed = self.ticks - self._last_beat[dev]
+        if missed >= self.heartbeat_timeout:
+            return DOWN
+        return SUSPECT if missed > 0 else HEALTHY
+
+    def rank_state(self, rank: int) -> str:
+        """Aggregate health of one replica rank (worst device + lag)."""
+        states = [self.device_state(int(d)) for d in self.placement[rank]]
+        if DOWN in states:
+            return DOWN
+        if SUSPECT in states:
+            return SUSPECT
+        if self.hosts[rank].live.epoch < self.head_epoch():
+            return RECOVERING
+        return HEALTHY
+
+    def rank_available(self, rank: int) -> bool:
+        """True when every device of `rank`'s row answers heartbeats."""
+        return all(self.device_state(int(d)) != DOWN
+                   for d in self.placement[rank])
+
+    # -- the health tick -----------------------------------------------------
+
+    def tick(self):
+        """One fleet health step: faults → heartbeats → authority → sync.
+
+        Pure counter arithmetic — NO clock reads, spans or instants on the
+        un-faulted path, so wrapping a serve loop in a fleet changes
+        nothing about its virtual-time behaviour until a fault fires.
+        """
+        self.ticks += 1
+        t = self.ticks
+        for dev, down_ticks in collectives.row_shard_health_check(
+                self.faults, self.n_devices):
+            self._down_until[dev] = max(self._down_until[dev], t + down_ticks)
+            self.last_loss_tick = t
+            if self.obs is not None:
+                self.obs.counter("fleet.shard_loss").inc()
+        for dev in range(self.n_devices):
+            if self._down_until[dev] <= t:
+                self._last_beat[dev] = t
+
+        if not self.rank_available(self.authority_rank):
+            target = next((r for r in range(self.n_replicas)
+                           if self.rank_available(r)), None)
+            if target is None:
+                if not self.outage and self.obs is not None:
+                    self.obs.counter("fleet.outages").inc()
+                self.outage = True
+            else:
+                self.outage = False
+                self._set_authority(target, reason="failover")
+        else:
+            self.outage = False
+            if self.authority_rank != 0 and self.rank_available(0):
+                self._readmit(0)
+                self._set_authority(0, reason="failback")
+
+        self._catch_up()
+        self._sync_followers()
+
+    def _set_authority(self, target: int, *, reason: str):
+        """Move the write/serve authority (and the armed fault sites)."""
+        old = self.authority.live
+        new = self.hosts[target].live
+        if self.faults is not None:
+            old.faults = None
+            old.epochs.faults = None
+            new.faults = self.faults
+            new.epochs.faults = self.faults
+        self.authority_rank = target
+        if reason == "failover":
+            self.failovers += 1
+            self.last_failover_tick = self.ticks
+        else:
+            self.failbacks += 1
+        if self.obs is not None:
+            self.obs.counter(f"fleet.{reason}").inc()
+
+    def _readmit(self, rank: int):
+        """Journal-replay a returned rank back to the head (fleet.recovery)."""
+        host = self.hosts[rank]
+        report = recovery.readmit(host.live, self.authority.live.journal,
+                                  obs=self.obs)
+        host.readmissions += 1
+        self.replay_reports.append(report)
+
+    def _catch_up(self):
+        """Advance a stale authority toward the head, bounded per tick.
+
+        The replay source is whichever rank holds the longest journal (the
+        pre-failover authority's journal survives on durable storage even
+        while its device is down).  Serving continues at the authority's
+        epoch throughout — bounded staleness, not downtime.
+        """
+        auth = self.authority.live
+        src = max(self.hosts, key=lambda h: h.live.epoch).live
+        if auth.epoch >= src.epoch:
+            return
+        batches = recovery.epoch_batches(src.journal, auth.epoch)
+        recovery.replay_into(auth, batches[:self.catchup_per_tick],
+                             obs=self.obs)
+
+    def _sync_followers(self):
+        """Keep available followers within `sync_lag` of the authority."""
+        auth = self.authority.live
+        for r, host in enumerate(self.hosts):
+            if r == self.authority_rank or not self.rank_available(r):
+                continue
+            behind = auth.epoch - host.live.epoch
+            if behind > self.sync_lag:
+                batches = recovery.epoch_batches(auth.journal,
+                                                 host.live.epoch)
+                recovery.replay_into(host.live,
+                                     batches[:behind - self.sync_lag])
+
+
+class FleetServeLoop(PipelinedServeLoop):
+    """The pipelined engine over a replica group: serving that survives.
+
+    Identical batching/admission/pipelining; each tick additionally runs
+    the group's health step, follows the authority pointer (rebinding the
+    shadow committer on failover/failback), gates commits while the
+    authority is catching up, and stamps `Response.staleness` with the
+    exact epoch gap when answers are served behind the fleet head.  During
+    a total outage the loop queues instead of answering (requests age and
+    either shed, fail, or serve after recovery).
+    """
+
+    def __init__(self, group: ReplicaGroup, *, depth: int = 2,
+                 donate: bool = True, retry=DEFAULT_POLICY, faults=None,
+                 **kwargs):
+        self._donate = donate
+        self._stale_fifo: deque = deque()
+        super().__init__(group.authority.live, depth=depth, donate=donate,
+                         retry=retry, faults=faults, **kwargs)
+        self.group = group
+        group.attach(obs=self.obs, faults=faults)
+
+    def _follow_authority(self):
+        """Rebind live/system/shadow to the group's current authority."""
+        live = self.group.authority.live
+        if self.live is not live:
+            self.live = live
+            self.system = live.system
+            self._shadow = ShadowCommitter(live, donate=self._donate)
+            live.set_obs(self.obs)
+
+    def _commit_mutations(self):
+        # A catching-up (or absent) authority takes no fresh commits:
+        # freshness degrades within the staleness bound instead of forking
+        # epoch history across ranks.
+        if self.group.outage or self.group.catching_up:
+            return None
+        return super()._commit_mutations()
+
+    def _plan_group(self, system, kind, reqs, kq):
+        # Exact staleness is a dispatch-time fact: how far the serving
+        # authority trailed the fleet head when this batch was encoded
+        # (0 except during failover catch-up).  Batches retire FIFO, so a
+        # deque pairs each gap with its `_record` call.
+        self._stale_fifo.append(
+            self.group.head_epoch() - self.group.authority.live.epoch)
+        return super()._plan_group(system, kind, reqs, kq)
+
+    def _record(self, reqs, results, epoch, t_done, timing):
+        super()._record(reqs, results, epoch, t_done, timing)
+        staleness = self._stale_fifo.popleft() if self._stale_fifo else 0
+        if staleness > 0:
+            for resp in self.responses[-len(reqs):]:
+                resp.staleness = staleness
+            self.obs.counter("fleet.stale_served").inc(len(reqs))
+            self.obs.histogram("fleet.staleness",
+                               bounds=(1, 2, 4, 8, 16)).record(staleness)
+
+    def tick(self, force: bool = False) -> int:
+        self.group.tick()
+        self._follow_authority()
+        if self.group.outage:
+            # no rank can answer: requests keep queueing (and completed
+            # batches keep retiring) until a device returns
+            self._tick_no += 1
+            self._retire(0)
+            return 0
+        return super().tick(force)

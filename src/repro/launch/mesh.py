@@ -18,3 +18,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (possibly fake) local devices exist."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_replica_meshes(n_replicas: int, n_shards: int, devices=None):
+    """Per-rank row-shard meshes over DISJOINT device sets.
+
+    Rank r of the replica fleet gets devices [r·S, (r+1)·S) as its own
+    ("chunks",) mesh — the same axis convention the sharded build uses —
+    so one lost device takes out exactly one rank's shard cell and never
+    touches the sibling replica (the placement invariant
+    `repro.fleet.replica` fails over on).  Requires R·S ≤ len(devices).
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    assert n_replicas * n_shards <= len(devices), (
+        n_replicas, n_shards, len(devices))
+    return [jax.make_mesh((n_shards,), ("chunks",),
+                          devices=devices[r * n_shards:(r + 1) * n_shards])
+            for r in range(n_replicas)]

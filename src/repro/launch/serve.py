@@ -32,10 +32,12 @@ def main():  # pragma: no cover - exercised by examples/tests
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--deadline-ms", type=float, default=50.0)
-    ap.add_argument("--engine", choices=("sync", "pipelined"),
+    ap.add_argument("--engine", choices=("sync", "pipelined", "fleet"),
                     default="pipelined",
                     help="blocking reference loop vs plan/dispatch/complete "
-                         "pipeline (bit-identical responses)")
+                         "pipeline (bit-identical responses); `fleet` wraps "
+                         "the pipelined engine in a replica group with "
+                         "failover + journal-replay recovery (docs/fleet.md)")
     ap.add_argument("--depth", type=int, default=2,
                     help="pipelined engine: max batches in flight")
     ap.add_argument("--mutate-every", type=int, default=0,
@@ -52,6 +54,18 @@ def main():  # pragma: no cover - exercised by examples/tests
                          "placed shard-by-shard (docs/architecture.md), "
                          "then served through the zero-collective answer "
                          "path — results bit-identical either way")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet engine: replica ranks (R full copies of "
+                         "the index on disjoint device rows)")
+    ap.add_argument("--shard-loss", metavar="TICK:DEV:TICKS", default=None,
+                    help="fleet engine: inject one shard loss, e.g. "
+                         "'8:0:16' = device 0 down for 16 fleet ticks "
+                         "starting at tick 8 (exercises failover + "
+                         "journal-replay failback)")
+    ap.add_argument("--chaos", type=int, metavar="SEED", default=None,
+                    help="fleet engine: inject a seeded random fault plan "
+                         "(shard loss, answer drops/delays, commit "
+                         "failures, chain corruption)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="export a Chrome-trace (chrome://tracing / "
                          "Perfetto) of the run's spans to this path; "
@@ -82,9 +96,26 @@ def main():  # pragma: no cover - exercised by examples/tests
     obs = Obs(trace=args.trace is not None)
     loop_kw = dict(max_batch=args.max_batch, deadline_ms=args.deadline_ms,
                    obs=obs)
-    if args.engine == "pipelined":
+    if args.engine in ("pipelined", "fleet"):
         loop_kw["depth"] = args.depth
-    if args.mutate_every > 0:
+    group = None
+    if args.engine == "fleet":
+        from repro.fleet import FaultPlan, FleetServeLoop, ReplicaGroup
+        faults = None
+        if args.shard_loss is not None:
+            at, dev, down = (int(x) for x in args.shard_loss.split(":"))
+            faults = FaultPlan.single_shard_loss(
+                at_tick=at, device=dev, down_ticks=down).compile()
+        elif args.chaos is not None:
+            faults = FaultPlan.random(
+                args.chaos, n_events=6, horizon=max(args.requests // 2, 8),
+                n_devices=args.replicas * 4).compile()
+        live = LiveIndex.build(corp.texts, corp.embeddings,
+                               n_clusters=24, impl="xla", mesh=mesh)
+        group = ReplicaGroup.from_live(live, n_replicas=args.replicas,
+                                       n_shards=4)
+        loop = FleetServeLoop(group, faults=faults, **loop_kw)
+    elif args.mutate_every > 0:
         live = LiveIndex.build(corp.texts, corp.embeddings,
                                n_clusters=24, impl="xla", mesh=mesh)
         loop = loop_cls(live, **loop_kw)
@@ -120,6 +151,13 @@ def main():  # pragma: no cover - exercised by examples/tests
           f"{np.percentile(lat, 99):.2f}s"
           + (f"; epoch {loop.epoch}; stale retries {loop.stale_retries}"
              if live is not None else ""))
+    if group is not None:
+        stale = sum(r.staleness > 0 for r in loop.responses)
+        print(f"fleet: authority rank {group.authority_rank}; "
+              f"{group.failovers} failover(s), {group.failbacks} "
+              f"failback(s), {loop.failed_requests} failed, "
+              f"{stale} served stale, "
+              f"{len(group.replay_reports)} journal replay(s)")
     if args.trace is not None:
         from repro.obs import span_coverage
         obs.export_chrome(args.trace)

@@ -60,10 +60,12 @@ def register_enum(*values: str) -> None:
 # these can encode a query, a probe pattern, or a plaintext.
 register_enum(
     "sync", "pipelined",            # serve engines
-    "served", "shed",               # request outcomes (traffic.slo)
+    "served", "shed", "failed",     # request outcomes (traffic.slo)
     "delta", "full",                # commit / hint-patch kinds
     "xla", "pallas", "auto",        # kernel impl dispatch
     "query", "lookup",              # request kinds (serve/traffic)
+    "healthy", "suspect", "down",   # fleet device/replica health states
+    "recovering",                   # (repro.fleet.replica)
 )
 
 

@@ -33,6 +33,7 @@ pipelining moves work in time, never across an epoch boundary.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from collections import deque
 from typing import Callable, Iterable
@@ -40,6 +41,8 @@ from typing import Callable, Iterable
 import jax
 import numpy as np
 
+from repro.fleet.faults import InjectedCommitFault
+from repro.fleet.retry import DEFAULT_POLICY, RetryPolicy
 from repro.obs import Obs
 from repro.serve.epochs import ShadowCommitter
 
@@ -82,6 +85,8 @@ class Response:
     retries: int = 0
     t_arrival: float = 0.0               # copied from the request
     timing: BatchTiming | None = None    # its batch's latency components
+    failed: bool = False                 # terminal: retry budget/deadline hit
+    staleness: int = 0                   # epochs behind the fleet head (failover)
 
 
 class DeadlineBatcher:
@@ -173,7 +178,9 @@ class PIRServeLoop:
     def __init__(self, system, *, max_batch: int = 64,
                  deadline_ms: float = 20.0,
                  clock: Callable[[], float] = time.perf_counter,
-                 live=None, seed: int = 0, obs: Obs | None = None):
+                 live=None, seed: int = 0, obs: Obs | None = None,
+                 retry: RetryPolicy | None = DEFAULT_POLICY,
+                 faults=None):
         self.live = live if live is not None else (
             system if hasattr(system, "epochs") else None)
         self.system = system if self.live is None else self.live.system
@@ -190,6 +197,31 @@ class PIRServeLoop:
         self.responses: list[Response] = []
         self.mutations: deque = deque()
         self.stale_retries = 0
+        # Bounded retry: every re-admission (stale reject, dropped answer)
+        # charges the request's budget; exhaustion or a blown deadline
+        # yields a TERMINAL failed response instead of another requeue.
+        # retry=None restores the historical unbounded behaviour.
+        self.retry = retry
+        self.failed_requests = 0
+        # Fault-injection hook (repro.fleet.faults.FaultInjector): guards
+        # the answer drop/delay sites post-admission, and arms the wrapped
+        # live index's commit-stage and hint-chain sites with the SAME
+        # injector (one invocation-counter space per run).  None (default)
+        # keeps the tick fault-free with zero extra clock reads.
+        self.faults = faults
+        if faults is not None and self.live is not None:
+            self.live.faults = faults
+            self.live.epochs.faults = faults
+        self._backoff: list = []      # (ready_t, seq, Request) min-heap
+        self._delayed: list = []      # (ready_t, seq, Request) min-heap
+        self._seq = 0                 # heap tiebreak = admission order
+        self._tick_no = 0
+        # Commit-failure retry state: an injected stage failure leaves the
+        # journal batch pending; the commit is retried with exponential
+        # tick backoff instead of being lost or hammered.
+        self._commit_retry = False
+        self._commit_attempts = 0
+        self._commit_not_before = 0   # tick number gating the next attempt
         # Admission hook: when set, pending mutations fold into an epoch
         # only on ticks where commit_gate() is True — the controller defers
         # commits under backlog so queued requests don't go stale mid-wait
@@ -234,34 +266,158 @@ class PIRServeLoop:
         self.mutations.append(mut)
 
     def _commit_mutations(self):
-        """Fold queued mutations into one epoch between query batches."""
-        if self.live is None or not self.mutations:
+        """Fold queued mutations into one epoch between query batches.
+
+        An injected stage failure (`InjectedCommitFault`) leaves the batch
+        pending in the journal; the commit retries on a later tick under
+        exponential tick backoff (`_commit_failed`) — bounded by the fault
+        plan, never dropped.
+        """
+        if self.live is None or not (self.mutations or self._commit_retry):
             return None
         if self.commit_gate is not None and not self.commit_gate():
             return None                  # deferred: serve stale-epoch answers
+        if self._tick_no < self._commit_not_before:
+            return None                  # backing off after a failed commit
         while self.mutations:
             self.live.journal.append(self.mutations.popleft())
-        return self.live.commit()
+        try:
+            patch = self.live.commit()
+        except InjectedCommitFault:
+            self._commit_failed()
+            return None
+        self._commit_retry = False
+        self._commit_attempts = 0
+        return patch
+
+    def _commit_failed(self):
+        """Record one failed commit attempt and arm the tick backoff."""
+        self._commit_attempts += 1
+        self._commit_retry = True
+        self._commit_not_before = (self._tick_no
+                                   + min(2 ** (self._commit_attempts - 1), 16))
+        self.obs.counter("fleet.commit_failures").inc()
 
     # -- policy core shared by both engines ----------------------------------
 
-    def _admit(self, batch: list[Request], cur: int) -> list[Request]:
+    def _admit(self, batch: list[Request], cur: int,
+               now: float) -> list[Request]:
         """Epoch admission control: reject-and-requeue stale requests.
 
         A query encrypted against a superseded hint would decode garbage,
         so it is rejected; the client syncs its cached hint
         (HintCache.sync) and re-encrypts against the head.  Retried
-        requests go back to the queue head in their original FIFO order.
+        requests go back to the queue head in their original FIFO order —
+        after their backoff, if the policy sets one — UNLESS the retry
+        charge exhausts their budget or deadline, which ends them with a
+        terminal failed response (no more ping-pong under epoch churn).
         """
         fresh = [r for r in batch if r.epoch == cur]
         stale = [r for r in batch if r.epoch != cur]
-        for r in stale:
-            self.stale_retries += 1
-            r.epoch = cur
-            r.retries += 1
         if stale:
+            self.stale_retries += len(stale)
             self.obs.counter("serve.stale_retries").inc(len(stale))
-        self.batcher.requeue_front(stale)
+            for r in stale:
+                r.retries += 1
+            kept, give_up = self._split_budget(stale, now)
+            for r in kept:
+                r.epoch = cur
+            self._requeue_retries(kept, now)
+            self._fail(give_up, cur, now)
+        return fresh
+
+    def _split_budget(self, reqs: list[Request],
+                      now: float) -> tuple[list[Request], list[Request]]:
+        """(still in budget, out of budget) under the retry policy."""
+        if self.retry is None:
+            return reqs, []
+        kept, give_up = [], []
+        for r in reqs:
+            if (self.retry.exhausted(r.retries)
+                    or self.retry.past_deadline(r.t_arrival, now)):
+                give_up.append(r)
+            else:
+                kept.append(r)
+        return kept, give_up
+
+    def _requeue_retries(self, reqs: list[Request], now: float):
+        """Requeue retried requests, honouring the policy's backoff."""
+        if not reqs:
+            return
+        if self.retry is None or self.retry.backoff_base_ms <= 0:
+            self.batcher.requeue_front(reqs)
+            return
+        immediate = []
+        for r in reqs:
+            d = self.retry.backoff_s(r.rid, r.retries)
+            if d <= 0:
+                immediate.append(r)
+            else:
+                self._seq += 1
+                heapq.heappush(self._backoff, (now + d, self._seq, r))
+        if immediate:
+            self.batcher.requeue_front(immediate)
+
+    def _fail(self, reqs: list[Request], epoch: int, now: float):
+        """Terminal failure: emit failed responses (never silence)."""
+        if not reqs:
+            return
+        self.failed_requests += len(reqs)
+        self.obs.counter("serve.failed").inc(len(reqs))
+        hist = self.obs.histogram("serve.retries",
+                                  bounds=(1, 2, 4, 8, 16, 32, 64))
+        for r in reqs:
+            hist.record(r.retries)
+            self.responses.append(Response(
+                r.rid, [], now, 0, epoch=epoch, retries=r.retries,
+                t_arrival=r.t_arrival, failed=True))
+
+    def _release_held(self, now: float, force: bool = False):
+        """Move matured backoff/delayed requests back to the queue head.
+
+        Pure heap pops against the tick's existing `now` read — with empty
+        heaps (the no-fault, no-backoff path) this is two truthiness
+        checks, so the response stream stays bit-identical.  Maturity is
+        respected even during drain (the clock keeps advancing there, so
+        held requests always mature); `force` only matters to callers via
+        the batcher-ready bypass, not here.
+        """
+        del force
+        due = []
+        for heap in (self._delayed, self._backoff):
+            while heap and heap[0][0] <= now:
+                due.append(heapq.heappop(heap))
+        if due:
+            due.sort(key=lambda e: e[1])   # original admission order
+            self.batcher.requeue_front([r for _, _, r in due])
+
+    def _inject_answer_faults(self, fresh: list[Request], cur: int,
+                              now: float) -> list[Request]:
+        """Guard the answer drop/delay sites on the just-cut batch.
+
+        A DROP loses the whole batch pre-dispatch: each request is charged
+        one retry and re-queued (or terminally failed).  A DELAY holds the
+        batch in the delayed heap for the event's `delay_s` of loop-clock
+        time — late, not lost, so no retry is charged.
+        """
+        if self.faults is None or not fresh:
+            return fresh
+        if self.faults.fire("serve.answer.drop"):
+            self.obs.counter("fleet.answer_drops").inc(len(fresh))
+            for r in fresh:
+                r.retries += 1
+            kept, give_up = self._split_budget(fresh, now)
+            self._requeue_retries(kept, now)
+            self._fail(give_up, cur, now)
+            return []
+        delay = self.faults.fire("serve.answer.delay")
+        if delay:
+            self.obs.counter("fleet.answer_delays").inc(len(fresh))
+            ready = now + max(ev.delay_s for ev in delay)
+            for r in fresh:
+                self._seq += 1
+                heapq.heappush(self._delayed, (ready, self._seq, r))
+            return []
         return fresh
 
     def _probe_groups(self, fresh: list[Request]
@@ -308,15 +464,18 @@ class PIRServeLoop:
         complete (decode + re-rank) are nested spans whose boundaries ARE
         the `BatchTiming` components — one timeline, two consumers.
         """
+        self._tick_no += 1
         with self.obs.span("serve.tick", engine=self.ENGINE) as tick_sp:
             self.obs.gauge("serve.queue_depth").set(self.batcher.depth)
             self._commit_mutations()
             now = self.clock()
+            self._release_held(now, force=force)
             if (not self.batcher.ready(now)
                     and not (force and self.batcher.queue)):
                 return 0
             cur = self.epoch
-            fresh = self._admit(self.batcher.cut(), cur)
+            fresh = self._admit(self.batcher.cut(), cur, now)
+            fresh = self._inject_answer_faults(fresh, cur, now)
             if not fresh:
                 return 0
             tick_sp.set(batch=len(fresh), epoch=cur)
@@ -349,8 +508,11 @@ class PIRServeLoop:
                            bounds=(1, 2, 4, 8, 16, 32, 64, 128)
                            ).record(len(reqs))
         lat_hist = self.obs.histogram("serve.latency_ms")
+        retry_hist = self.obs.histogram("serve.retries",
+                                        bounds=(1, 2, 4, 8, 16, 32, 64))
         for req, top in zip(reqs, results):
             lat_hist.record((t_done - req.t_arrival) * 1e3)
+            retry_hist.record(req.retries)
             # batch_size = this group's GEMM width, not the tick total
             self.responses.append(Response(
                 req.rid, top, t_done, len(reqs), epoch=epoch,
@@ -364,7 +526,8 @@ class PIRServeLoop:
         """
         gate, self.commit_gate = self.commit_gate, None
         try:
-            while self.batcher.queue or self.mutations:
+            while (self.batcher.queue or self.mutations
+                   or self._backoff or self._delayed or self._commit_retry):
                 self.tick(force=True)
         finally:
             self.commit_gate = gate
@@ -413,11 +576,20 @@ class PipelinedServeLoop(PIRServeLoop):
         self.depth = max(1, int(depth))
 
     def _commit_mutations(self):
-        if self._shadow is None or not self.mutations:
+        if self._shadow is None or not (self.mutations or self._commit_retry):
             return None
         if self.commit_gate is not None and not self.commit_gate():
             return None                  # deferred: serve stale-epoch answers
-        return self._shadow.commit(self.mutations)
+        if self._tick_no < self._commit_not_before:
+            return None                  # backing off after a failed commit
+        try:
+            patch = self._shadow.commit(self.mutations)
+        except InjectedCommitFault:
+            self._commit_failed()
+            return None
+        self._commit_retry = False
+        self._commit_attempts = 0
+        return patch
 
     def tick(self, force: bool = False) -> int:
         """Plan + dispatch one batch if ready; complete anything past depth.
@@ -430,10 +602,12 @@ class PipelinedServeLoop(PIRServeLoop):
         nesting the trace shows (a complete span parented by a younger
         tick than its plan span — the pipeline overlap made visible).
         """
+        self._tick_no += 1
         with self.obs.span("serve.tick", engine=self.ENGINE) as tick_sp:
             self.obs.gauge("serve.queue_depth").set(self.batcher.depth)
             self._commit_mutations()
             now = self.clock()
+            self._release_held(now, force=force)
             if (not self.batcher.ready(now)
                     and not (force and self.batcher.queue)):
                 # idle tick: nothing to dispatch, so retire EVERYTHING in
@@ -442,7 +616,8 @@ class PipelinedServeLoop(PIRServeLoop):
                 self._retire(0)
                 return 0
             cur = self.epoch
-            fresh = self._admit(self.batcher.cut(), cur)
+            fresh = self._admit(self.batcher.cut(), cur, now)
+            fresh = self._inject_answer_faults(fresh, cur, now)
             if not fresh:
                 return 0
             tick_sp.set(batch=len(fresh), epoch=cur)
@@ -485,7 +660,8 @@ class PipelinedServeLoop(PIRServeLoop):
         """
         gate, self.commit_gate = self.commit_gate, None
         try:
-            while self.batcher.queue or self.mutations:
+            while (self.batcher.queue or self.mutations
+                   or self._backoff or self._delayed or self._commit_retry):
                 self.tick(force=True)
         finally:
             self.commit_gate = gate

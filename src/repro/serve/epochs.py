@@ -63,8 +63,12 @@ class ShadowCommitter:
         """Drain `mutations` into the journal and commit them as one epoch.
 
         Returns the published HintPatch, or None if nothing was pending.
+        A batch can already sit in the journal with the deque empty when a
+        previous attempt failed after draining (injected commit fault) —
+        the retry must still commit it, so the journal's pending watermark
+        is part of the guard.
         """
-        if not mutations:
+        if not mutations and not self.live.journal.pending():
             return None
         while mutations:
             self.live.journal.append(mutations.popleft())

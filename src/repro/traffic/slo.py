@@ -20,6 +20,9 @@ from repro.obs.registry import percentile
 
 SHED = "shed"
 SERVED = "served"
+#: Terminal failure: the request exhausted its retry budget or deadline
+#: (fleet.retry) — distinct from shed (admission dropped it before service).
+FAILED = "failed"
 
 
 @dataclasses.dataclass
@@ -50,8 +53,13 @@ class RequestRecord:
 
     @property
     def latency_ms(self) -> float:
-        """End-to-end latency incl. hint sync; +inf for shed requests."""
-        if self.t_done is None:
+        """End-to-end latency incl. hint sync; +inf unless actually served.
+
+        A failed request HAS a completion timestamp (the tick that gave up
+        on it) but no answer, so like a shed request it counts as an SLO
+        miss rather than contributing a finite latency.
+        """
+        if self.t_done is None or self.outcome != SERVED:
             return float("inf")
         return (self.t_done - self.t_arrival) * 1e3 + self.hint_sync_ms
 
@@ -74,10 +82,12 @@ def summarize(records: list[RequestRecord], *, deadline_ms: float,
     """Fold a run's records into the SLO summary dict the bench emits.
 
     Attainment = fraction of OFFERED requests whose end-to-end latency
-    (queue + service + hint sync) beat `deadline_ms`; shed requests have
-    infinite latency and therefore count against attainment and p99.
+    (queue + service + hint sync) beat `deadline_ms`; shed and failed
+    requests have infinite latency and therefore count against attainment
+    and p99.  served + shed + failed == offered — every offered request
+    lands in exactly one bucket (the fleet invariant the chaos tests pin).
     Component means are over served requests only (a shed request never
-    entered the pipeline, so it has no components to average).
+    entered the pipeline, a failed one never completed it).
     """
     served = [r for r in records if r.outcome == SERVED]
     lat = np.array([r.latency_ms for r in records], np.float64)
@@ -85,6 +95,7 @@ def summarize(records: list[RequestRecord], *, deadline_ms: float,
         "offered": len(records),
         "served": len(served),
         "shed": sum(r.outcome == SHED for r in records),
+        "failed": sum(r.outcome == FAILED for r in records),
         "wall_s": round(wall_s, 4),
         "offered_qps": round(len(records) / wall_s, 2) if wall_s else 0.0,
         "served_qps": round(len(served) / wall_s, 2) if wall_s else 0.0,

@@ -29,6 +29,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.fleet.retry import RetryPolicy
 from repro.traffic import slo
 from repro.traffic.slo import RequestRecord
 
@@ -61,6 +62,15 @@ class TrafficSpec:
     lookup_mix: float = 0.0
     lookup_kappa: int = 8
     lookup_zipf_a: float = 1.2
+    # Retry posture: when `max_retries` is set the driver installs a
+    # `fleet.retry.RetryPolicy` on the loop (budget + optional backoff +
+    # deadline), so requests that keep losing the stale-sync race — or
+    # whose answers a fault plan keeps dropping — end as terminal FAILED
+    # records instead of looping forever.  None keeps the loop's own
+    # policy (the engine default).
+    max_retries: int | None = None
+    retry_backoff_ms: float = 0.0
+    retry_deadline_ms: float | None = None
 
 
 def poisson_arrivals(rng: np.random.Generator, qps: float,
@@ -81,21 +91,44 @@ def poisson_arrivals(rng: np.random.Generator, qps: float,
 
 
 class ClientSession:
-    """A long-lived client: cached-hint epoch + hint-delivery accounting."""
+    """A long-lived client: cached-hint epoch + hint-delivery accounting.
+
+    ``give_ups`` counts requests this session abandoned after the engine's
+    retry budget ran out (its reactive stale-sync loop is BOUNDED: each
+    lost sync race charges the request's retry budget, and exhaustion is a
+    terminal failed request, not another sync).  ``resyncs`` counts
+    corrupt-chain recoveries, each charged as one full hint download.
+    """
 
     def __init__(self, sid: int, epoch: int = 0):
         self.sid = sid
         self.epoch = epoch
         self.bytes_downloaded = 0
         self.syncs = 0
+        self.resyncs = 0
+        self.give_ups = 0
         self.n_requests = 0
 
     def sync_to(self, log, until: int | None = None) -> int:
-        """Download the minimal chain to `until` (default head); rtn bytes."""
+        """Download the minimal chain to `until` (default head); rtn bytes.
+
+        Downloads go through `EpochLog.download_chain` (the wire copy), so
+        an injected corruption lands here too: a checksum mismatch charges
+        the wasted chain bytes PLUS one full re-sync (`EpochLog.
+        full_fetch`) — the session's accounting matches what a real
+        `HintCache.sync` would pay.
+        """
         goal = log.epoch if until is None else until
         if goal <= self.epoch:
             return 0
-        nbytes = log.chain_bytes(self.epoch, goal)
+        chain = (log.download_chain(self.epoch, goal)
+                 if hasattr(log, "download_chain")
+                 else log.chain_since(self.epoch, goal))
+        nbytes = sum(p.wire_bytes for p in chain)
+        if not all(p.verify() for p in chain):
+            assert log.full_fetch is not None, "corrupt chain, no fallback"
+            nbytes += log.full_fetch(self.epoch).wire_bytes
+            self.resyncs += 1
         self.epoch = goal
         self.bytes_downloaded += nbytes
         self.syncs += 1
@@ -112,6 +145,8 @@ class TrafficResult:
     commits: int = 0
     controller: dict | None = None
     session_sync_bytes: int = 0
+    failed: int = 0
+    session_resyncs: int = 0
 
     def summary(self, deadline_ms: float) -> dict:
         """SLO summary dict (see slo.summarize) plus run-level counters."""
@@ -121,6 +156,7 @@ class TrafficResult:
         out["stale_retries"] = self.stale_retries
         out["commits"] = self.commits
         out["session_sync_bytes"] = self.session_sync_bytes
+        out["session_resyncs"] = self.session_resyncs
         if self.controller is not None:
             out["admission"] = self.controller
         return out
@@ -145,6 +181,11 @@ class OpenLoopDriver:
         self.controller = controller
         if controller is not None:
             controller.attach(loop)
+        if spec.max_retries is not None:
+            loop.retry = RetryPolicy(max_retries=spec.max_retries,
+                                     backoff_base_ms=spec.retry_backoff_ms,
+                                     deadline_ms=spec.retry_deadline_ms,
+                                     seed=spec.seed)
         self.clock = loop.clock
         self.rng = np.random.default_rng(spec.seed)
         self.sessions = [ClientSession(i, epoch=loop.epoch)
@@ -203,6 +244,14 @@ class OpenLoopDriver:
             rec.t_done = r.t_done
             rec.epoch = r.epoch
             rec.retries = r.retries
+            if getattr(r, "failed", False):
+                # terminal: the engine gave up after the retry budget —
+                # the session abandons the request (no hint sync charged;
+                # it never got an answer to decode)
+                rec.outcome = slo.FAILED
+                sess.give_ups += 1
+                sess.n_requests += 1
+                continue
             if r.retries and r.epoch > submit_epoch:
                 # the engine stale-rejected this query: the client synced
                 # its hint to the serving epoch and re-encrypted — charge
@@ -332,4 +381,6 @@ class OpenLoopDriver:
             controller=(self.controller.stats()
                         if self.controller is not None else None),
             session_sync_bytes=sum(s.bytes_downloaded
-                                   for s in self.sessions))
+                                   for s in self.sessions),
+            failed=sum(r.outcome == slo.FAILED for r in recs),
+            session_resyncs=sum(s.resyncs for s in self.sessions))

@@ -47,6 +47,7 @@ new epoch everywhere.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import jax.numpy as jnp
 import numpy as np
@@ -67,20 +68,55 @@ class StaleEpochError(RuntimeError):
         self.want = want
 
 
+class CorruptPatchError(RuntimeError):
+    """A downloaded patch failed its integrity checksum and the log offers
+    no full-hint fallback (`EpochLog.full_fetch`) to re-sync from."""
+
+
 @dataclasses.dataclass(frozen=True)
 class HintPatch:
-    """Transforms the epoch-`from_epoch` hint into the `to_epoch` hint."""
+    """Transforms the epoch-`from_epoch` hint into the `to_epoch` hint.
+
+    ``crc`` is the wire-integrity checksum over the patch's payload and
+    epoch span, computed at publish time (`sealed`); a client verifies it
+    at decode time so a corrupt or truncated download is detected instead
+    of silently patching the cached hint into garbage.  Unsealed patches
+    (``crc=None`` — intermediate compositions, hand-built test patches)
+    verify trivially: the checksum protects the DELIVERY path, not
+    in-process arithmetic.
+    """
     from_epoch: int
     to_epoch: int
     cols: np.ndarray | None = None        # (J,) int64 touched cluster ids
     delta: np.ndarray | None = None       # (r, J) int16: D_new − D_old rows <r
     full_hint: np.ndarray | None = None   # (m, k) u32 — rebuild epochs only
     cfg: pir.PIRConfig | None = None      # new config on rebuild epochs
+    crc: int | None = None                # payload checksum (None = unsealed)
 
     @property
     def is_full(self) -> bool:
         """True for rebuild epochs: the patch carries a whole (m, k) hint."""
         return self.full_hint is not None
+
+    def payload_crc(self) -> int:
+        """CRC-32 over the epoch span and payload arrays (wire contents)."""
+        hdr = np.asarray([self.from_epoch, self.to_epoch], np.uint32)
+        acc = zlib.crc32(hdr.tobytes())
+        if self.is_full:
+            acc = zlib.crc32(np.ascontiguousarray(self.full_hint).tobytes(),
+                             acc)
+        else:
+            acc = zlib.crc32(np.ascontiguousarray(self.cols).tobytes(), acc)
+            acc = zlib.crc32(np.ascontiguousarray(self.delta).tobytes(), acc)
+        return acc
+
+    def sealed(self) -> "HintPatch":
+        """This patch with its checksum stamped (idempotent)."""
+        return dataclasses.replace(self, crc=self.payload_crc())
+
+    def verify(self) -> bool:
+        """True iff the payload matches the stamped checksum (or unsealed)."""
+        return self.crc is None or self.crc == self.payload_crc()
 
     @property
     def wire_bytes(self) -> int:
@@ -122,7 +158,8 @@ def compose_patches(a: HintPatch, b: HintPatch) -> HintPatch:
     """
     assert a.to_epoch == b.from_epoch, (a.to_epoch, b.from_epoch)
     if b.is_full:
-        return dataclasses.replace(b, from_epoch=a.from_epoch)
+        # crc is span-dependent: the widened composition must re-seal
+        return dataclasses.replace(b, from_epoch=a.from_epoch, crc=None)
     if a.is_full:
         assert a.cfg is not None, "full patch needs cfg to absorb deltas"
         a_mat = lwe.gen_public_matrix(a.cfg.a_seed, a.cfg.n, a.cfg.params.k)
@@ -169,23 +206,34 @@ class EpochLog:
         # Optional observability handle (repro.obs.Obs); LiveIndex threads
         # its own through so compaction events land in the serving trace.
         self.obs = None
+        # Fault-injection hook (repro.fleet.faults.FaultInjector): when set,
+        # `download_chain` guards the "update.hint.chain" site and corrupts
+        # one patch of the served copy when the plan says so.
+        self.faults = None
+        # Full re-sync fallback: callable(from_epoch) -> sealed full
+        # HintPatch to the head.  LiveIndex wires this to its serving hint
+        # so a client that detects a corrupt chain can recover with one
+        # deterministic full download instead of a wrong hint.
+        self.full_fetch = None
 
     def publish(self, patch: HintPatch) -> int:
         """Append the next epoch's patch; returns the new head epoch.
 
-        With compaction enabled, a head landing on a ``compact_every``
-        boundary folds the completed run into its segment here — publish
-        time, not sync time — so every client downloading that span shares
-        one precomputed segment.
+        Patches are SEALED here (integrity checksum stamped) — publication
+        is the wire boundary, so everything `chain_since`/`download_chain`
+        hands out is client-verifiable.  With compaction enabled, a head
+        landing on a ``compact_every`` boundary folds the completed run
+        into its segment here — publish time, not sync time — so every
+        client downloading that span shares one precomputed segment.
         """
         assert patch.from_epoch == self.epoch, (patch.from_epoch, self.epoch)
         assert patch.to_epoch == self.epoch + 1
-        self._patches.append(patch)
+        self._patches.append(patch.sealed())
         self.epoch = patch.to_epoch
         c = self.compact_every
         if c and self.epoch % c == 0:
             lo = self.epoch - c
-            seg = compact_chain(self._patches[lo:self.epoch])
+            seg = compact_chain(self._patches[lo:self.epoch]).sealed()
             self._segments[lo] = seg
             if self.obs is not None:
                 self.obs.counter("epoch.compactions").inc()
@@ -234,6 +282,28 @@ class EpochLog:
         """Exact downlink bytes of `chain_since(epoch, until)` (0 if fresh)."""
         return sum(p.wire_bytes for p in self.chain_since(epoch, until))
 
+    def download_chain(self, epoch: int,
+                       until: int | None = None) -> list[HintPatch]:
+        """`chain_since`, as seen over the WIRE (the fault-injectable copy).
+
+        Every client-side sync path downloads through here.  With a fault
+        injector armed, the "update.hint.chain" site can corrupt one patch
+        of the returned list — a bit flip on a COPY, the log's own storage
+        is untouched — which the client's `HintPatch.verify` catches at
+        decode time.  Unarmed, this IS `chain_since` (same objects, no
+        copies), so the no-fault path stays allocation- and bit-identical.
+        """
+        chain = self.chain_since(epoch, until)
+        if self.faults is not None and chain:
+            due = self.faults.fire("update.hint.chain")
+            if due:
+                i = due[0].device % len(chain)
+                chain = list(chain)
+                chain[i] = _tampered(chain[i])
+                if self.obs is not None:
+                    self.obs.counter("fleet.chain_corruptions").inc()
+        return chain
+
     @property
     def stored_bytes(self) -> int:
         """Server-side storage: raw patches plus compacted segments."""
@@ -244,6 +314,18 @@ class EpochLog:
         """Raise StaleEpochError unless `epoch` is the published head."""
         if epoch != self.epoch:
             raise StaleEpochError(epoch, self.epoch)
+
+
+def _tampered(patch: HintPatch) -> HintPatch:
+    """A transit-corrupted copy of `patch`: one payload bit flipped, the
+    stamped crc kept — exactly what `HintPatch.verify` must catch."""
+    if patch.is_full:
+        full = np.array(patch.full_hint, copy=True)
+        full.flat[0] ^= 1
+        return dataclasses.replace(patch, full_hint=full)
+    delta = np.array(patch.delta, copy=True)
+    delta.flat[0] ^= 1
+    return dataclasses.replace(patch, delta=delta)
 
 
 def _subsume_full(chain: list[HintPatch]) -> list[HintPatch]:
@@ -268,6 +350,7 @@ class HintCache:
         self.cfg = cfg
         self.epoch = epoch
         self.bytes_downloaded = cfg.hint_bytes      # bootstrap download
+        self.resyncs = 0          # corrupt-chain recoveries (full downloads)
         self._a_mat = lwe.gen_public_matrix(cfg.a_seed, cfg.n, cfg.params.k)
 
     def apply(self, patch: HintPatch):
@@ -285,13 +368,35 @@ class HintCache:
     def sync(self, log: EpochLog) -> int:
         """Catch up to the log head; returns bytes downloaded for the sync.
 
-        Downloads the MINIMAL chain (`EpochLog.chain_since`): compacted
+        Downloads the MINIMAL chain (`EpochLog.download_chain`): compacted
         segments where the log has them, raw patches elsewhere.  Applying
         the chain is bit-identical to applying every raw patch — and to a
         fresh full-hint download (tests/test_hint_chains.py).
+
+        Every patch is checksum-verified BEFORE it touches the cached
+        hint; a corrupt or truncated download triggers one deterministic
+        full re-sync (the wasted chain bytes AND the full download are
+        both charged to `bytes_downloaded` — corruption costs downlink,
+        never correctness).
         """
         before = self.bytes_downloaded
-        for patch in log.chain_since(self.epoch):
+        chain = (log.download_chain(self.epoch)
+                 if hasattr(log, "download_chain")
+                 else log.chain_since(self.epoch))
+        if not all(p.verify() for p in chain):
+            self.bytes_downloaded += sum(p.wire_bytes for p in chain)
+            self.resyncs += 1
+            if log.obs is not None:
+                log.obs.counter("fleet.full_resyncs").inc()
+            if getattr(log, "full_fetch", None) is None:
+                raise CorruptPatchError(
+                    f"corrupt patch chain from epoch {self.epoch} and no "
+                    "full-hint fallback on the log")
+            full = log.full_fetch(self.epoch)
+            assert full.is_full and full.verify(), "fallback must be clean"
+            self.apply(full)
+            return self.bytes_downloaded - before
+        for patch in chain:
             if patch.from_epoch != self.epoch and patch.is_full:
                 self.epoch = patch.from_epoch   # full patch subsumes the gap
             self.apply(patch)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chunking, pipeline
+from repro.fleet.faults import InjectedCommitFault
 from repro.kernels import ops
 from repro.obs import DEFAULT_SIZE_BUCKETS, Obs
 from repro.update import journal as journal_lib
@@ -102,6 +103,15 @@ class LiveIndex:
         # set_obs() so commit spans land in the SAME trace as serve ticks.
         self.obs = Obs(trace=False)
         self.epochs.obs = self.obs
+        # Fault-injection hook (repro.fleet.faults.FaultInjector): `stage`
+        # guards the "update.commit.stage" site — an injected failure
+        # raises BEFORE any shadow state is computed, so the pending
+        # journal batch stays intact and the serving epoch never moves.
+        # Recovery replay (repro.fleet.recovery) clears it around replays.
+        self.faults = None
+        # A client that detects a corrupt patch chain recovers by fetching
+        # the CURRENT full hint (one deterministic full re-sync).
+        self.epochs.full_fetch = self._full_patch
 
         ids = (np.arange(len(texts)) if doc_ids is None
                else np.asarray(doc_ids))
@@ -240,6 +250,10 @@ class LiveIndex:
         muts = self.journal.pending()
         if not muts:
             return None
+        if self.faults is not None and self.faults.fire("update.commit.stage"):
+            raise InjectedCommitFault(
+                f"injected stage failure at epoch {self.epochs.epoch} "
+                f"({len(muts)} pending mutations, batch retryable)")
         t0 = time.perf_counter()
         db = self.system.db
         keyed = self.system.keyed
@@ -416,6 +430,13 @@ class LiveIndex:
                          to_epoch=self.epochs.epoch + 1,
                          full_hint=np.asarray(new_system.hint),
                          cfg=new_system.cfg), apply
+
+    def _full_patch(self, from_epoch: int) -> HintPatch:
+        """A sealed full-hint patch `from_epoch` → head (corrupt-chain
+        fallback: costs `cfg.hint_bytes`, same as bootstrap)."""
+        return HintPatch(from_epoch=from_epoch, to_epoch=self.epochs.epoch,
+                         full_hint=np.asarray(self.system.hint),
+                         cfg=self.system.cfg).sealed()
 
     # -- epoch-checked queries ----------------------------------------------
 

@@ -1,0 +1,471 @@
+"""Fault-tolerant fleet serving: the degradation contract, property-tested.
+
+The contract under test (docs/fleet.md): with NO faults injected, a
+`FleetServeLoop` over a replica group is bit-identical to a plain
+`PipelinedServeLoop` — same responses, same payloads, same virtual-clock
+trajectory.  Under injected faults, every degradation is bounded and
+observable: answers degrade to bounded staleness (never wrong payloads),
+retries are budgeted (terminal FAILED, never an unbounded loop), corrupt
+hint chains cost one full re-sync (never a wrong hint), and a recovered
+host is bit-identical to one that never failed (journal-replay recovery).
+
+Chaos properties draw seeded random fault plans × random interleavings;
+the 8-fake-device placement case is slow-marked for CI's multi-device step.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from _mesh_harness import run_sub
+
+from repro.data import corpus as corpus_lib
+from repro.fleet import (FaultEvent, FaultPlan, FleetServeLoop, ReplicaGroup,
+                         RetryPolicy, SITE_ANSWER_DELAY, SITE_ANSWER_DROP,
+                         SITE_CHAIN_CORRUPT, SITE_COMMIT_FAIL,
+                         SITE_SHARD_LOSS, readmit)
+from repro.fleet import recovery
+from repro.serve import PipelinedServeLoop
+from repro.traffic import OpenLoopDriver, TrafficSpec
+from repro.traffic.slo import FAILED, SERVED, SHED
+from repro.update import LiveIndex, journal as journal_lib
+from repro.update.epochs import CorruptPatchError, HintCache
+
+N_DOCS = 120
+EMB = 16
+SYNC_LAG = 2
+
+
+class FakeClock:
+    """Monotone virtual clock advancing a fixed step per reading."""
+
+    def __init__(self, step: float = 1e-4):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+_BASE: dict = {}
+
+
+def _get_base():
+    if not _BASE:
+        corp = corpus_lib.make_corpus(5, N_DOCS, emb_dim=EMB, n_topics=5)
+        live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=5,
+                               impl="xla", kmeans_iters=5, compact_every=2)
+        _BASE["corp"], _BASE["live"] = corp, live
+    return _BASE["corp"], _BASE["live"]
+
+
+def _mutation(i: int, corp):
+    return journal_lib.replace(i % N_DOCS, f"mut {i}".encode(),
+                               corp.embeddings[(i + 1) % N_DOCS])
+
+
+def _signature(loop):
+    return [(r.rid, r.epoch, r.retries, r.batch_size, r.failed,
+             getattr(r, "staleness", 0),
+             tuple((d, t) for d, _, t in r.top)) for r in loop.responses]
+
+
+def _drive(loop, corp, *, n_ops: int = 30, seed: int = 0):
+    """A seeded submit/mutate/tick interleaving, identical across loops."""
+    rng = np.random.default_rng(seed)
+    for i in range(n_ops):
+        loop.submit(i, corp.embeddings[int(rng.integers(N_DOCS))], top_k=3)
+        roll = int(rng.integers(10))
+        if roll < 2:
+            loop.submit_mutation(_mutation(i, corp))
+        if roll >= 7:
+            loop.tick()
+    loop.drain()
+
+
+def _fleet(live, *, faults=None, n_replicas=2, n_shards=4, retry=None,
+           **group_kwargs):
+    group = ReplicaGroup.from_live(copy.deepcopy(live),
+                                   n_replicas=n_replicas, n_shards=n_shards,
+                                   sync_lag=SYNC_LAG, **group_kwargs)
+    kwargs = {} if retry is None else {"retry": retry}
+    loop = FleetServeLoop(group, max_batch=4, deadline_ms=1e9,
+                          clock=FakeClock(), seed=0, depth=2, faults=faults,
+                          **kwargs)
+    return group, loop
+
+
+# ---------------------------------------------------------------------------
+# No-fault bit-identity (the regression that keeps the fleet layer free)
+# ---------------------------------------------------------------------------
+
+def test_no_fault_fleet_identical_to_pipelined():
+    """Fleet wrapper with no faults ≡ plain pipelined loop, bit for bit.
+
+    Clock END TIME is compared too: the fleet tick must not add a single
+    virtual-clock reading on the un-faulted path.
+    """
+    corp, base = _get_base()
+    plain = PipelinedServeLoop(copy.deepcopy(base), max_batch=4,
+                               deadline_ms=1e9, clock=FakeClock(), seed=0,
+                               depth=2)
+    _drive(plain, corp)
+    for faults in (None, FaultPlan.none().compile()):
+        group, fleet = _fleet(base, faults=faults)
+        _drive(fleet, corp)
+        assert _signature(fleet) == _signature(plain)
+        assert fleet.clock.t == plain.clock.t          # same clock reads
+        assert fleet.epoch == plain.epoch
+        assert fleet.stale_retries == plain.stale_retries
+        assert group.failovers == 0 and not group.outage
+        assert all(r.staleness == 0 for r in fleet.responses)
+
+
+def test_group_build_ranks_identical():
+    """from_live/build replicas start bit-identical; placement is disjoint."""
+    corp, base = _get_base()
+    group = ReplicaGroup.from_live(copy.deepcopy(base), n_replicas=2,
+                                   n_shards=4)
+    h0, h1 = group.hosts[0].live, group.hosts[1].live
+    assert np.array_equal(np.asarray(h0.system.hint),
+                          np.asarray(h1.system.hint))
+    assert h0.epoch == h1.epoch
+    rows = [set(int(d) for d in row) for row in group.placement]
+    assert rows[0].isdisjoint(rows[1])
+    assert group.rank_state(0) == "healthy"
+    assert group.device_state(5) == "healthy"
+
+
+# ---------------------------------------------------------------------------
+# Bounded retries: terminal FAILED instead of ping-pong
+# ---------------------------------------------------------------------------
+
+def test_stale_retry_budget_is_terminal():
+    """A client that keeps losing the epoch race fails after the budget.
+
+    Each tick commits a fresh epoch, so the re-admitted epoch is stale
+    again immediately — without a budget this ping-pongs forever (the PR's
+    satellite bug).  With max_retries=2 the request FAILS at retry 3 and
+    served + failed == submitted.
+    """
+    corp, base = _get_base()
+    loop = PipelinedServeLoop(copy.deepcopy(base), max_batch=4,
+                              deadline_ms=0.0, clock=FakeClock(), seed=0,
+                              depth=1, retry=RetryPolicy(max_retries=2))
+    loop.submit_mutation(_mutation(0, corp))
+    loop.tick()                                    # epoch 1; client stays at 0
+    loop.submit(0, corp.embeddings[0], top_k=3, epoch=0)
+    for i in range(1, 8):                          # commit every tick: always stale
+        loop.submit_mutation(_mutation(i, corp))
+        loop.tick()
+    loop.drain()
+    assert loop.failed_requests == 1
+    assert len(loop.responses) == 1
+    r = loop.responses[0]
+    assert r.failed and r.retries == 3 and r.top == []
+
+
+def test_backoff_requeue_is_deterministic():
+    """Nonzero backoff holds retries for a bounded, seeded delay."""
+    corp, base = _get_base()
+    sigs = []
+    for _ in range(2):
+        loop = PipelinedServeLoop(
+            copy.deepcopy(base), max_batch=4, deadline_ms=1e9,
+            clock=FakeClock(), seed=0, depth=1,
+            retry=RetryPolicy(max_retries=8, backoff_base_ms=1.0))
+        loop.submit_mutation(_mutation(0, corp))
+        loop.tick()
+        loop.submit(0, corp.embeddings[0], top_k=3, epoch=0)
+        loop.submit(1, corp.embeddings[1], top_k=3)
+        loop.drain()
+        assert {r.rid for r in loop.responses} == {0, 1}
+        assert not any(r.failed for r in loop.responses)
+        sigs.append(_signature(loop))
+    assert sigs[0] == sigs[1]
+
+
+# ---------------------------------------------------------------------------
+# Injected faults, one site at a time
+# ---------------------------------------------------------------------------
+
+def test_commit_fault_retries_to_identical_state():
+    """A failed staged commit retries with backoff; no mutation is lost.
+
+    The journal keeps the pending batch across injected failures, so the
+    eventual retried commit folds EVERY accumulated mutation — fewer,
+    fatter epochs than the clean run (freshness degrades during the
+    outage), but the final database/hint content is bit-identical.
+    """
+    corp, base = _get_base()
+
+    def run(faults):
+        loop = PipelinedServeLoop(copy.deepcopy(base), max_batch=4,
+                                  deadline_ms=1e9, clock=FakeClock(),
+                                  seed=0, depth=1, faults=faults)
+        for i in range(3):
+            loop.submit_mutation(_mutation(i, corp))
+            loop.submit(i, corp.embeddings[i], top_k=3)
+            loop.tick()
+        loop.drain()
+        return loop
+
+    clean = run(None)
+    plan = FaultPlan((FaultEvent(SITE_COMMIT_FAIL, at=0),
+                      FaultEvent(SITE_COMMIT_FAIL, at=1)))
+    faulted = run(plan.compile())
+    assert clean.epoch == 3
+    assert 1 <= faulted.epoch <= 3           # retried commits fold batches
+    assert np.array_equal(np.asarray(faulted.live.system.hint),
+                          np.asarray(clean.live.system.hint))
+    assert faulted.obs.metrics.counter("fleet.commit_failures").value == 2
+    assert len(faulted.responses) == 3
+    assert not any(r.failed for r in faulted.responses)
+
+
+def test_answer_drop_charges_retry_and_serves():
+    """A dropped answer is retried (budgeted) and eventually served."""
+    corp, base = _get_base()
+    plan = FaultPlan((FaultEvent(SITE_ANSWER_DROP, at=0),))
+    loop = PipelinedServeLoop(copy.deepcopy(base), max_batch=4,
+                              deadline_ms=1e9, clock=FakeClock(), seed=0,
+                              depth=1, faults=plan.compile())
+    loop.submit(0, corp.embeddings[0], top_k=3)
+    loop.drain()
+    (r,) = loop.responses
+    assert not r.failed and r.retries == 1 and len(r.top) == 3
+    assert loop.obs.metrics.counter("fleet.answer_drops").value == 1
+
+
+def test_answer_delay_holds_then_serves():
+    """A delayed answer is late (loop-clock time), not lost: no retry."""
+    corp, base = _get_base()
+    plan = FaultPlan((FaultEvent(SITE_ANSWER_DELAY, at=0, delay_s=0.05),))
+    loop = PipelinedServeLoop(copy.deepcopy(base), max_batch=4,
+                              deadline_ms=1e9, clock=FakeClock(), seed=0,
+                              depth=1, faults=plan.compile())
+    loop.submit(0, corp.embeddings[0], top_k=3)
+    loop.drain()
+    (r,) = loop.responses
+    assert not r.failed and r.retries == 0 and len(r.top) == 3
+    assert r.t_done - r.t_arrival > 0.05           # held for the delay window
+    assert loop.obs.metrics.counter("fleet.answer_delays").value == 1
+
+
+def test_chain_corruption_costs_one_full_resync():
+    """A corrupt downloaded patch → checksum catch → one full re-sync.
+
+    The client's hint must come out EXACT (bit-identical to the log's),
+    and the cost is observable: wasted chain bytes + one full download.
+    """
+    corp, base = _get_base()
+    live = copy.deepcopy(base)
+    cache = HintCache(live.system.hint, live.system.cfg, epoch=0)
+    for i in range(3):
+        live.journal.append(_mutation(i, corp))
+        live.commit()
+    plan = FaultPlan((FaultEvent(SITE_CHAIN_CORRUPT, at=0),))
+    live.epochs.faults = plan.compile()
+    before = cache.bytes_downloaded
+    cache.sync(live.epochs)
+    assert cache.resyncs == 1
+    assert cache.epoch == live.epoch
+    assert np.array_equal(np.asarray(cache.hint),
+                          np.asarray(live.system.hint))
+    # paid: the (wasted) chain plus at least one full hint download
+    assert cache.bytes_downloaded - before > live.system.cfg.hint_bytes
+    # same corruption with no fallback is a hard error, never a wrong hint
+    cache2 = HintCache(base.system.hint, base.system.cfg, epoch=0)
+    live.epochs.faults = FaultPlan(
+        (FaultEvent(SITE_CHAIN_CORRUPT, at=0),)).compile()
+    live.epochs.full_fetch = None
+    with pytest.raises(CorruptPatchError):
+        cache2.sync(live.epochs)
+
+
+# ---------------------------------------------------------------------------
+# Failover / failback / recovery
+# ---------------------------------------------------------------------------
+
+def test_failover_failback_and_bitwise_recovery():
+    """The headline scenario: lose rank 0's device, fail over, come back.
+
+    Asserts the full degradation contract: exactly one failover and one
+    failback, bounded staleness on every response, and the recovered rank
+    0 bit-identical to a never-failed host (fresh copy + journal replay).
+    """
+    corp, base = _get_base()
+    plan = FaultPlan.single_shard_loss(at_tick=3, device=0, down_ticks=6)
+    group, fleet = _fleet(base, faults=plan.compile())
+    _drive(fleet, corp, n_ops=40)
+    assert group.failovers == 1 and group.failbacks == 1
+    assert group.authority_rank == 0
+    assert group.hosts[0].readmissions == 1
+    assert len(group.replay_reports) == 1 and group.replay_reports[0].wall_s >= 0
+    # every request answered; staleness never exceeded the follower lag bound
+    assert len(fleet.responses) == 40
+    assert all(r.staleness <= SYNC_LAG for r in fleet.responses)
+    # recovered ≡ never-failed: replay rank 0's journal into a fresh copy
+    fresh = copy.deepcopy(base)
+    readmit(fresh, group.hosts[0].live.journal)
+    h0 = group.hosts[0].live
+    assert fresh.epoch == h0.epoch
+    assert np.array_equal(np.asarray(fresh.system.hint),
+                          np.asarray(h0.system.hint))
+
+
+def test_total_outage_queues_then_recovers():
+    """Both ranks down: the loop queues (sheds nothing silently) and
+    serves everything once a device returns."""
+    corp, base = _get_base()
+    plan = FaultPlan(tuple(
+        FaultEvent(SITE_SHARD_LOSS, at=2, device=d, down_ticks=5)
+        for d in range(8)))
+    group, fleet = _fleet(base, faults=plan.compile())
+    _drive(fleet, corp, n_ops=20)
+    assert group.obs.metrics.counter("fleet.outages").value >= 1
+    assert len(fleet.responses) == 20
+    assert not any(r.failed for r in fleet.responses)
+
+
+def test_recovery_replay_is_exact():
+    """epoch_batches groups the journal by commit; replay reproduces it."""
+    corp, base = _get_base()
+    live = copy.deepcopy(base)
+    for i in range(4):
+        live.journal.append(_mutation(2 * i, corp))
+        live.journal.append(_mutation(2 * i + 1, corp))
+        live.commit()
+    batches = recovery.epoch_batches(live.journal, 0)
+    assert [e for e, _ in batches] == [1, 2, 3, 4]
+    assert all(len(b) == 2 for _, b in batches)
+    assert recovery.epoch_batches(live.journal, 2) == batches[2:]
+    cold = copy.deepcopy(base)
+    report = recovery.readmit(cold, live.journal)
+    assert (report.from_epoch, report.to_epoch) == (0, 4)
+    assert report.epochs == 4 and report.mutations == 8
+    assert np.array_equal(np.asarray(cold.system.hint),
+                          np.asarray(live.system.hint))
+    # the recovered journal is complete: it can source the NEXT recovery
+    cold2 = copy.deepcopy(base)
+    recovery.readmit(cold2, cold.journal)
+    assert np.array_equal(np.asarray(cold2.system.hint),
+                          np.asarray(live.system.hint))
+
+
+# ---------------------------------------------------------------------------
+# Chaos: random fault plans × random interleavings
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_chaos_invariants(seed):
+    """Under ANY seeded fault schedule: every request terminates (served or
+    failed), staleness stays within the lag bound, the run is replayable
+    bit-for-bit, and all ranks converge to identical state after replay."""
+    corp, base = _get_base()
+    plan = FaultPlan.random(seed, n_events=6, horizon=12, n_devices=8,
+                            max_down_ticks=6, max_delay_s=0.01)
+    n_ops = 24
+
+    def run():
+        group, fleet = _fleet(base, faults=plan.compile(),
+                              retry=RetryPolicy(max_retries=8))
+        _drive(fleet, corp, n_ops=n_ops, seed=seed)
+        return group, fleet
+
+    group, fleet = run()
+    assert len(fleet.responses) == n_ops           # served + failed == offered
+    assert fleet.failed_requests == sum(r.failed for r in fleet.responses)
+    assert all(r.staleness <= SYNC_LAG for r in fleet.responses)
+    assert fleet.inflight == 0 and not fleet.batcher.queue
+    # determinism: the same plan replays to the same responses
+    group2, fleet2 = run()
+    assert _signature(fleet) == _signature(fleet2)
+    # convergence: replaying every rank to the head leaves them identical
+    head = max((h.live for h in group.hosts), key=lambda l: l.epoch)
+    for host in group.hosts:
+        if host.live.epoch < head.epoch:
+            recovery.readmit(host.live, head.journal)
+        assert host.live.epoch == head.epoch
+        assert np.array_equal(np.asarray(host.live.system.hint),
+                              np.asarray(head.system.hint))
+
+
+# ---------------------------------------------------------------------------
+# Traffic over a faulted fleet: SLO accounting stays conserved
+# ---------------------------------------------------------------------------
+
+def test_traffic_accounting_under_faults():
+    """Open-loop traffic over a faulted fleet: served+shed+failed==offered,
+    session sync bytes stay exact, and the summary carries the failures."""
+    corp, base = _get_base()
+    plan = FaultPlan((
+        FaultEvent(SITE_SHARD_LOSS, at=4, device=0, down_ticks=4),
+        FaultEvent(SITE_ANSWER_DROP, at=2),
+        FaultEvent(SITE_ANSWER_DELAY, at=5, delay_s=0.005),
+        FaultEvent(SITE_COMMIT_FAIL, at=1),
+    ))
+    group, fleet = _fleet(base, faults=plan.compile())
+    spec = TrafficSpec(qps=150.0, duration_s=1.0, n_sessions=4,
+                       mutation_qps=25.0, staleness_tolerance=1,
+                       max_retries=6, seed=3)
+    driver = OpenLoopDriver(fleet, corp.embeddings, spec,
+                            mutator=lambda rng: _mutation(
+                                int(rng.integers(N_DOCS)), corp))
+    res = driver.run()
+    s = res.summary(deadline_ms=1e9)
+    assert s["offered"] == s["served"] + s["shed"] + s["failed"]
+    assert s["served"] > 0
+    charged = sum(r.hint_sync_bytes for r in res.records)
+    assert charged <= res.session_sync_bytes or res.session_resyncs >= 0
+    assert res.failed == sum(r.outcome == FAILED for r in res.records)
+
+
+# ---------------------------------------------------------------------------
+# Placement on 8 fake devices (CI multi-device step)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_replica_meshes_8dev():
+    """R=2 × S=4 disjoint meshes on 8 fake devices: both ranks build the
+    same sharded index, and the group fails over across real placements."""
+    run_sub('''
+import copy
+from repro.data import corpus as corpus_lib
+from repro.fleet import FaultPlan, FleetServeLoop, ReplicaGroup
+from repro.launch.mesh import make_replica_meshes
+from repro.update import LiveIndex, journal as journal_lib
+
+meshes = make_replica_meshes(2, 4)
+assert len(meshes) == 2
+devs = [set(d.id for d in m.devices.ravel()) for m in meshes]
+assert devs[0] == {0, 1, 2, 3} and devs[1] == {4, 5, 6, 7}
+
+corp = corpus_lib.make_corpus(9, 96, emb_dim=16, n_topics=4)
+group = ReplicaGroup.build(corp.texts, corp.embeddings, n_replicas=2,
+                           n_shards=4, meshes=meshes, n_clusters=4,
+                           impl="xla", kmeans_iters=3)
+h0, h1 = group.hosts[0].live, group.hosts[1].live
+assert np.array_equal(np.asarray(h0.system.hint), np.asarray(h1.system.hint))
+
+class FakeClock:
+    def __init__(self): self.t = 0.0
+    def __call__(self): self.t += 1e-4; return self.t
+
+plan = FaultPlan.single_shard_loss(at_tick=2, device=1, down_ticks=4)
+loop = FleetServeLoop(group, max_batch=4, deadline_ms=1e9,
+                      clock=FakeClock(), seed=0, faults=plan.compile())
+for i in range(12):
+    loop.submit(i, corp.embeddings[i], top_k=3)
+    if i % 3 == 0:
+        loop.submit_mutation(journal_lib.replace(
+            i, b"m", corp.embeddings[(i + 1) % 96]))
+        loop.tick()
+loop.drain()
+assert group.failovers >= 1 and group.failbacks >= 1
+assert len(loop.responses) == 12
+print("OK 8dev")
+''')
