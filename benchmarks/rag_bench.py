@@ -1,0 +1,199 @@
+"""True RAG-Ready Latency: retrieval-only vs serial vs overlapped generation.
+
+The paper's headline metric is the end-to-end time to securely fetch
+content FOR AN LLM; this bench closes the loop and measures three
+postures over the SAME request stream (see docs/rag.md):
+
+  retrieval_only — sync engine, no generator: the pre-RAG baseline (what
+                   `serve_bench` measures).
+  serial         — sync engine + generator: every tick blocks through
+                   retrieve → tokenize → prefill → decode before the next
+                   request is even cut.  The naive end-to-end posture,
+                   paying one prefill + one decode-step chain PER BATCH.
+  overlapped     — pipelined engine (depth ≥ 2) + the SAME generator:
+                   generation is deferred past the tick that retrieved
+                   its docs, letting `gen_coalesce` groups accumulate and
+                   then decode as ONE micro-batch (continuous-batching
+                   style).  The win is structural — one pack/prefill/
+                   step-chain serves gen_coalesce batches, cutting the
+                   per-group dispatch and launch overhead the serial
+                   engine pays every tick — and only the pipelined engine
+                   can do it: the sync engine must finish each batch
+                   before the next is even cut, so it never holds two
+                   generation groups at once.  (On multi-core hosts the
+                   deferral additionally overlaps the decode chain's
+                   device time with the next batch's host-side retrieval.)
+
+Checks: overlapped wall < serial wall, and generated tokens BIT-IDENTICAL
+between the serial and overlapped engines (rid → token map equality) —
+per-row transformer math does not depend on who shares the micro-batch.
+
+    PYTHONPATH=src python -m benchmarks.rag_bench [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _drive(loop, corp, *, n_req: int, max_batch: int) -> dict:
+    """Warm up compile caches, then run the timed closed-batch workload.
+
+    Submits one FULL batch per tick so the batcher is always ready: the
+    pipelined engine then holds `depth` batches in flight every tick
+    (an idle tick would retire the whole pipeline and erase the overlap
+    this bench exists to measure).
+    """
+    n_docs = len(corp.texts)
+    rng = np.random.default_rng(5)
+    # warmup: four drained batches so retrieval GEMM + prefill + decode-step
+    # shapes all enter the timed region compiled — four, not two, so the
+    # pipelined engine's drain accumulates a FULL gen_coalesce micro-batch
+    # and compiles the coalesced (gen_coalesce·max_batch) prefill/step fns
+    for rid in range(4 * max_batch):
+        loop.submit(1_000_000 + rid, corp.embeddings[rid], top_k=3)
+        if (rid + 1) % max_batch == 0:
+            loop.tick()
+    loop.drain()
+    n_warm = len(loop.responses)
+
+    arrivals: dict[int, float] = {}
+    t0 = time.perf_counter()
+    for rid in range(n_req):
+        arrivals[rid] = time.perf_counter()
+        loop.submit(rid, corp.embeddings[int(rng.integers(0, n_docs))],
+                    top_k=3)
+        if (rid + 1) % max_batch == 0:
+            loop.tick()
+    loop.drain()
+    wall = time.perf_counter() - t0
+
+    resp = loop.responses[n_warm:]
+    lat_ms = [(r.t_done - arrivals[r.rid]) * 1e3 for r in resp]
+    out = dict(wall_s=round(wall, 4), served=len(resp),
+               throughput_qps=round(len(resp) / wall, 2),
+               p50_ms=round(float(np.percentile(lat_ms, 50)), 3),
+               p99_ms=round(float(np.percentile(lat_ms, 99)), 3),
+               _tokens={r.rid: r.tokens for r in resp},
+               _retrieval=[(r.rid, r.epoch, r.retries, r.batch_size,
+                            tuple((d, t) for d, _, t in r.top))
+                           for r in resp])
+    rag = [r.rag for r in resp if r.rag is not None]
+    if rag:
+        out.update(
+            tokenize_ms=round(1e3 * float(np.mean(
+                [g.tokenize_s for g in rag])), 3),
+            prefill_ms=round(1e3 * float(np.mean(
+                [g.prefill_s for g in rag])), 3),
+            generate_ms=round(1e3 * float(np.mean(
+                [g.generate_s for g in rag])), 3),
+            prompt_tokens=int(sum(g.prompt_tokens for g in rag)),
+            new_tokens_per_req=int(rag[0].new_tokens))
+    return out
+
+
+def run(*, fast: bool = False) -> dict:
+    from repro.core import pipeline
+    from repro.data import corpus as corpus_lib
+    from repro.rag import Generator
+    from repro.serve import PIRServeLoop, PipelinedServeLoop
+
+    if fast:
+        shape = dict(n_docs=1500, n_clusters=96, emb_dim=48, max_batch=4,
+                     n_req=48, depth=2, gen_coalesce=4, context_budget=96,
+                     max_new=16)
+    else:
+        shape = dict(n_docs=4000, n_clusters=256, emb_dim=48, max_batch=8,
+                     n_req=96, depth=2, gen_coalesce=4, context_budget=160,
+                     max_new=16)
+    corp = corpus_lib.make_corpus(0, shape["n_docs"],
+                                  emb_dim=shape["emb_dim"],
+                                  n_topics=shape["n_clusters"])
+
+    # One static system + one generator shared by every posture: the bench
+    # compares ENGINE timelines, so the corpus, compiled GEMMs and model
+    # params must be literally the same objects (no mutations here — the
+    # loops never touch a static system).
+    system = pipeline.PirRagSystem.build(
+        corp.texts, corp.embeddings, n_clusters=shape["n_clusters"],
+        impl="xla")
+    gen = Generator.tiny(seed=0, context_budget=shape["context_budget"],
+                         max_new_tokens=shape["max_new"])
+    kw = dict(max_batch=shape["max_batch"], deadline_ms=1e9, seed=0)
+
+    def make_loop(name):
+        if name == "retrieval_only":
+            return PIRServeLoop(system, **kw)
+        if name == "serial":
+            return PIRServeLoop(system, generator=gen, **kw)
+        return PipelinedServeLoop(system, generator=gen,
+                                  depth=shape["depth"],
+                                  gen_coalesce=shape["gen_coalesce"], **kw)
+
+    # min-of-N walls per posture: single CI runs jitter by ±15% (thread
+    # scheduling), which would drown the ~10% overlap win
+    reps = 3
+    rows = {}
+    for name in ("retrieval_only", "serial", "overlapped"):
+        runs = [_drive(make_loop(name), corp, n_req=shape["n_req"],
+                       max_batch=shape["max_batch"]) for _ in range(reps)]
+        assert all(r["_tokens"] == runs[0]["_tokens"] for r in runs[1:])
+        rows[name] = min(runs, key=lambda r: r["wall_s"])
+
+    tokens_identical = rows["serial"].pop("_tokens") == \
+        rows["overlapped"].pop("_tokens")
+    rows["retrieval_only"].pop("_tokens")
+    # generation must leave retrieval outputs untouched: the generator
+    # runs share the retrieval-only run's payloads/epochs/batching exactly
+    retrieval_untouched = (
+        rows["retrieval_only"].pop("_retrieval")
+        == rows["serial"].pop("_retrieval")
+        == rows["overlapped"].pop("_retrieval"))
+    overlap_win = rows["overlapped"]["wall_s"] < rows["serial"]["wall_s"]
+    hidden_ms = round(1e3 * (rows["serial"]["wall_s"]
+                             - rows["overlapped"]["wall_s"]), 1)
+    checks = [
+        ("PASS" if overlap_win else "FAIL")
+        + ": overlapped RAG-Ready wall < serial end-to-end wall — "
+        + "deferred generation coalesces %d groups per decode chain "
+        % shape["gen_coalesce"]
+        + "(%.3fs vs %.3fs, %.1fms hidden)"
+        % (rows["overlapped"]["wall_s"], rows["serial"]["wall_s"],
+           hidden_ms),
+        ("PASS" if tokens_identical else "FAIL")
+        + ": generated tokens bit-identical sync vs pipelined engine",
+        ("PASS" if retrieval_untouched else "FAIL")
+        + ": retrieval outputs untouched by the generation stage "
+        + "(payloads/epochs/batching identical to the retrieval-only run)",
+    ]
+    return dict(rows=rows, checks=checks, shape=shape,
+                tokens_identical=tokens_identical)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    res = run(fast=args.fast)
+    print("name,us_per_call,derived")
+    for name, r in res["rows"].items():
+        extra = ""
+        if "generate_ms" in r:
+            extra = (f";tok={r['tokenize_ms']:.1f}ms"
+                     f";pre={r['prefill_ms']:.1f}ms"
+                     f";gen={r['generate_ms']:.1f}ms")
+        print(f"rag_{name},{1e6 / r['throughput_qps']:.0f},"
+              f"qps={r['throughput_qps']:.1f};p50={r['p50_ms']:.0f}ms;"
+              f"p99={r['p99_ms']:.0f}ms{extra}")
+    for c in res["checks"]:
+        print("#", c)
+
+
+if __name__ == "__main__":
+    main()

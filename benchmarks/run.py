@@ -238,6 +238,23 @@ def main() -> None:
         all_checks.extend(gres["checks"])
     section("graph", sec_graph)
 
+    # ---- closed RAG loop: retrieval-only vs serial vs overlapped generation -
+    def sec_rag():
+        from benchmarks import rag_bench
+        rres = rag_bench.run(fast=args.fast)
+        for name, r in rres["rows"].items():
+            extra = ""
+            if "generate_ms" in r:
+                extra = (f";tok={r['tokenize_ms']:.1f}ms"
+                         f";pre={r['prefill_ms']:.1f}ms"
+                         f";gen={r['generate_ms']:.1f}ms")
+            print(f"rag_{name},{1e6 / r['throughput_qps']:.0f},"
+                  f"qps={r['throughput_qps']:.1f};p50={r['p50_ms']:.0f}ms;"
+                  f"p99={r['p99_ms']:.0f}ms{extra}")
+        results["rag"] = rres
+        all_checks.extend(rres["checks"])
+    section("rag", sec_rag)
+
     # ---- observability: instrumentation overhead + span coverage ------------
     def sec_obs():
         from benchmarks import obs_bench
@@ -278,7 +295,7 @@ def main() -> None:
                      ("sharded", "sharded"), ("build", "build"),
                      ("serve", "serve"), ("traffic", "traffic"),
                      ("fleet", "fleet"),
-                     ("graph", "graph"), ("obs", "obs")):
+                     ("graph", "graph"), ("rag", "rag"), ("obs", "obs")):
         if src in results:
             out[dst] = results[src]
     with open(root_json, "w") as f:

@@ -40,6 +40,9 @@ MODULES = [
     "repro.fleet.recovery",
     "repro.distributed.collectives",
     "repro.kernels.ops",
+    "repro.rag",
+    "repro.rag.prompt",
+    "repro.rag.generate",
     "repro.obs",
     "repro.obs.registry",
     "repro.obs.trace",

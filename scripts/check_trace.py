@@ -102,6 +102,16 @@ def main(argv: list[str]) -> int:
     _validate(trace, schema, "$", errs)
 
     events = trace.get("traceEvents", [])
+    # closed name vocabulary: every event name must be registered in the
+    # schema's $spanNames — new instrumentation sites go through the schema
+    # (and therefore through privacy review of their attributes) first
+    allowed = set(schema.get("$spanNames", []))
+    if allowed:
+        for i, e in enumerate(events):
+            name = e.get("name") if isinstance(e, dict) else None
+            if name not in allowed:
+                errs.append(f"event {i}: name {name!r} not in "
+                            "trace_schema.json $spanNames")
     sids = [e["args"]["sid"] for e in events
             if isinstance(e, dict) and isinstance(e.get("args"), dict)
             and "sid" in e["args"]]

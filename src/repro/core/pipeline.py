@@ -598,22 +598,27 @@ class PirRagSystem:
                                       int(c))
                 qs.append(qu)
                 states.append(st)
-        # dispatch: enqueue the GEMM; no block_until_ready anywhere
+        # dispatch: enqueue the GEMM AND the batched recover — the whole
+        # answer→plaintext chain rides the device stream, so `complete`
+        # is pure host work (one ready-array fetch + parse + rerank) and
+        # never queues behind other in-flight device chains
         ans = self.server.answer(jnp.stack(qs, axis=1))      # (m, B·P)
+        cols = client.recover_batch(
+            ans, jnp.stack([st.secret for st in states], axis=1))
 
         def complete():
+            cols_np = np.asarray(cols)
             out = []
             for b in range(len(query_embs)):
                 docs = []
                 for j in range(p):
-                    col = np.asarray(client.recover(ans[:, b * p + j],
-                                                    states[b * p + j]))
-                    docs.extend(chunking.deserialize_docs(col, emb_dim))
+                    docs.extend(chunking.deserialize_docs(
+                        cols_np[:, b * p + j], emb_dim))
                 out.append(rerank.rerank(
                     np.asarray(query_embs[b], np.float32), docs, top_ks[b]))
             return out
 
-        return InflightBatch(_complete=complete, pending=(ans,))
+        return InflightBatch(_complete=complete, pending=(cols,))
 
     def _query_batch_via_batchpir_async(self, query_embs: np.ndarray,
                                         top_ks: list[int], multi_probe: int,

@@ -373,6 +373,24 @@ class PIRClient:
             vals = lwe.decode(rec, p)
         return vals.astype(jnp.uint8)
 
+    def recover_batch(self, ans: jax.Array, secrets: jax.Array) -> jax.Array:
+        """Decode C answers at once: ans (m, C), secrets (k, C) → (m, C) u8.
+
+        Every LWE decode op is exact integer arithmetic and shape
+        polymorphic (the hint strip is one (m,k)·(k,C) matmul), so column
+        j here is BIT-IDENTICAL to ``recover(ans[:, j], state_j)`` — the
+        batched form exists so the serving pipeline can enqueue recovery
+        on the device stream at dispatch time instead of paying C
+        dispatch round-trips at the complete stage.
+        """
+        p = self.cfg.params
+        if p.q_switch is not None:
+            vals = lwe.decode_switched(ans, self.hint, secrets, p)
+        else:
+            rec = lwe.hint_strip(ans, self.hint, secrets)
+            vals = lwe.decode(rec, p)
+        return vals.astype(jnp.uint8)
+
 
 # ---------------------------------------------------------------------------
 # Convenience: parameter selection for a corpus

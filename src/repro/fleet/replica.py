@@ -334,15 +334,18 @@ class FleetServeLoop(PipelinedServeLoop):
             self.group.head_epoch() - self.group.authority.live.epoch)
         return super()._plan_group(system, kind, reqs, kq)
 
-    def _record(self, reqs, results, epoch, t_done, timing):
-        super()._record(reqs, results, epoch, t_done, timing)
+    def _record(self, reqs, results, epoch, t_done, timing, staleness=0):
+        # Staleness rides INTO the record call (the engine's single append
+        # point stamps it on each Response) rather than being patched onto
+        # the responses list afterwards: a generation group may defer its
+        # append to a later tick, so "the last len(reqs) responses" is not
+        # guaranteed to be this batch anymore.
         staleness = self._stale_fifo.popleft() if self._stale_fifo else 0
         if staleness > 0:
-            for resp in self.responses[-len(reqs):]:
-                resp.staleness = staleness
             self.obs.counter("fleet.stale_served").inc(len(reqs))
             self.obs.histogram("fleet.staleness",
                                bounds=(1, 2, 4, 8, 16)).record(staleness)
+        super()._record(reqs, results, epoch, t_done, timing, staleness)
 
     def tick(self, force: bool = False) -> int:
         self.group.tick()

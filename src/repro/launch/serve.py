@@ -66,6 +66,15 @@ def main():  # pragma: no cover - exercised by examples/tests
                     help="fleet engine: inject a seeded random fault plan "
                          "(shard loss, answer drops/delays, commit "
                          "failures, chain corruption)")
+    ap.add_argument("--generate", type=int, metavar="N", default=0,
+                    help="if >0, close the RAG loop: feed each request's "
+                         "retrieved docs through the tiny byte-level LM "
+                         "and emit N tokens per response (docs/rag.md); "
+                         "the pipelined engine defers + coalesces "
+                         "generation micro-batches")
+    ap.add_argument("--gen-coalesce", type=int, default=4,
+                    help="pipelined/fleet engines: parked generation "
+                         "groups merged into one decode micro-batch")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="export a Chrome-trace (chrome://tracing / "
                          "Perfetto) of the run's spans to this path; "
@@ -96,8 +105,15 @@ def main():  # pragma: no cover - exercised by examples/tests
     obs = Obs(trace=args.trace is not None)
     loop_kw = dict(max_batch=args.max_batch, deadline_ms=args.deadline_ms,
                    obs=obs)
+    gen = None
+    if args.generate > 0:
+        from repro.rag import Generator
+        gen = Generator.tiny(seed=0, max_new_tokens=args.generate)
+        loop_kw["generator"] = gen
     if args.engine in ("pipelined", "fleet"):
         loop_kw["depth"] = args.depth
+        if gen is not None:
+            loop_kw["gen_coalesce"] = args.gen_coalesce
     group = None
     if args.engine == "fleet":
         from repro.fleet import FaultPlan, FleetServeLoop, ReplicaGroup
@@ -151,6 +167,15 @@ def main():  # pragma: no cover - exercised by examples/tests
           f"{np.percentile(lat, 99):.2f}s"
           + (f"; epoch {loop.epoch}; stale retries {loop.stale_retries}"
              if live is not None else ""))
+    if gen is not None:
+        rags = [r.rag for r in loop.responses if r.rag is not None]
+        n_tok = sum(len(r.tokens) for r in loop.responses
+                    if r.tokens is not None)
+        print(f"generation: {n_tok} tokens across "
+              f"{len(loop.responses)} responses; "
+              f"{sum(g.prompt_tokens for g in rags)} prompt tokens; "
+              f"mean gen stage "
+              f"{1e3 * float(np.mean([g.generate_s for g in rags])):.1f}ms")
     if group is not None:
         stale = sum(r.staleness > 0 for r in loop.responses)
         print(f"fleet: authority rank {group.authority_rank}; "

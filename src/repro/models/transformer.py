@@ -460,9 +460,15 @@ def cache_axes(cfg: LMConfig):
     return {f"sub{i}": one for i in range(cfg.block_size)}
 
 
-def prefill(params, tokens, cache, cfg: LMConfig):
+def prefill(params, tokens, cache, cfg: LMConfig, *, last_pos=None):
     """Run the prompt through the model, filling the cache; return logits of
-    the last position (B, V) + new cache."""
+    the last position (B, V) + new cache.
+
+    ``last_pos`` (optional, (B,) int32) gathers each row's logits at its
+    OWN last real token instead of column S-1 — the ragged-prompt path
+    (right-padded batches from `rag.prompt.pack_batch` pass lengths-1).
+    Padding columns still write the cache; decode masks them out by
+    attending only to `lengths` positions."""
     B, S = tokens.shape
     positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     x = nn.embed(params["embed"], tokens, compute_dtype=cfg.compute_dtype)
@@ -506,7 +512,13 @@ def prefill(params, tokens, cache, cfg: LMConfig):
 
     x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
     x = nn.rmsnorm(params["final_norm"], x)
-    logits = logits_from_hidden(params, x[:, -1:], cfg)[:, 0]
+    if last_pos is None:
+        xl = x[:, -1:]
+    else:
+        idx = jnp.asarray(last_pos, jnp.int32).reshape(B, 1, 1)
+        xl = jnp.take_along_axis(
+            x, jnp.broadcast_to(idx, (B, 1, x.shape[-1])), axis=1)
+    logits = logits_from_hidden(params, xl, cfg)[:, 0]
     return logits, new_cache
 
 

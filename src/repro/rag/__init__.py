@@ -1,0 +1,17 @@
+"""RAG generation stage: retrieved payloads → packed prompts → tokens.
+
+`prompt` owns the deterministic byte-level tokenizer and context-budgeted
+doc packing; `generate` owns the batched prefill + KV-cache decode loop
+the serve engines run as their generation completion stage (see
+docs/rag.md and `repro.serve.engine`).
+"""
+from repro.rag.generate import Generator, GenState
+from repro.rag.prompt import (BOS, GEN, PAD, SEP, VOCAB, PackedPrompt,
+                              PromptSpec, decode_tokens, encode_bytes,
+                              pack_batch, pack_docs)
+
+__all__ = [
+    "Generator", "GenState", "PromptSpec", "PackedPrompt",
+    "pack_docs", "pack_batch", "encode_bytes", "decode_tokens",
+    "PAD", "BOS", "SEP", "GEN", "VOCAB",
+]

@@ -1,0 +1,234 @@
+"""Batched prefill + KV-cache decode behind the serve engines.
+
+`Generator` owns a transformer LM (`repro.models.transformer`) plus the
+packing policy (`rag.prompt.PromptSpec`) and exposes the three stage
+methods the engines wrap in obs spans:
+
+    pack     ranked docs  → (B, S) token grid + lengths      host
+    prefill  token grid   → KV cache + first-token logits    device
+    decode   step loop    → (B, max_new_tokens) int32 ids    device
+
+Decoding is FIXED LENGTH (`max_new_tokens`, no early EOS stop) so shapes
+are static and output is a dense (B, N) grid — the determinism contract
+the serve equivalence tests pin.  Greedy (temperature=0.0, the default)
+takes argmax; seeded sampling derives one key per (seed, rid, step) with
+`jax.random.fold_in`, so a request's sampled continuation depends only on
+its rid and the generator seed — NOT on which batch or engine served it.
+
+Caches and compute run in float32: generation must be bit-identical
+between the sync and pipelined engines, and bf16 accumulation order is
+the classic source of spurious diffs.  Models here are tiny (the bench /
+serve configs), so f32 costs nothing that matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.rag import prompt as prompt_lib
+from repro.rag.prompt import PackedPrompt, PromptSpec
+
+
+@dataclasses.dataclass
+class GenState:
+    """Device state between prefill and the decode loop.
+
+    `logits` are the next-token logits at each row's last prompt token;
+    `lengths` are true prompt lengths (cache write cursor starts there).
+    """
+    cache: dict
+    logits: jax.Array        # (B, V) f32
+    lengths: jax.Array       # (B,) int32
+
+
+class Generator:
+    """Prompt-conditioned fixed-length generation over a KV cache.
+
+    Construct with model params + config (``cfg.vocab`` must cover the
+    byte vocabulary, ``rag.prompt.VOCAB``); `tiny()` builds the small
+    self-contained model the benches, CLI and tests use.  One instance
+    is safe to share across engines — per-(batch-size) jitted prefill
+    and step functions are cached on the instance.
+    """
+
+    def __init__(self, params, cfg: tf.LMConfig, *,
+                 spec: PromptSpec | None = None, max_new_tokens: int = 16,
+                 temperature: float = 0.0, seed: int = 0):
+        assert cfg.vocab >= prompt_lib.VOCAB, (
+            f"vocab {cfg.vocab} < byte vocabulary {prompt_lib.VOCAB}")
+        assert max_new_tokens >= 1
+        self.params = params
+        self.cfg = cfg
+        self.spec = spec if spec is not None else PromptSpec()
+        self.max_new_tokens = int(max_new_tokens)
+        self.temperature = float(temperature)
+        self.seed = int(seed)
+        self._root_key = jax.random.PRNGKey(seed)
+        self._prefill_jit: dict[int, object] = {}   # batch size → fn
+        self._step_jit: dict[int, object] = {}
+
+    @classmethod
+    def tiny(cls, *, seed: int = 0, context_budget: int = 96,
+             max_new_tokens: int = 8, temperature: float = 0.0,
+             d_model: int = 64, n_layers: int = 2, d_ff: int = 128
+             ) -> "Generator":
+        """A small deterministic generator for benches/CLI/tests.
+
+        2 layers, d_model 64, byte vocab, f32 compute — big enough that
+        prefill/decode exercise the real KV-cache path, small enough to
+        compile and run inside a CI tick.  ``d_model``/``n_layers``/
+        ``d_ff`` scale the model up for benches that need generation to
+        be real device work (d_model must stay divisible by 4: four
+        heads of d_model/4).
+        """
+        assert d_model % 4 == 0, d_model
+        cfg = tf.LMConfig(
+            name="rag-tiny", n_layers=n_layers, d_model=d_model, n_heads=4,
+            n_kv_heads=2, head_dim=d_model // 4, d_ff=d_ff,
+            vocab=prompt_lib.VOCAB,
+            attn_chunk_q=64, attn_chunk_kv=64, remat=False,
+            compute_dtype=jnp.float32)
+        params = tf.init(jax.random.PRNGKey(seed), cfg)
+        return cls(params, cfg, spec=PromptSpec(context_budget),
+                   max_new_tokens=max_new_tokens, temperature=temperature,
+                   seed=seed)
+
+    # -- stage 1: host-side tokenize + pack ----------------------------------
+
+    def pack(self, doc_lists) -> tuple[np.ndarray, np.ndarray,
+                                       list[PackedPrompt]]:
+        """Ranked rerank triples per request → (B, S) grid + lengths.
+
+        `doc_lists[i]` is request i's ranked `(doc_id, score, text)`
+        list; only the text bytes enter the prompt (rank order is the
+        retrieval order, already deterministic across engines).
+        """
+        prompts = [prompt_lib.pack_docs([t for _, _, t in docs], self.spec)
+                   for docs in doc_lists]
+        grid, lengths = prompt_lib.pack_batch(prompts, self.spec)
+        return grid, lengths, prompts
+
+    # -- stage 2: prefill -----------------------------------------------------
+
+    def _prefill_fn(self, batch: int):
+        if batch not in self._prefill_jit:
+            cfg, S, new = self.cfg, self.spec.context_budget, \
+                self.max_new_tokens
+
+            @jax.jit
+            def fn(params, toks, lengths):
+                cache = tf.init_cache(cfg, batch, S + new,
+                                      dtype=jnp.float32)
+                return tf.prefill(params, toks, cache, cfg,
+                                  last_pos=lengths - 1)
+            self._prefill_jit[batch] = fn
+        return self._prefill_jit[batch]
+
+    def prefill(self, tokens: np.ndarray, lengths: np.ndarray) -> GenState:
+        """Run the packed prompts through the model, filling the cache."""
+        B = tokens.shape[0]
+        lengths = jnp.asarray(lengths, jnp.int32)
+        logits, cache = self._prefill_fn(B)(
+            self.params, jnp.asarray(tokens), lengths)
+        return GenState(cache=cache, logits=logits, lengths=lengths)
+
+    # -- stage 3: the decode loop --------------------------------------------
+
+    def _step_fn(self, batch: int):
+        if batch not in self._step_jit:
+            cfg = self.cfg
+
+            @jax.jit
+            def fn(params, cache, toks, lengths):
+                return tf.decode_step(params, cache, toks, lengths, cfg)
+            self._step_jit[batch] = fn
+        return self._step_jit[batch]
+
+    def _pick(self, logits: jax.Array, rids: jax.Array,
+              step: int) -> jax.Array:
+        """logits (B, V) → next ids (B,) int32 (greedy or seeded sample)."""
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        def one(rid, lg):
+            k = jax.random.fold_in(jax.random.fold_in(self._root_key, rid),
+                                   step)
+            return jax.random.categorical(k, lg / self.temperature)
+        return jax.vmap(one)(rids, logits).astype(jnp.int32)
+
+    def decode_async(self, state: GenState, rids) -> jax.Array:
+        """Dispatch the whole step loop; return the (B, N) ids UNBLOCKED.
+
+        Every step is enqueued on the device stream and nothing waits:
+        the pipelined engine calls this at its retire stage and blocks a
+        tick later, so the decode chain's device time runs concurrently
+        with the NEXT batch's host-side retrieval (encode + recover) —
+        the overlap `benchmarks/rag_bench.py` measures.  Values are
+        identical to `decode` (deferring the block changes nothing).
+        """
+        B = int(state.logits.shape[0])
+        rids_arr = jnp.asarray(list(rids), jnp.int32)
+        step_fn = self._step_fn(B)
+        cache, lengths = state.cache, state.lengths
+        cur = self._pick(state.logits, rids_arr, 0)
+        out = [cur]
+        for step in range(1, self.max_new_tokens):
+            logits, cache = step_fn(self.params, cache, cur,
+                                    lengths + (step - 1))
+            cur = self._pick(logits, rids_arr, step)
+            out.append(cur)
+        return jnp.stack(out, axis=1)
+
+    def decode(self, state: GenState, rids) -> np.ndarray:
+        """Greedy/sampled step loop → (B, max_new_tokens) int32 ids.
+
+        ``decode_async`` + one block: the synchronous engine's posture
+        (and the convenience path for tests).
+        """
+        return np.asarray(jax.block_until_ready(
+            self.decode_async(state, rids)))
+
+    # -- convenience ----------------------------------------------------------
+
+    def generate(self, doc_lists, rids) -> np.ndarray:
+        """pack → prefill → decode in one call (tests/benches)."""
+        grid, lengths, _ = self.pack(doc_lists)
+        return self.decode(self.prefill(grid, lengths), rids)
+
+    def generate_nocache(self, doc_lists, rids) -> np.ndarray:
+        """Cache-free reference: re-run full `forward` every step.
+
+        O(N·S²) — exists so tests can pin the KV-cache loop against an
+        independently-computed token sequence.  Greedy only.
+        """
+        assert self.temperature <= 0.0, "reference path is greedy-only"
+        del rids
+        grid, lengths, _ = self.pack(doc_lists)
+        toks = np.array(grid)
+        lens = np.array(lengths).copy()
+        B = toks.shape[0]
+        out = np.zeros((B, self.max_new_tokens), np.int32)
+
+        @functools.partial(jax.jit, static_argnums=())
+        def fwd(params, t):
+            x, _ = tf.forward(params, t, self.cfg)
+            return tf.logits_from_hidden(params, x, self.cfg)
+
+        for step in range(self.max_new_tokens):
+            full = np.asarray(fwd(self.params, jnp.asarray(toks)))
+            for b in range(B):
+                nxt = int(np.argmax(full[b, lens[b] - 1]))
+                out[b, step] = nxt
+                if lens[b] < toks.shape[1]:
+                    toks[b, lens[b]] = nxt
+                else:
+                    toks = np.pad(toks, ((0, 0), (0, 1)),
+                                  constant_values=prompt_lib.PAD)
+                    toks[b, lens[b]] = nxt
+                lens[b] += 1
+        return out

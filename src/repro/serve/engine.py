@@ -29,6 +29,16 @@ Responses are BIT-IDENTICAL to the synchronous loop — same payloads,
 epochs, retry counts, in the same order (property-tested under random
 interleavings of submits/mutations/drains, single-device and sharded):
 pipelining moves work in time, never across an epoch boundary.
+
+Both engines optionally close the RAG loop: pass ``generator=`` (a
+`repro.rag.generate.Generator`) and every served query batch runs the
+tokenize → prefill → decode completion stage before its responses land
+(`Response.tokens` + `RagTiming`).  Under the pipelined engine batch N's
+generation runs while batch N+1's retrieval GEMM is already dispatched —
+retrieval for the next query overlaps decode of the previous one, which
+is what `benchmarks/rag_bench.py` measures as overlapped RAG-Ready
+Latency.  Generated tokens are bit-identical across engines (they depend
+only on retrieved docs, rids and the generator seed, never on timing).
 """
 from __future__ import annotations
 
@@ -75,6 +85,23 @@ class BatchTiming:
     decode_s: float
 
 
+@dataclasses.dataclass(frozen=True)
+class RagTiming:
+    """Per-batch generation-stage components (shared by the batch).
+
+    Seconds on the loop clock, one entry per `rag.*` span: `tokenize_s`
+    is host-side doc decode + prompt packing, `prefill_s` the prompt
+    forward filling the KV cache, `generate_s` the decode step loop.
+    `prompt_tokens` is the batch's summed TRUE prompt length (before
+    padding); `new_tokens` the fixed per-request generation length.
+    """
+    tokenize_s: float
+    prefill_s: float
+    generate_s: float
+    prompt_tokens: int
+    new_tokens: int
+
+
 @dataclasses.dataclass
 class Response:
     rid: int
@@ -87,6 +114,8 @@ class Response:
     timing: BatchTiming | None = None    # its batch's latency components
     failed: bool = False                 # terminal: retry budget/deadline hit
     staleness: int = 0                   # epochs behind the fleet head (failover)
+    tokens: tuple | None = None          # generated ids (loops with a generator)
+    rag: RagTiming | None = None         # generation components (ditto)
 
 
 class DeadlineBatcher:
@@ -180,7 +209,7 @@ class PIRServeLoop:
                  clock: Callable[[], float] = time.perf_counter,
                  live=None, seed: int = 0, obs: Obs | None = None,
                  retry: RetryPolicy | None = DEFAULT_POLICY,
-                 faults=None):
+                 faults=None, generator=None):
         self.live = live if live is not None else (
             system if hasattr(system, "epochs") else None)
         self.system = system if self.live is None else self.live.system
@@ -208,6 +237,14 @@ class PIRServeLoop:
         # live index's commit-stage and hint-chain sites with the SAME
         # injector (one invocation-counter space per run).  None (default)
         # keeps the tick fault-free with zero extra clock reads.
+        # Generation completion stage (repro.rag.generate.Generator):
+        # when set, every served QUERY batch runs tokenize → prefill →
+        # decode before its responses land, and `Response.tokens`/`.rag`
+        # carry the generated ids + stage timing (t_done moves to the end
+        # of generation, so SLO latency covers the full RAG answer).
+        # None (the default) keeps the retrieval-only path byte-identical
+        # to loops without the hook — zero extra clock reads.
+        self.generator = generator
         self.faults = faults
         if faults is not None and self.live is not None:
             self.live.faults = faults
@@ -500,9 +537,85 @@ class PIRServeLoop:
                     gemm_s=sp_gemm.dur, decode_s=sp_done.dur))
             return len(fresh)
 
+    def _generate_dispatch(self, reqs: list[Request], results: list):
+        """Tokenize + prefill + ENQUEUE the decode chain (no device block).
+
+        Returns the in-flight handle `_generate_wait` resolves into ids
+        and a `RagTiming`.  Both engines share this; they differ only in
+        WHEN they wait: the sync loop blocks immediately (serial
+        end-to-end), the pipelined loop parks the handle and blocks at
+        the NEXT tick's retire, so the decode chain's device time runs
+        while the host encodes/recovers the following batch.
+        """
+        gen = self.generator
+        with self.obs.span("rag.tokenize", batch=len(reqs)) as sp_tok:
+            grid, lengths, prompts = gen.pack(results)
+        n_prompt = int(lengths.sum())
+        self.obs.counter("rag.docs_dropped").inc(
+            sum(p.n_docs_dropped for p in prompts))
+        with self.obs.span("rag.prefill", batch=len(reqs),
+                           prompt_tokens=n_prompt) as sp_pre:
+            state = gen.prefill(grid, lengths)
+        t0 = self.clock()
+        ids_dev = gen.decode_async(state, [r.rid for r in reqs])
+        dispatch_s = self.clock() - t0
+        return ids_dev, sp_tok.dur, sp_pre.dur, dispatch_s, n_prompt
+
+    def _generate_wait(self, reqs: list[Request], handle
+                       ) -> tuple[np.ndarray, RagTiming, float]:
+        """Block on a dispatched decode chain → (ids, RagTiming, t_done).
+
+        The `rag.generate` span covers the residual device wait (near
+        zero when the pipeline hid it); `generate_s` adds the host-side
+        step-dispatch time so the component is the full decode-loop cost
+        either way.  Spans carry token COUNTS and timings only — ids and
+        text never reach the trace.
+        """
+        gen = self.generator
+        ids_dev, tok_s, pre_s, dispatch_s, n_prompt = handle
+        with self.obs.span("rag.generate", batch=len(reqs),
+                           new_tokens=gen.max_new_tokens) as sp_gen:
+            ids = np.asarray(jax.block_until_ready(ids_dev))
+        self.obs.counter("rag.generated_tokens").inc(
+            len(reqs) * gen.max_new_tokens)
+        rag = RagTiming(tokenize_s=tok_s, prefill_s=pre_s,
+                        generate_s=dispatch_s + sp_gen.dur,
+                        prompt_tokens=n_prompt,
+                        new_tokens=int(gen.max_new_tokens))
+        return ids, rag, sp_gen.t1
+
+    def _generate(self, reqs: list[Request], results: list,
+                  t_done: float) -> tuple[np.ndarray, RagTiming, float]:
+        """Run the generation completion stage on one served query group.
+
+        tokenize → prefill → decode, each under its `rag.*` span.
+        Returns (ids (B, N), shared RagTiming, new t_done = end of
+        generation).  Tokens depend only on the retrieved docs, rids and
+        the generator seed, so sync/pipelined/fleet agree bit-for-bit.
+        """
+        del t_done                       # superseded: answer isn't ready
+        return self._generate_wait(      # ...until generation finishes
+            reqs, self._generate_dispatch(reqs, results))
+
     def _record(self, reqs: list[Request], results: list, epoch: int,
-                t_done: float, timing: BatchTiming):
-        """Append one served group's responses (shared batch timing)."""
+                t_done: float, timing: BatchTiming, staleness: int = 0):
+        """Complete one served group: generate (if configured) + append."""
+        ids, rag = None, None
+        if (self.generator is not None and reqs
+                and reqs[0].lookup_ids is None):
+            ids, rag, t_done = self._generate(reqs, results, t_done)
+        self._append(reqs, results, epoch, t_done, timing, ids, rag,
+                     staleness)
+
+    def _append(self, reqs: list[Request], results: list, epoch: int,
+                t_done: float, timing: BatchTiming, ids, rag,
+                staleness: int = 0):
+        """Append one served group's responses (shared batch timing).
+
+        The single append point for every engine and both generation
+        postures (inline and deferred) — response construction cannot
+        diverge between them.
+        """
         self.obs.counter("serve.responses").inc(len(reqs))
         self.obs.histogram("serve.batch_size",
                            bounds=(1, 2, 4, 8, 16, 32, 64, 128)
@@ -510,13 +623,17 @@ class PIRServeLoop:
         lat_hist = self.obs.histogram("serve.latency_ms")
         retry_hist = self.obs.histogram("serve.retries",
                                         bounds=(1, 2, 4, 8, 16, 32, 64))
-        for req, top in zip(reqs, results):
+        for i, (req, top) in enumerate(zip(reqs, results)):
             lat_hist.record((t_done - req.t_arrival) * 1e3)
             retry_hist.record(req.retries)
             # batch_size = this group's GEMM width, not the tick total
             self.responses.append(Response(
                 req.rid, top, t_done, len(reqs), epoch=epoch,
-                retries=req.retries, t_arrival=req.t_arrival, timing=timing))
+                retries=req.retries, t_arrival=req.t_arrival, timing=timing,
+                staleness=staleness,
+                tokens=(tuple(int(t) for t in ids[i])
+                        if ids is not None else None),
+                rag=rag))
 
     def drain(self):
         """Serve everything still queued, force-flushing partial batches.
@@ -552,10 +669,12 @@ class PipelinedServeLoop(PIRServeLoop):
     ENGINE = "pipelined"
 
     def __init__(self, system, *, depth: int = 2, donate: bool = True,
-                 **kwargs):
+                 gen_coalesce: int = 1, **kwargs):
         super().__init__(system, **kwargs)
         self.depth = max(1, int(depth))
+        self.gen_coalesce = max(1, int(gen_coalesce))
         self._inflight: deque = deque()
+        self._gen_pending: deque = deque()
         self._shadow = (ShadowCommitter(self.live, donate=donate)
                         if self.live is not None else None)
 
@@ -635,14 +754,65 @@ class PipelinedServeLoop(PIRServeLoop):
             self._retire(self.depth)
             return len(fresh)
 
+    def _record(self, reqs: list[Request], results: list, epoch: int,
+                t_done: float, timing: BatchTiming, staleness: int = 0):
+        """Park generation instead of blocking the tick on it.
+
+        A query group retiring with a generator lands on ``_gen_pending``;
+        `_retire_gen` completes it on a LATER tick, coalescing up to
+        ``gen_coalesce`` parked groups into ONE generation micro-batch —
+        retrieval for the next batches proceeds while generation waits,
+        and the coalesced micro-batch pays one prefill + one decode-step
+        chain where the serial engine pays one PER GROUP.  Tokens are
+        bit-identical to the sync engine's: per-row transformer math does
+        not depend on who shares the batch (pinned by the rag serve
+        tests), and sampled rows key off (seed, rid, step) only.
+        Responses simply land a tick later, like retrieval responses
+        already do in this engine.
+        """
+        if (self.generator is not None and reqs
+                and reqs[0].lookup_ids is None):
+            self._gen_pending.append((reqs, results, epoch, timing,
+                                      staleness))
+            return
+        super()._record(reqs, results, epoch, t_done, timing, staleness)
+
+    def _retire_gen(self, count: int):
+        """Coalesce the `count` oldest parked groups into one micro-batch.
+
+        One pack/prefill/decode chain serves every coalesced group; the
+        (B_total, N) id grid is split back per group, which keeps each
+        group's epoch/staleness/BatchTiming intact.  The micro-batch's
+        RagTiming is shared by its responses, exactly like BatchTiming is
+        shared by a retrieval batch.
+        """
+        groups = [self._gen_pending.popleft() for _ in range(count)]
+        reqs_all = [r for g in groups for r in g[0]]
+        results_all = [res for g in groups for res in g[1]]
+        ids, rag, t_done = self._generate_wait(
+            reqs_all, self._generate_dispatch(reqs_all, results_all))
+        i = 0
+        for reqs, results, epoch, timing, staleness in groups:
+            self._append(reqs, results, epoch, t_done, timing,
+                         ids[i:i + len(reqs)], rag, staleness)
+            i += len(reqs)
+
     def _retire(self, limit: int):
         """Complete (decode + record) oldest in-flight batches beyond limit.
 
         The gemm component recorded here is the RESIDUAL device wait at
-        retire time: at steady state the GEMM overlapped host work for
-        `depth` ticks already, so near-zero gemm_s is the pipeline doing
-        its job (the sync engine reports the full device time instead).
+        retire time: at steady state the GEMM (and the batched recover
+        chained behind it) overlapped host work for `depth` ticks
+        already, so near-zero gemm_s is the pipeline doing its job (the
+        sync engine reports the full device time instead).  Generation
+        groups parked by `_record` on EARLIER ticks complete after this
+        tick's retrieval completions, in micro-batches of
+        ``gen_coalesce`` groups; a partial micro-batch keeps waiting for
+        more groups — except on an idle tick or drain (limit 0), which
+        flushes everything (during a lull responses must not sit
+        generated-but-unreported behind the coalescing bound).
         """
+        n_parked = len(self._gen_pending)
         while len(self._inflight) > limit:
             reqs, epoch, infl, t_plan, encode_s = self._inflight.popleft()
             with self.obs.span("serve.gemm", batch=len(reqs)) as sp_gemm:
@@ -652,6 +822,13 @@ class PipelinedServeLoop(PIRServeLoop):
             self._record(reqs, results, epoch, sp_done.t1, BatchTiming(
                 t_plan=t_plan, encode_s=encode_s, gemm_s=sp_gemm.dur,
                 decode_s=sp_done.dur))
+        while n_parked >= self.gen_coalesce:
+            self._retire_gen(self.gen_coalesce)
+            n_parked -= self.gen_coalesce
+        if limit == 0:
+            while self._gen_pending:
+                self._retire_gen(min(len(self._gen_pending),
+                                     self.gen_coalesce))
 
     def drain(self):
         """Serve and complete everything: queue, mutations, and pipeline.

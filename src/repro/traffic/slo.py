@@ -33,7 +33,10 @@ class RequestRecord:
     `queue_ms` spans arrival → batch plan; `encode_ms`/`gemm_ms`/`decode_ms`
     come from the serving engine's `BatchTiming` (shared by the batch);
     `hint_sync_ms` is the modelled downlink time of the patch chain this
-    request's session downloaded to form the query (0 for warm sessions).
+    request's session downloaded to form the query (0 for warm sessions);
+    `generate_ms` is the generation completion stage (tokenize + prefill
+    + decode, from `Response.rag`) — 0.0 on retrieval-only loops, and the
+    component only appears in summaries when some record generated.
     """
     rid: int
     session: int
@@ -50,6 +53,7 @@ class RequestRecord:
     decode_ms: float = 0.0
     hint_sync_ms: float = 0.0
     hint_sync_bytes: int = 0
+    generate_ms: float = 0.0
 
     @property
     def latency_ms(self) -> float:
@@ -108,8 +112,14 @@ def summarize(records: list[RequestRecord], *, deadline_ms: float,
         "hint_sync_bytes": sum(r.hint_sync_bytes for r in served),
     }
     comp = {}
-    for name in ("queue_ms", "encode_ms", "gemm_ms", "decode_ms",
-                 "hint_sync_ms"):
+    names = ["queue_ms", "encode_ms", "gemm_ms", "decode_ms",
+             "hint_sync_ms"]
+    # generate_ms appears ONLY when the run generated: query-only specs
+    # keep byte-identical summaries to the pre-RAG component set (the
+    # stream-preservation regression tests/test_traffic.py pins).
+    if any(r.generate_ms for r in records):
+        names.append("generate_ms")
+    for name in names:
         vals = np.array([getattr(r, name) for r in served], np.float64)
         comp[name] = {"mean": round(float(vals.mean()), 3) if served else 0.0,
                       "p99": round(_pct(vals, 99), 3)}

@@ -266,6 +266,13 @@ class OpenLoopDriver:
                 rec.encode_ms = r.timing.encode_s * 1e3
                 rec.gemm_ms = r.timing.gemm_s * 1e3
                 rec.decode_ms = r.timing.decode_s * 1e3
+            rag = getattr(r, "rag", None)
+            if rag is not None:
+                # the generation completion stage (loops with generator=);
+                # r.t_done already sits at the end of generation, so
+                # latency_ms and attainment cover the full RAG answer
+                rec.generate_ms = (rag.tokenize_s + rag.prefill_s
+                                   + rag.generate_s) * 1e3
             sess.n_requests += 1
 
     def _downlink_ms(self, nbytes: int) -> float:

@@ -323,6 +323,56 @@ def loop_docs(loop):
     return loop.live._docs.values()
 
 
+def test_rag_trace_privacy_audit(base_live):
+    """Generation spans record counts and timings ONLY — never token ids,
+    prompt bytes or document text.  The audit drives a generator-equipped
+    pipelined loop (coalesced micro-batches included), re-scrubs every
+    exported args value, and greps the serialized JSON for each response's
+    token ids and each packed document's payload."""
+    import os
+
+    from repro.rag import Generator
+
+    corp, base = base_live
+    fc = FakeClock()
+    obs = Obs(clock=fc, trace=True)
+    gen = Generator.tiny(seed=1, context_budget=64, max_new_tokens=4)
+    loop = PipelinedServeLoop(copy.deepcopy(base), max_batch=4,
+                              deadline_ms=1e9, clock=fc, seed=0, depth=2,
+                              gen_coalesce=2, obs=obs, generator=gen)
+    for rid in range(16):
+        loop.submit(rid, corp.embeddings[rid % N_DOCS], top_k=3)
+        loop.tick()
+    loop.drain()
+    assert all(r.tokens is not None for r in loop.responses)
+
+    trace = obs.tracer.to_chrome()
+    assert validate_chrome_trace(trace) == []
+    names = {ev["name"] for ev in trace["traceEvents"]}
+    assert {"rag.tokenize", "rag.prefill", "rag.generate"} <= names
+    # every emitted name is registered in the schema's closed vocabulary
+    # (what scripts/check_trace.py enforces in CI)
+    with open(os.path.join(os.path.dirname(__file__), "..", "scripts",
+                           "trace_schema.json")) as f:
+        allowed = set(json.load(f)["$spanNames"])
+    assert names <= allowed, names - allowed
+    for ev in trace["traceEvents"]:
+        for key, val in ev["args"].items():
+            scrub(val, where=f"{ev['name']}.{key}")     # raises on leak
+    blob = json.dumps(trace)
+    # no generated token sequence appears in any serialized form
+    for r in loop.responses:
+        assert str(list(r.tokens)) not in blob
+        assert ",".join(str(t) for t in r.tokens) not in blob
+    # no retrieved document payload appears either
+    for text, _ in list(loop_docs(loop))[:20]:
+        assert text.decode("latin-1") not in blob
+    # generation counters are aggregates, never per-token values
+    m = obs.metrics_dict()
+    assert m["rag.generated_tokens"] == 16 * gen.max_new_tokens
+    json.dumps(m)
+
+
 def test_serve_metrics_populated(base_live):
     corp, base = base_live
     loop, obs = _traced_loop(base, trace=False)

@@ -1,0 +1,102 @@
+"""Packing properties of the RAG prompt builder (`repro.rag.prompt`).
+
+Four invariants the generation stage leans on:
+
+  determinism      — same texts + spec → bitwise-same tokens, always
+  budget exact     — packed length ≤ context_budget, GEN always fits
+  whole-doc        — a document is packed in full or dropped in full,
+                     never split (its bytes appear contiguously)
+  accounting sums  — packed_bytes + dropped_bytes == bytes offered, and
+                     n_docs + n_docs_dropped == docs offered
+"""
+import numpy as np
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.rag import prompt as pl
+
+
+def _texts(rng, n_docs, max_len):
+    return [bytes(rng.integers(0, 256, int(rng.integers(0, max_len + 1)))
+                  .astype(np.uint8)) for _ in range(n_docs)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n_docs=st.integers(0, 8),
+       budget=st.integers(2, 120), max_len=st.integers(0, 60))
+def test_pack_docs_properties(seed, n_docs, budget, max_len):
+    rng = np.random.default_rng(seed)
+    texts = _texts(rng, n_docs, max_len)
+    spec = pl.PromptSpec(context_budget=budget)
+    p = pl.pack_docs(texts, spec)
+
+    # determinism: a second pack of the same inputs is bitwise identical
+    q = pl.pack_docs(texts, spec)
+    np.testing.assert_array_equal(p.tokens, q.tokens)
+
+    # budget exact: never exceeds the cap, and the frame is always there
+    assert 2 <= p.length <= budget
+    assert p.tokens[0] == pl.BOS and p.tokens[-1] == pl.GEN
+
+    # accounting sums exactly — nothing partially counted
+    assert p.packed_bytes + p.dropped_bytes == sum(len(t) for t in texts)
+    assert p.n_docs + p.n_docs_dropped == len(texts)
+    assert p.n_docs + p.n_docs_dropped == n_docs
+
+    # whole-doc: the payload between BOS and GEN is exactly the packed
+    # docs' bytes joined by SEP, in rank order — no split, no reorder
+    body = p.tokens[1:-1]
+    expect = []
+    used, kept = 1, []
+    for t in texts:
+        if used + len(t) + 1 + 1 <= spec.context_budget:
+            kept.append(t)
+            used += len(t) + 1
+    for t in kept:
+        expect.extend(int(b) for b in t)
+        expect.append(pl.SEP)
+    np.testing.assert_array_equal(body, np.asarray(expect, np.int32))
+    assert p.n_docs == len(kept)
+    assert p.packed_bytes == sum(len(t) for t in kept)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), batch=st.integers(1, 6),
+       budget=st.integers(4, 80))
+def test_pack_batch_grid_properties(seed, batch, budget):
+    rng = np.random.default_rng(seed)
+    spec = pl.PromptSpec(context_budget=budget)
+    prompts = [pl.pack_docs(_texts(rng, int(rng.integers(0, 5)), 30), spec)
+               for _ in range(batch)]
+    grid, lengths = pl.pack_batch(prompts, spec)
+
+    assert grid.shape == (batch, budget)       # static S per batch size
+    assert grid.dtype == np.int32 and lengths.dtype == np.int32
+    for i, p in enumerate(prompts):
+        assert lengths[i] == p.length
+        np.testing.assert_array_equal(grid[i, :p.length], p.tokens)
+        assert (grid[i, p.length:] == pl.PAD).all()
+
+
+def test_round_trip_bytes():
+    """decode_tokens(pack(texts)) recovers the packed payload bytes."""
+    spec = pl.PromptSpec(context_budget=64)
+    texts = [b"hello world", b"second doc", b"x" * 200, b"tail"]
+    p = pl.pack_docs(texts, spec)
+    assert p.n_docs_dropped == 1 and p.dropped_bytes == 200
+    assert pl.decode_tokens(p.tokens) == b"hello worldsecond doctail"
+
+
+def test_long_doc_does_not_shadow_short_one():
+    """An over-budget rank-2 doc is skipped; rank-3 still packs."""
+    spec = pl.PromptSpec(context_budget=16)
+    p = pl.pack_docs([b"aaaa", b"b" * 50, b"cc"], spec)
+    assert p.n_docs == 2 and p.n_docs_dropped == 1
+    assert pl.decode_tokens(p.tokens) == b"aaaacc"
+
+
+def test_min_budget_degenerate():
+    """budget=2 packs nothing but stays well-formed: [BOS][GEN]."""
+    p = pl.pack_docs([b"a"], pl.PromptSpec(context_budget=2))
+    assert p.length == 2 and p.n_docs == 0 and p.n_docs_dropped == 1
+    np.testing.assert_array_equal(p.tokens, [pl.BOS, pl.GEN])

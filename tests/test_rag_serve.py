@@ -1,0 +1,197 @@
+"""Generation equivalence across serve engines (the closed RAG loop).
+
+The contract (ISSUE 10): attaching a `Generator` to a serve loop adds
+tokens to its responses but changes NOTHING else — retrieval payloads,
+epochs, retries and batching are byte-identical to a generator-free run —
+and the tokens themselves are bit-identical across the sync, pipelined
+(any `gen_coalesce`) and fleet engines over the same schedule, mutations
+and faults included.  The pipelined engine defers and COALESCES
+generation micro-batches, so these tests are what pins "moving and
+merging generation work never changes a token".
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.data import corpus as corpus_lib
+from repro.fleet import FaultPlan, FleetServeLoop, ReplicaGroup
+from repro.rag import Generator
+from repro.serve import PIRServeLoop, PipelinedServeLoop
+from repro.update import LiveIndex, journal as journal_lib
+
+N_DOCS = 120
+SYNC_LAG = 2
+
+
+class FakeClock:
+    """Monotone virtual clock advancing a fixed step per reading."""
+
+    def __init__(self, step: float = 1e-4):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+_BASE: dict = {}
+
+
+def _get_base():
+    """Corpus + live index + generators, built once per process.
+
+    Not a fixture: the hypothesis property below runs under the
+    `_hypothesis_compat` shim, whose `given` wrapper presents a zero-arg
+    signature.  Engine runs get deepcopies of the live index; the
+    generators are shared on purpose (params are read-only and sharing
+    reuses the per-batch-size jit caches).
+    """
+    if not _BASE:
+        corp = corpus_lib.make_corpus(7, N_DOCS, emb_dim=16, n_topics=5)
+        live = LiveIndex.build(corp.texts, corp.embeddings, n_clusters=5,
+                               impl="xla", kmeans_iters=5)
+        _BASE["corp"], _BASE["live"] = corp, live
+        # sampled, not greedy: greedy tokens ignore rids, which would mask
+        # a coalescing bug that mis-slices the (B_total, N) grid back to
+        # its groups — sampling keys off (seed, rid, step), so any row
+        # landing on the wrong request changes its tokens
+        _BASE["gen"] = Generator.tiny(seed=3, context_budget=64,
+                                      max_new_tokens=4, temperature=0.8)
+        _BASE["greedy"] = Generator.tiny(seed=3, context_budget=64,
+                                         max_new_tokens=4)
+    return _BASE["corp"], _BASE["live"], _BASE["gen"], _BASE["greedy"]
+
+
+def _sig_retrieval(loop):
+    """Everything retrieval promised pre-RAG — must never change."""
+    return [(r.rid, r.epoch, r.retries, r.batch_size, r.failed,
+             tuple((d, t) for d, _, t in r.top)) for r in loop.responses]
+
+
+def _tokens(loop):
+    return {r.rid: r.tokens for r in loop.responses}
+
+
+def _drive(loop, corp, *, n_ops: int = 36, seed: int = 0):
+    """Seeded submit/mutate/tick interleaving, identical across engines."""
+    rng = np.random.default_rng(seed)
+    for i in range(n_ops):
+        loop.submit(i, corp.embeddings[int(rng.integers(N_DOCS))], top_k=3)
+        roll = int(rng.integers(10))
+        if roll < 2:
+            loop.submit_mutation(journal_lib.replace(
+                i % N_DOCS, f"mut {i}".encode(),
+                corp.embeddings[(i + 1) % N_DOCS]))
+        if roll >= 7:
+            loop.tick()
+    loop.drain()
+
+
+def _kw():
+    return dict(max_batch=4, deadline_ms=1e9, clock=FakeClock(), seed=0)
+
+
+def test_tokens_identical_three_engines_under_mutations():
+    """sync == pipelined (coalesced or not) == fleet, token for token."""
+    corp, base, gen, _ = _get_base()
+    sync = PIRServeLoop(copy.deepcopy(base), generator=gen, **_kw())
+    _drive(sync, corp)
+    ref_tok, ref_sig = _tokens(sync), _sig_retrieval(sync)
+    assert all(t is not None and len(t) == 4 for t in ref_tok.values())
+    assert all(r.rag is not None for r in sync.responses)
+
+    for gc in (1, 3):
+        pipe = PipelinedServeLoop(copy.deepcopy(base), generator=gen,
+                                  depth=2, gen_coalesce=gc, **_kw())
+        _drive(pipe, corp)
+        assert _tokens(pipe) == ref_tok, f"gen_coalesce={gc}"
+        assert _sig_retrieval(pipe) == ref_sig, f"gen_coalesce={gc}"
+        assert not pipe._gen_pending
+
+    group = ReplicaGroup.from_live(copy.deepcopy(base), n_replicas=2,
+                                   n_shards=4, sync_lag=SYNC_LAG)
+    fleet = FleetServeLoop(group, generator=gen, depth=2, gen_coalesce=2,
+                           **_kw())
+    _drive(fleet, corp)
+    assert _tokens(fleet) == ref_tok
+    assert _sig_retrieval(fleet) == ref_sig
+    assert group.failovers == 0
+
+
+def test_retrieval_byte_identical_to_generator_free_run():
+    """The generation stage is purely additive: a generator-free run of the
+    SAME schedule produces byte-identical retrieval responses (and no
+    tokens) — attaching a generator must not perturb batching, epochs,
+    retries or payloads."""
+    corp, base, gen, _ = _get_base()
+    plain = PIRServeLoop(copy.deepcopy(base), **_kw())
+    _drive(plain, corp)
+    ragged = PIRServeLoop(copy.deepcopy(base), generator=gen, **_kw())
+    _drive(ragged, corp)
+    assert _sig_retrieval(plain) == _sig_retrieval(ragged)
+    assert all(r.tokens is None and r.rag is None for r in plain.responses)
+    assert all(r.tokens is not None for r in ragged.responses)
+
+
+def test_tokens_are_pure_function_of_retrieval_under_faults():
+    """Faults may move WHICH docs a response carries (failover staleness,
+    retries) but never how they generate: every served response's tokens
+    must equal a from-scratch `Generator.generate` of its own payload.
+    Batch invariance makes the B=1 recompute a valid oracle for tokens
+    produced inside arbitrary coalesced micro-batches."""
+    corp, base, _, greedy = _get_base()
+    plan = FaultPlan.single_shard_loss(at_tick=3, device=0, down_ticks=6)
+    group = ReplicaGroup.from_live(copy.deepcopy(base), n_replicas=2,
+                                   n_shards=4, sync_lag=SYNC_LAG)
+    fleet = FleetServeLoop(group, generator=greedy, depth=2, gen_coalesce=3,
+                           faults=plan.compile(), **_kw())
+    _drive(fleet, corp, n_ops=40)
+    assert group.failovers == 1                       # the fault really hit
+    checked = 0
+    for r in fleet.responses:
+        if r.failed or r.tokens is None:
+            continue
+        want = greedy.generate([list(r.top)], [r.rid])[0]
+        assert tuple(int(t) for t in want) == r.tokens, r.rid
+        checked += 1
+    assert checked >= 30
+
+
+def test_coalesce_bound_flushes_on_idle_and_drain():
+    """A partial micro-batch (fewer than gen_coalesce groups parked) must
+    not strand responses: idle ticks and drain flush everything."""
+    corp, base, _, greedy = _get_base()
+    loop = PipelinedServeLoop(copy.deepcopy(base), generator=greedy,
+                              depth=1, gen_coalesce=8, **_kw())
+    for rid in range(8):                       # 2 batches — under the bound
+        loop.submit(rid, corp.embeddings[rid], top_k=3)
+        loop.tick()
+    loop.drain()
+    assert len(loop.responses) == 8
+    assert all(r.tokens is not None for r in loop.responses)
+    assert not loop._gen_pending
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**9))
+def test_property_random_interleavings_with_generation(seed):
+    """Random schedules × random depth × random gen_coalesce: tokens and
+    retrieval signatures identical between the sync and pipelined loops."""
+    corp, base, gen, _ = _get_base()
+    rng = np.random.default_rng(seed)
+    n_ops = int(rng.integers(20, 50))
+    depth = int(rng.integers(1, 4))
+    gen_coalesce = int(rng.integers(1, 6))
+    sync = PIRServeLoop(copy.deepcopy(base), generator=gen, **_kw())
+    _drive(sync, corp, n_ops=n_ops, seed=seed)
+    pipe = PipelinedServeLoop(copy.deepcopy(base), generator=gen,
+                              depth=depth, gen_coalesce=gen_coalesce,
+                              **_kw())
+    _drive(pipe, corp, n_ops=n_ops, seed=seed)
+    assert _tokens(sync) == _tokens(pipe)
+    assert _sig_retrieval(sync) == _sig_retrieval(pipe)

@@ -218,6 +218,69 @@ def test_open_loop_mixed_lookup_traffic_per_kind_slo():
     assert [r.kind for r in res.records] == [r.kind for r in res2.records]
 
 
+def test_generate_ms_component_with_generator_loop():
+    """A generator-equipped loop stamps `generate_ms` on every served
+    record (tokenize + prefill + decode from Response.rag) and the SLO
+    summary grows exactly one new component for it."""
+    from repro.rag import Generator
+
+    corp, live0 = _get_base()
+    gen = Generator.tiny(seed=2, context_budget=64, max_new_tokens=4)
+    loop = PipelinedServeLoop(copy.deepcopy(live0), max_batch=8,
+                              deadline_ms=5.0, clock=FakeClock(), depth=2,
+                              gen_coalesce=2, generator=gen)
+    spec = TrafficSpec(qps=60.0, duration_s=0.8, n_sessions=3,
+                       probe_mix=((1, 1.0),), seed=9)
+    res = OpenLoopDriver(loop, corp.embeddings, spec).run()
+    served = [r for r in res.records if r.outcome == SERVED]
+    assert served and all(r.generate_ms > 0 for r in served)
+    s = res.summary(deadline_ms=1000.0)
+    assert s["components"]["generate_ms"]["mean"] > 0
+    assert s["components"]["generate_ms"]["p99"] < float("inf")
+    # end-to-end latency covers generation: t_done is the generation
+    # completion time, so p50 must not undercut the generate component
+    assert s["p50_ms"] > 0
+
+
+def test_generate_ms_percentiles_propagate_inf():
+    """An unserved (shed/failed) generating stream: generate_ms folds with
+    the same inf-propagating rank rule as every latency percentile."""
+    recs = [RequestRecord(rid=i, session=0, t_arrival=0.0, t_done=1e-3,
+                          generate_ms=5.0) for i in range(98)]
+    recs += [RequestRecord(rid=98, session=0, t_arrival=0.0, outcome=SHED,
+                           generate_ms=float("inf")),
+             RequestRecord(rid=99, session=0, t_arrival=0.0, t_done=1e-3,
+                           generate_ms=float("inf"))]
+    from repro.traffic import summarize
+    s = summarize(recs, wall_s=1.0, deadline_ms=10.0)
+    comp = s["components"]["generate_ms"]
+    # p99 reaches into the served-inf record; the mean is inf-poisoned too
+    assert comp["p99"] == float("inf") and comp["mean"] == float("inf")
+    assert s["attainment"] < 1.0                 # the shed counts as a miss
+
+
+def test_query_only_summary_byte_identical_regression():
+    """Stream-preservation regression: a retrieval-only run's summary is
+    byte-for-byte what it was before the generation stage existed — same
+    component set (no `generate_ms` key), deterministic under FakeClock."""
+    corp, live0 = _get_base()
+    spec = TrafficSpec(qps=50.0, duration_s=0.8, n_sessions=3,
+                       probe_mix=((1, 0.7), (2, 0.3)), seed=13)
+
+    def run_once():
+        loop = PIRServeLoop(copy.deepcopy(live0), max_batch=4,
+                            deadline_ms=5.0, clock=FakeClock())
+        res = OpenLoopDriver(loop, corp.embeddings, spec).run()
+        return res.summary(deadline_ms=1000.0)
+
+    import json
+    a, b = run_once(), run_once()
+    assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+    assert "generate_ms" not in a["components"]
+    assert list(a["components"]) == ["queue_ms", "encode_ms", "gemm_ms",
+                                     "decode_ms", "hint_sync_ms"]
+
+
 def test_open_loop_overload_sheds_and_bounds_queue():
     """Offered load far above the virtual service rate: the controller
     sheds the excess, every offered request is accounted exactly once, and
